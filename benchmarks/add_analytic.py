@@ -1,0 +1,61 @@
+"""Post-process existing dry-run JSONs: add/refresh the analytic roofline
+(keeps the compiled HLO numbers as roofline_hlo) without recompiling.
+
+    PYTHONPATH=src python -m benchmarks.add_analytic [--knobs k=v ...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, "..", "src"))
+
+from repro.configs import base as cfgbase          # noqa: E402
+from repro.roofline import model as rmodel         # noqa: E402
+
+DRYRUN_DIR = os.path.join(HERE, "results", "dryrun")
+
+
+def refresh(path: str, knob_overrides: dict) -> dict:
+    with open(path) as f:
+        r = json.load(f)
+    arch = cfgbase.get_arch(r["arch"])
+    shape = cfgbase.SHAPES[r["shape"]]
+    multi = path.endswith("__multi.json")
+    mf = rmodel.MeshFactors.multi() if multi else rmodel.MeshFactors.single()
+    kn = rmodel.PerfKnobs(
+        n_microbatches=r.get("n_microbatches", 1),
+        remat=r.get("remat", "full"),
+        serve_dtype_bytes={"f32": 4, "bf16": 2, "int8": 1}[
+            r.get("serve_dtype", "f32")],
+        **knob_overrides)
+    if "roofline_hlo" not in r and "roofline" in r:
+        r["roofline_hlo"] = r["roofline"]
+    r["roofline"] = rmodel.cell(arch, shape, mf, kn).to_dict()
+    with open(path, "w") as f:
+        json.dump(r, f, indent=1)
+    return r
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--knobs", nargs="*", default=[])
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.knobs:
+        k, v = kv.split("=")
+        overrides[k] = type(getattr(rmodel.PerfKnobs(), k))(eval(v))
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = refresh(path, overrides)
+        ro = r["roofline"]
+        print(f"{r['cell']}: {ro['bottleneck']}  "
+              f"t_bound={max(ro['t_compute_s'], ro['t_memory_s'], ro['t_collective_s'])*1e3:9.2f} ms  "
+              f"mfu_bound={ro['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

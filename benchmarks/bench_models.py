@@ -1,0 +1,44 @@
+"""LM zoo micro-benchmarks (smoke configs): train-step and decode-step wall
+time on the host CPU — a regression harness for the model substrate, not a
+TPU performance claim (those are the §Roofline numbers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models import zoo
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+from benchmarks.timing import Row, bench
+
+B, S = 4, 64
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    archs = ARCH_IDS if full else ["gemma_2b", "mamba2_2p7b",
+                                   "moonshot_v1_16b_a3b", "zamba2_2p7b"]
+    for arch_id in archs:
+        cfg = get_arch(arch_id).smoke()
+        model = zoo.build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt_mod.init_opt_state(params)
+        batch = zoo.batch_inputs(cfg, B, S, key=jax.random.PRNGKey(1))
+        tc = train_loop.TrainConfig(opt=opt_mod.OptConfig(total_steps=100))
+        import functools
+        step = jax.jit(functools.partial(train_loop.train_step, model, tc))
+        t = bench(lambda p, o, b: step(p, o, b)[2]["loss"],
+                  params, opt_state, batch, iters=3)
+        rows.append(Row(f"model/{cfg.name}/train_step", t,
+                        f"{B * S / t:.0f} tok/s (smoke, CPU)"))
+
+        cache = model.init_cache(B, S)
+        tok = zoo.decode_inputs(cfg, B)
+        tok.pop("labels")
+        dstep = jax.jit(model.decode_step)
+        t = bench(lambda p, c, b: dstep(p, c, b, jnp.int32(1))[0],
+                  params, cache, tok, iters=3)
+        rows.append(Row(f"model/{cfg.name}/decode_step", t,
+                        f"{B / t:.0f} tok/s (smoke, CPU)"))
+    return rows

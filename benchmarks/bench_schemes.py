@@ -1,0 +1,73 @@
+"""Paper Fig. 7 + Table 2 — sequential blocking-free scheme comparison.
+
+Problem sizes sweep L1 → memory; every vectorization scheme runs T steps of
+the 1D3P/1D5P stencils; we report GFlop/s and the speedup table normalized
+to `multiload` exactly like Table 2.  (Host CPU via XLA; the relative
+ordering of schemes + the k-step flops/byte gain are the reproducible
+claims — see EXPERIMENTS.md §Perf for the honest-reporting discussion.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stencils, vectorize
+from repro.core.unroll_jam import multistep_fused
+from benchmarks.timing import Row, bench, gflops
+
+# elements (f32): 16 KB (L1) → 32 MB (memory)
+SIZES = {
+    "L1": 4_096,
+    "L2": 65_536,
+    "L3": 1_048_576,
+    "Memory": 8_388_608,
+}
+STEPS = 20
+VL, M = 8, 8
+
+
+def _steps_fn(scheme: str, spec, steps: int):
+    if scheme == "ours2":
+        # k=2 unroll-and-jam, XLA rendering: two steps fused in one loop
+        # body (XLA fuses the roll chains into one memory pass).  The
+        # layout-resident double step was tried and REFUTED on the CPU
+        # backend — XLA materializes chained extend/slice patterns (2.4×
+        # slower); on TPU the jam lives in the Pallas pipeline instead.
+        # (EXPERIMENTS.md §Perf D, lesson entry.)
+        def f(x):
+            def body(_, v):
+                return multistep_fused(spec, v, 2)
+            return jax.lax.fori_loop(0, steps // 2, body, x)
+        return jax.jit(f)
+    return jax.jit(lambda x: vectorize.run_scheme(scheme, spec, x, steps,
+                                                  VL, M))
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    table2 = {}
+    for name in (["1d3p", "1d5p"] if full else ["1d3p"]):
+        spec = stencils.make(name)
+        for level, n in SIZES.items():
+            x = jnp.asarray(np.random.default_rng(0)
+                            .standard_normal(n), dtype=jnp.float32)
+            flops = stencils.model_flops(spec, (n,), STEPS)
+            base = None
+            for scheme in ["multiload", "reorg", "dlt", "transpose",
+                           "ours2"]:
+                fn = _steps_fn(scheme, spec, STEPS)
+                t = bench(fn, x)
+                gf = gflops(flops, t)
+                if scheme == "multiload":
+                    base = t
+                speed = base / t
+                rows.append(Row(f"fig7/{name}/{level}/{scheme}", t,
+                                f"{gf:.2f} GFlop/s; {speed:.2f}x vs multiload"))
+                table2.setdefault(scheme, {})[level] = speed
+    # Table 2 summary rows (mean over levels)
+    for scheme, d in table2.items():
+        mean = float(np.mean(list(d.values())))
+        rows.append(Row(f"table2/mean/{scheme}", 0.0,
+                        f"{mean:.2f}x vs multiload"))
+    return rows

@@ -1,0 +1,108 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSONs in benchmarks/results/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN_DIR = os.path.join(HERE, "results", "dryrun")
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | useful/HLO flops | MFU bound |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {ro['t_compute_s']*1e3:9.3f} ms "
+            f"| {ro['t_memory_s']*1e3:9.3f} ms "
+            f"| {ro['t_collective_s']*1e3:9.3f} ms "
+            f"| {ro['bottleneck']} "
+            f"| {ro['useful_flops_fraction']:.3f} "
+            f"| {ro['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def collective_summary(rows: list[dict]) -> str:
+    lines = ["| arch | shape | AG | AR | RS | A2A | CP | coll GB/dev |",
+             "|" + "---|" * 7]
+    for r in rows:
+        c = r.get("collectives", {})
+        def n(k):
+            return c.get(k, {}).get("count", 0)
+        gb = r["roofline"]["coll_bytes_per_device"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {n('all-gather')} "
+            f"| {n('all-reduce')} | {n('reduce-scatter')} "
+            f"| {n('all-to-all')} | {n('collective-permute')} "
+            f"| {gb:.3f} |")
+    return "\n".join(lines)
+
+
+def load_opt() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__opt*.json"))):
+        with open(path) as f:
+            rows.append((os.path.basename(path), json.load(f)))
+    return rows
+
+
+def opt_table() -> str:
+    lines = ["| optimized cell | policy | bottleneck | MFU bound | baseline |",
+             "|" + "---|" * 5]
+    for fname, r in load_opt():
+        base_name = fname.split("__opt")[0] + ".json"
+        base_path = os.path.join(DRYRUN_DIR, base_name)
+        base = "?"
+        if os.path.exists(base_path):
+            with open(base_path) as f:
+                base = f"{json.load(f)['roofline']['mfu_bound']:.3f}"
+        ro = r["roofline"]
+        policy = fname.split("__opt_")[1].replace(".json", "")
+        lines.append(f"| {r['arch']} × {r['shape']}"
+                     f"{' ×512' if '__multi' in fname else ''} | {policy} "
+                     f"| {ro['bottleneck']} | **{ro['mfu_bound']:.3f}** "
+                     f"| {base} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--collectives", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="baseline-vs-optimized table (§Perf artifacts)")
+    args = ap.parse_args()
+    if args.opt:
+        print("# Optimized cells (EXPERIMENTS.md §Perf)\n")
+        print(opt_table())
+        return
+    rows = load(args.mesh)
+    print(f"# Roofline — {args.mesh}-pod "
+          f"({'512' if args.mesh == 'multi' else '256'} chips), "
+          f"{len(rows)} cells\n")
+    print(fmt_table(rows))
+    if args.collectives:
+        print("\n## Collective census\n")
+        print(collective_summary(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving example: continuous batching over a small LM.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Submits more requests than decode slots; the engine prefills prompts into
+free slots, decodes all active slots in one batched serve_step, and
+backfills as sequences finish — the decode program never recompiles."""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import zoo
+from repro.serve.engine import ContinuousBatcher, Request
+
+
+def main():
+    cfg = get_arch("gemma-2b").smoke()
+    model = zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousBatcher(model, params, n_slots=4, max_seq=128,
+                            temperature=0.7)
+
+    rng = np.random.default_rng(0)
+    n_req = 10
+    t0 = time.perf_counter()
+    for rid in range(n_req):
+        prompt = rng.integers(0, cfg.vocab, rng.integers(4, 12),
+                              dtype=np.int32)
+        eng.submit(Request(rid=rid, prompt=prompt, max_new=16))
+    done = eng.run(max_steps=200)
+    dt = time.perf_counter() - t0
+
+    toks = sum(len(r.out) for r in done)
+    print(f"served {len(done)}/{n_req} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s incl. compile, CPU smoke)")
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
+        print(f"  req {r.rid}: {len(r.prompt)} prompt → {r.out}")
+    assert len(done) == n_req
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

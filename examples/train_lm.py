@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch gemma-2b]
+
+Builds a ~100M-param member of the chosen architecture's family (scaled
+config, same block structure), trains on the synthetic pipeline with
+checkpointing enabled, and asserts the loss dropped.  On this CPU host a
+300-step run takes a few minutes; on TPU the same driver shards over the
+production mesh (launch/train.py)."""
+import argparse
+import dataclasses
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_arch
+from repro.models import zoo
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+
+
+def scale_to_100m(cfg):
+    """Same family, ~100M params."""
+    return dataclasses.replace(
+        cfg.smoke(),
+        name=cfg.name + "-100m",
+        n_layers=max(4, min(8, cfg.n_layers)),
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=max(1, 8 // max(1, cfg.n_heads
+                                   // max(cfg.n_kv_heads, 1))),
+        head_dim=64,
+        d_ff=2048 if cfg.d_ff else 0,
+        vocab=32_000,
+        moe_d_ff=512 if cfg.n_experts else 0,
+        n_experts=min(cfg.n_experts, 8) or 0,
+        ssm_state=64 if cfg.ssm_state else 0,
+        ssm_head_dim=64,
+        ssm_chunk=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = scale_to_100m(get_arch(args.arch))
+    model = zoo.build(cfg)
+    n = cfg.param_count()
+    print(f"training {cfg.name}: ~{n/1e6:.0f}M params, "
+          f"{args.steps} steps @ batch {args.batch} × seq {args.seq}")
+
+    tc = train_loop.TrainConfig(opt=opt_mod.OptConfig(
+        peak_lr=1e-3, warmup_steps=30, total_steps=args.steps))
+    with tempfile.TemporaryDirectory() as ckpt:
+        _, _, hist = train_loop.train(
+            model, tc, steps=args.steps, batch=args.batch, seq=args.seq,
+            log_every=20, checkpoint_dir=ckpt, ckpt_every=100)
+    first, last = hist[0]["nll"], hist[-1]["nll"]
+    print(f"nll: {first:.3f} → {last:.3f}")
+    assert last < first - 0.3, "loss did not drop"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

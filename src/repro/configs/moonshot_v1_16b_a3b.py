@@ -1,0 +1,24 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B) — MoE, 64 experts top-6.
+
+[hf:moonshotai/Moonlight-16B-A3B]  48L d_model=2048 16H (GQA kv=16)
+expert d_ff=1408 vocab=163840.  DeepSeek-V3-style fine-grained experts."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab=163_840,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=50_000.0,
+    n_experts=64,
+    top_k=6,
+    moe_d_ff=1408,
+    n_shared_experts=2,
+)

@@ -1,0 +1,25 @@
+"""qwen2-vl-2b — VLM backbone with M-RoPE (multimodal rotary).
+
+[arXiv:2409.12191; hf]  28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936.  The vision frontend is a STUB: input_specs() provides
+precomputed patch embeddings + 3-D (t,h,w) position ids; M-RoPE splits the
+head_dim into (16, 24, 24) rotary sections."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151_936,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    tie_embeddings=True,
+    frontend="patches",
+)

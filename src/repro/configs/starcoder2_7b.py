@@ -1,0 +1,20 @@
+"""starcoder2-7b — dense, GQA kv=4, RoPE, GELU MLP.
+
+[arXiv:2402.19173; hf]  32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152, LayerNorm."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab=49_152,
+    act="gelu",
+    norm="layernorm",
+    rope_theta=100_000.0,
+)

@@ -1,0 +1,100 @@
+"""Public stencil API — the paper's technique as a composable feature.
+
+    from repro.core.api import StencilProblem
+    p = StencilProblem("2d5p", shape=(512, 512))
+    y = p.run(x, steps=100, plan="auto")
+
+Plans compose the paper's three pieces:
+  scheme      — vectorization layout per step: multiload | reorg | dlt |
+                transpose (paper's) | fused
+  k           — time unroll-and-jam factor (in-register / in-VMEM multistep)
+  tiling      — none | tessellate (H=k·…, tile=W)
+  backend     — jnp | pallas (kernels/) | distributed (shard_map halo)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stencils, vectorize, unroll_jam, tessellate
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilPlan:
+    scheme: str = "transpose"
+    k: int = 2
+    tiling: str = "none"           # none | tessellate
+    tile: tuple[int, ...] | None = None
+    height: int | None = None      # tessellation height (defaults to k)
+    vl: int = 8
+    m: int | None = None
+    backend: str = "jnp"           # jnp | pallas | distributed
+
+
+class StencilProblem:
+    def __init__(self, name: str, shape: Sequence[int], dtype=jnp.float32):
+        self.spec = stencils.make(name)
+        assert len(shape) == self.spec.ndim, (shape, self.spec.ndim)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0) -> jax.Array:
+        key = jax.random.PRNGKey(seed)
+        return jax.random.normal(key, self.shape, self.dtype)
+
+    def reference(self, x: jax.Array, steps: int, bc: str = "periodic"):
+        return stencils.apply_steps(self.spec, x, steps, bc)
+
+    # ------------------------------------------------------------------
+    def run(self, x: jax.Array, steps: int,
+            plan: StencilPlan | str = "auto") -> jax.Array:
+        plan = self.default_plan() if plan == "auto" else plan
+        assert isinstance(plan, StencilPlan)
+        if plan.backend == "pallas":
+            from repro.kernels import ops
+            return ops.stencil_run(self.spec, x, steps, k=plan.k)
+        if plan.backend == "distributed":
+            from repro.distributed import multistep as dms
+            return dms.distributed_run(self.spec, x, steps, k=plan.k)
+        if plan.tiling == "tessellate":
+            h = plan.height or plan.k
+            tile = plan.tile or self._default_tile(h)
+            return tessellate.tessellate_run(
+                self.spec, x, steps, tile, h, inner=plan.scheme
+                if plan.scheme in ("fused", "transpose", "dlt") else "fused",
+                vl=plan.vl)
+        if plan.k > 1:
+            assert steps % plan.k == 0
+            out = x
+            for _ in range(steps // plan.k):
+                out = unroll_jam.multistep_fused(self.spec, out, plan.k)
+            return out
+        return vectorize.run_scheme(plan.scheme, self.spec, x, steps,
+                                    plan.vl, plan.m)
+
+    def default_plan(self) -> StencilPlan:
+        return StencilPlan(scheme="transpose", k=2, vl=8)
+
+    def _default_tile(self, h: int) -> tuple[int, ...]:
+        r = self.spec.r
+        w = max(4 * h * r, 8)
+        tile = []
+        for n in self.shape:
+            t = min(w, n)
+            while n % t:
+                t -= 1
+            tile.append(max(t, 2 * h * r))
+        return tuple(tile)
+
+    # ------------------------------------------------------------------
+    def model_flops(self, steps: int) -> int:
+        return stencils.model_flops(self.spec, self.shape, steps)
+
+    def model_bytes(self, steps: int, k: int = 1) -> int:
+        return stencils.model_bytes(
+            self.spec, self.shape, steps,
+            itemsize=jnp.dtype(self.dtype).itemsize, k=k)

@@ -1,0 +1,103 @@
+"""The paper's local transpose layout (§3.2) as explicit array transforms.
+
+A 1-D array of length N is chunked into blocks of ``vl*m`` contiguous
+elements.  Each block is viewed as a (vl, m) matrix (row-major: element
+(j, s) = block[j*m + s]) and transposed to (m, vl) — the "vector set" (VS)
+of m vectors, each vl lanes wide:
+
+    VS[s, j]  =  x[b*vl*m + j*m + s]          (block b)
+
+In this view a spatial +1 shift maps vector s → vector s+1 (*register
+renaming*, zero data movement), except the last vector (s = m-1), whose
+right-dependent vector is the lane-rolled vector 0 with a one-lane carry from
+the next block — the paper's Assemble: one blend + one permute, i.e. exactly
+2 data-reorganization ops per vector set per side (Fig. 3).
+
+On TPU we put ``vl = 128`` lanes on the minor axis and the m vectors across
+sublanes/rows, so the +1 shift is a cheap second-minor roll; see
+kernels/stencil_kernels.py.
+
+``m = N/vl`` with a single block recovers DLT (global dimension-lifting
+transpose); ``m = 1`` degenerates to the natural layout.  The paper uses
+``m = vl`` (square blocks, in-register transposable); we keep m free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def to_transpose_layout(x: jax.Array, vl: int, m: int | None = None) -> jax.Array:
+    """(..., N) → (..., nblocks, m, vl): per-block local transpose."""
+    m = vl if m is None else m
+    n = x.shape[-1]
+    assert n % (vl * m) == 0, (n, vl, m)
+    b = x.reshape(x.shape[:-1] + (n // (vl * m), vl, m))
+    return jnp.swapaxes(b, -1, -2)
+
+
+def from_transpose_layout(t: jax.Array, vl: int, m: int | None = None) -> jax.Array:
+    """Inverse of :func:`to_transpose_layout`."""
+    m = vl if m is None else m
+    assert t.shape[-2] == m and t.shape[-1] == vl, (t.shape, vl, m)
+    b = jnp.swapaxes(t, -1, -2)
+    n = t.shape[-3] * vl * m
+    return b.reshape(t.shape[:-3] + (n,))
+
+
+def dlt_layout(x: jax.Array, vl: int) -> jax.Array:
+    """Henretty's global dimension-lifting transpose: (N,) → (N/vl, vl).
+
+    Row i = (x[i], x[i + N/vl], ..., x[i + (vl-1)*N/vl]).  Identical to the
+    local transpose with a single block of m = N/vl."""
+    n = x.shape[-1]
+    assert n % vl == 0
+    t = to_transpose_layout(x, vl, n // vl)
+    return t.reshape(x.shape[:-1] + (n // vl, vl))
+
+
+def from_dlt_layout(t: jax.Array, vl: int) -> jax.Array:
+    assert t.shape[-1] == vl
+    m = t.shape[-2]
+    return from_transpose_layout(t.reshape(t.shape[:-2] + (1, m, vl)), vl, m)
+
+
+def transpose_index_map(n: int, vl: int, m: int) -> np.ndarray:
+    """perm such that x[perm] == flattened transpose layout (for testing)."""
+    idx = np.arange(n).reshape(n // (vl * m), vl, m)
+    return np.ascontiguousarray(np.swapaxes(idx, -1, -2)).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Assembled shift (paper Fig. 3): spatial shift entirely inside the layout.
+# ---------------------------------------------------------------------------
+
+def shift_in_layout(t: jax.Array, shift: int) -> jax.Array:
+    """Spatially shift by ``shift`` *in the transpose layout*, periodic over
+    the full array.  t: (nblocks, m, vl).
+
+    +1 is: vector s ← vector s+1 (roll on the m axis, free renaming in the
+    register implementation) and vector m-1 ← lane-rolled vector 0 with block
+    carry (blend + permute, the 2 reorganization ops of the paper)."""
+    if shift == 0:
+        return t
+    sign = 1 if shift > 0 else -1
+    out = t
+    for _ in range(abs(shift)):
+        out = _shift1(out, sign)
+    return out
+
+
+def _shift1(t: jax.Array, sign: int) -> jax.Array:
+    nb, m, vl = t.shape
+    if sign > 0:
+        rolled = jnp.roll(t, -1, axis=1)               # vector s ← s+1
+        row0 = t[:, 0, :]                              # (nb, vl)
+        carry = jnp.roll(row0.reshape(-1), -1).reshape(nb, vl)  # lane j ← j+1
+        return rolled.at[:, m - 1, :].set(carry)
+    else:
+        rolled = jnp.roll(t, 1, axis=1)                # vector s ← s-1
+        rowl = t[:, m - 1, :]
+        carry = jnp.roll(rowl.reshape(-1), 1).reshape(nb, vl)   # lane j ← j-1
+        return rolled.at[:, 0, :].set(carry)

@@ -1,0 +1,221 @@
+"""Stencil pattern definitions and pure-jnp oracles.
+
+The paper evaluates six stencils (Table 1): 1D3P, 1D5P (star, r=1/2),
+2D5P (star r=1), 2D9P (box r=1), 3D7P (star r=1), 3D27P (box r=1).
+A symmetric stencil of order ``r`` in one dimension reads ``2r+1`` points;
+a d-dimensional *star* stencil reads ``2*d*r + 1`` points, a *box* stencil
+reads ``(2r+1)**d`` points.
+
+``apply_once`` is the semantic oracle used by every other layer (the five
+vectorization schemes, the Pallas kernels, the tessellate tiler and the
+distributed halo runtime are all tested against it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Offset = tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A constant-coefficient symmetric stencil.
+
+    taps: tuple of (offset, coeff) — offset is a d-tuple in [-r, r]^d.
+    """
+
+    name: str
+    ndim: int
+    r: int
+    kind: str  # 'star' | 'box'
+    taps: tuple[tuple[Offset, float], ...]
+
+    @property
+    def npoints(self) -> int:
+        return len(self.taps)
+
+    @property
+    def flops_per_point(self) -> int:
+        # one multiply per tap + (taps-1) adds — the standard stencil count.
+        return 2 * len(self.taps) - 1
+
+    def halo(self) -> int:
+        return self.r
+
+    def coeff_array(self) -> np.ndarray:
+        """Dense (2r+1)^d coefficient cube (zeros where no tap)."""
+        side = 2 * self.r + 1
+        cube = np.zeros((side,) * self.ndim, dtype=np.float64)
+        for off, c in self.taps:
+            idx = tuple(o + self.r for o in off)
+            cube[idx] = c
+        return cube
+
+
+def _star_taps(ndim: int, r: int) -> tuple[tuple[Offset, float], ...]:
+    """Symmetric star stencil; diffusion-like, coefficients sum to 1."""
+    taps: list[tuple[Offset, float]] = []
+    n_off = 2 * ndim * r
+    w_center = 0.5
+    w_other = (1.0 - w_center) / n_off
+    taps.append(((0,) * ndim, w_center))
+    for d in range(ndim):
+        for s in range(1, r + 1):
+            for sign in (-1, 1):
+                off = [0] * ndim
+                off[d] = sign * s
+                # distance-decayed weights keep high-order stencils non-degenerate
+                taps.append((tuple(off), w_other * (1.0 + 0.25 * (r - s)) /
+                             (1.0 + 0.25 * (r - 1) / 2 if r > 1 else 1.0)))
+    # renormalize exactly
+    total = sum(c for _, c in taps)
+    taps = [(o, c / total) for o, c in taps]
+    return tuple(taps)
+
+
+def _box_taps(ndim: int, r: int) -> tuple[tuple[Offset, float], ...]:
+    side = 2 * r + 1
+    taps: list[tuple[Offset, float]] = []
+    for idx in np.ndindex(*((side,) * ndim)):
+        off = tuple(int(i) - r for i in idx)
+        dist = sum(abs(o) for o in off)
+        w = 1.0 / (1.0 + dist)
+        taps.append((off, w))
+    total = sum(c for _, c in taps)
+    return tuple((o, c / total) for o, c in taps)
+
+
+_REGISTRY: dict[str, StencilSpec] = {}
+
+
+def _register(spec: StencilSpec) -> StencilSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+_register(StencilSpec("1d3p", 1, 1, "star", _star_taps(1, 1)))
+_register(StencilSpec("1d5p", 1, 2, "star", _star_taps(1, 2)))
+_register(StencilSpec("2d5p", 2, 1, "star", _star_taps(2, 1)))
+_register(StencilSpec("2d9p", 2, 1, "box", _box_taps(2, 1)))
+_register(StencilSpec("3d7p", 3, 1, "star", _star_taps(3, 1)))
+_register(StencilSpec("3d27p", 3, 1, "box", _box_taps(3, 1)))
+# extras used by examples (heat equation with physical coefficients)
+_register(StencilSpec("heat1d", 1, 1, "star",
+                      (((-1,), 0.25), ((0,), 0.5), ((1,), 0.25))))
+_register(StencilSpec("heat2d", 2, 1, "star",
+                      (((0, 0), 0.5), ((-1, 0), 0.125), ((1, 0), 0.125),
+                       ((0, -1), 0.125), ((0, 1), 0.125))))
+
+
+def make(name: str) -> StencilSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown stencil {name!r}; have {sorted(_REGISTRY)}")
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Oracles
+# ---------------------------------------------------------------------------
+
+BC = "periodic | dirichlet — a str applies to every axis, a tuple per-axis"
+
+
+def _bc_tuple(bc, ndim: int) -> tuple[str, ...]:
+    if isinstance(bc, str):
+        return (bc,) * ndim
+    assert len(bc) == ndim, (bc, ndim)
+    return tuple(bc)
+
+
+def apply_once(spec: StencilSpec, x: jax.Array, bc="periodic") -> jax.Array:
+    """One Jacobi step. bc: 'periodic' (wraparound) or 'dirichlet' (a ring
+    of width r keeps its current value and only feeds neighbors); may be a
+    per-axis tuple (pipelined kernels are dirichlet along the pipeline axis
+    and periodic along resident axes)."""
+    assert x.ndim == spec.ndim, (x.ndim, spec.ndim)
+    bcs = _bc_tuple(bc, spec.ndim)
+    for b in bcs:
+        if b not in ("periodic", "dirichlet"):
+            raise ValueError(f"unknown bc {b!r}")
+    acc = None
+    for off, c in spec.taps:
+        shifted = x
+        for axis, o in enumerate(off):
+            if o != 0:
+                shifted = jnp.roll(shifted, -o, axis=axis)
+        term = shifted * jnp.asarray(c, dtype=x.dtype)
+        acc = term if acc is None else acc + term
+    y = acc
+    if "dirichlet" in bcs:
+        mask = interior_mask(spec, x.shape, bcs)
+        y = jnp.where(mask, y, x)
+    return y
+
+
+def interior_mask(spec: StencilSpec, shape: Sequence[int], bc="dirichlet") -> jax.Array:
+    """True where the cell updates (≥ r from every dirichlet face)."""
+    r = spec.r
+    bcs = _bc_tuple(bc, len(shape))
+    out = None
+    for axis, n in enumerate(shape):
+        if bcs[axis] != "dirichlet":
+            continue
+        idx = jnp.arange(n)
+        m = (idx >= r) & (idx < n - r)
+        bshape = [1] * len(shape)
+        bshape[axis] = n
+        m = m.reshape(bshape)
+        out = m if out is None else out & m
+    if out is None:
+        return jnp.ones(tuple(shape), bool)
+    return jnp.broadcast_to(out, tuple(shape))
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3))
+def apply_steps(spec: StencilSpec, x: jax.Array, steps: int,
+                bc="periodic") -> jax.Array:
+    def body(_, v):
+        return apply_once(spec, v, bc)
+    return jax.lax.fori_loop(0, steps, body, x)
+
+
+def numpy_apply_once(spec: StencilSpec, x: np.ndarray, bc="periodic") -> np.ndarray:
+    """Pure-numpy oracle (independent from jnp for double-checking)."""
+    acc = np.zeros_like(x)
+    for off, c in spec.taps:
+        shifted = x
+        for axis, o in enumerate(off):
+            if o != 0:
+                shifted = np.roll(shifted, -o, axis=axis)
+        acc = acc + shifted * x.dtype.type(c)
+    bcs = _bc_tuple(bc, x.ndim)
+    if "dirichlet" in bcs:
+        mask = np.asarray(interior_mask(spec, x.shape, bcs))
+        acc = np.where(mask, acc, x)
+    return acc
+
+
+def model_flops(spec: StencilSpec, shape: Sequence[int], steps: int) -> int:
+    """Useful (algorithmic) flops: flops_per_point × points × steps."""
+    pts = int(np.prod(shape))
+    return spec.flops_per_point * pts * steps
+
+
+def model_bytes(spec: StencilSpec, shape: Sequence[int], steps: int,
+                itemsize: int = 4, k: int = 1) -> int:
+    """Minimum HBM traffic for a k-step-blocked sweep: one read + one write
+    of the grid per k steps (the paper's flops/byte × k claim)."""
+    pts = int(np.prod(shape))
+    sweeps = -(-steps // k)
+    return 2 * pts * itemsize * sweeps

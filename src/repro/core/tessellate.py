@@ -1,0 +1,164 @@
+"""Tessellate tiling (paper §3.4; tiles of Yuan et al., SC'17).
+
+The (space × time) iteration plane is tessellated by triangles and inverted
+triangles (1-D); in d dimensions there are d+1 stages — stage 1 updates
+shrinking hypercubes ("pyramids"), stage j+1 recombines the sub-tiles split
+from adjacent stage-j tiles along dimension j-1.  Every cell is updated
+exactly H times per round with **zero redundant computation**, and all tiles
+of one stage are data-independent (concurrent across cores in the paper;
+data-parallel lanes / shard_map blocks here).
+
+Rendering: a masked ping-pong Jacobi evolution.
+
+  * two buffers hold values at even/odd time levels; a cell updated from
+    time s-1 to s reads buf[(s-1) % 2] and writes buf[s % 2].  This is what
+    makes the *inverted* tiles read the triangle-slope values of the correct
+    earlier time level (in a single-array rendering those values would have
+    been overwritten; the paper's two-array Jacobi storage is precisely what
+    legalizes tessellation).
+  * stage j, sub-step s (s = 1..H) updates the cell set
+
+        c == s-1   AND   margin_d >= s*r   for every dim d >= j-1
+
+    where margin_d is the cell's distance to its tile face along dim d and
+    c the per-cell completed-step count.  Stage 1 yields the shrinking
+    pyramids; later stages the expanding recombined tiles.
+
+The engine supports periodic BC (tiles tile the torus).  A numpy twin
+(``numpy_tessellate_check``) re-runs the schedule asserting that every
+masked update only reads neighbors whose count is exactly s-1 — the
+machine-checked legality proof used by the test-suite.
+
+Integration with the transpose layout (§3.4 + Fig. 5d): the inner sub-step
+can be executed by any vectorization scheme; ``inner='transpose'`` runs it
+in the local transpose layout, converting at the tile boundary exactly like
+the paper (the conversion is the layout round-trip; the Pallas kernel keeps
+the VS resident and converts only boundary-covering vector sets).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencils import StencilSpec, apply_once
+from repro.core import vectorize
+
+
+def _margins(shape, tile: tuple[int, ...]):
+    """Per-axis distance-to-tile-face arrays, built from iota (XLA computes
+    them on device — no multi-MB constant buffers in the executable)."""
+    outs = []
+    for axis, (n, w) in enumerate(zip(shape, tile)):
+        assert n % w == 0, f"dim {axis}: {n} % {w} != 0"
+        pos = jnp.arange(n, dtype=jnp.int32) % w
+        margin = jnp.minimum(pos, w - 1 - pos)
+        b = [1] * len(shape)
+        b[axis] = n
+        outs.append(margin.reshape(b))
+    return outs
+
+
+def make_schedule(spec: StencilSpec, shape, tile, height: int):
+    """Static (stage, substep) → bool-mask list for one tessellation round.
+
+    Masks are traced jnp expressions over the iota margins — broadcast
+    comparisons fused by XLA, not constant buffers."""
+    r = spec.r
+    margins = _margins(shape, tile)
+    d = spec.ndim
+    masks = []  # list of (stage, s, margin_mask) — c-condition applied later
+    for stage in range(1, d + 2):
+        for s in range(1, height + 1):
+            cond = None
+            for dd in range(stage - 1, d):
+                m = margins[dd] >= s * r
+                cond = m if cond is None else cond & m
+            masks.append((stage, s, cond))
+    return masks
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5))
+def tessellate_round(spec: StencilSpec, x: jax.Array, tile: tuple[int, ...],
+                     height: int, inner: str = "fused",
+                     vl: int = 8) -> jax.Array:
+    """Advance the whole grid ``height`` steps via one tessellation round."""
+    step = _inner_step(spec, inner, vl)
+    masks = make_schedule(spec, x.shape, tile, height)
+    bufs = [x, x]
+    c = jnp.zeros(x.shape, jnp.int8)
+    for stage, s, mcond in masks:
+        src = bufs[(s - 1) % 2]
+        cand = step(src)
+        upd = (c == s - 1)
+        if mcond is not None:
+            upd = upd & jnp.broadcast_to(mcond, x.shape)
+        bufs[s % 2] = jnp.where(upd, cand, bufs[s % 2])
+        c = jnp.where(upd, jnp.int8(s), c)
+    return bufs[height % 2]
+
+
+def _inner_step(spec: StencilSpec, inner: str, vl: int):
+    if inner == "fused":
+        return lambda v: apply_once(spec, v, bc="periodic")
+    if inner == "transpose":
+        return lambda v: vectorize.step_transpose(spec, v, vl=vl)
+    if inner == "dlt":
+        return lambda v: vectorize.step_dlt(spec, v, vl=vl)
+    raise ValueError(f"unknown inner scheme {inner!r}")
+
+
+def tessellate_run(spec: StencilSpec, x: jax.Array, steps: int,
+                   tile: tuple[int, ...], height: int,
+                   inner: str = "fused", vl: int = 8) -> jax.Array:
+    """steps must be a multiple of height; runs steps/height rounds."""
+    assert steps % height == 0, (steps, height)
+    for _ in range(steps // height):
+        x = tessellate_round(spec, x, tuple(tile), height, inner, vl)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# numpy legality checker — proves the schedule is a valid tessellation.
+# ---------------------------------------------------------------------------
+
+def numpy_tessellate_check(spec: StencilSpec, x: np.ndarray,
+                           tile: tuple[int, ...], height: int) -> np.ndarray:
+    """Run one round in numpy, asserting every update reads only neighbors
+    at exactly the required time level.  Returns the final array."""
+    from repro.core.stencils import numpy_apply_once
+
+    r = spec.r
+    d = spec.ndim
+    margins = [np.asarray(m) for m in _margins(x.shape, tile)]
+    bufs = [x.copy(), x.copy()]
+    c = np.zeros(x.shape, np.int64)
+    for stage in range(1, d + 2):
+        for s in range(1, height + 1):
+            cond = np.ones(x.shape, bool)
+            for dd in range(stage - 1, d):
+                cond = cond & (np.asarray(margins[dd]).reshape(
+                    [x.shape[a] if a == dd else 1 for a in range(d)]) >= s * r)
+            upd = (c == s - 1) & cond
+            # legality: every cell read by an updated cell must hold a live
+            # time-(s-1) value in buf[(s-1)%2].  That value was written at
+            # update s-1 (or is the initial state for s=1) and survives until
+            # the cell's time-(s+1) write — so the neighbor count must be in
+            # [s-1, s].  (c == s is the inverted-triangle-reads-the-slope
+            # case that the paper's two-array Jacobi storage legalizes.)
+            for off, _ in spec.taps:
+                shifted_c = c
+                for axis, o in enumerate(off):
+                    if o:
+                        shifted_c = np.roll(shifted_c, -o, axis=axis)
+                bad = upd & ((shifted_c < s - 1) | (shifted_c > s))
+                assert not bad.any(), (
+                    f"illegal read: stage {stage} substep {s} offset {off}: "
+                    f"{int(bad.sum())} cells")
+            cand = numpy_apply_once(spec, bufs[(s - 1) % 2])
+            bufs[s % 2] = np.where(upd, cand, bufs[s % 2])
+            c = np.where(upd, s, c)
+    assert (c == height).all(), "some cells did not reach the full height"
+    return bufs[height % 2]

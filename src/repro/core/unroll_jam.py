@@ -1,0 +1,161 @@
+"""Time-loop unroll-and-jam (paper §3.3, Algorithm 1).
+
+Advance every element k time steps per memory round-trip.  Two renderings:
+
+* ``multistep_fused``  — `for _ in range(k): step(x)`; the "normal
+  execution" (k=1) generalized; a full-array barrier between steps, no
+  in-register reuse.
+
+* ``multistep_pipelined`` — the paper's Algorithm 1: a software pipeline
+  over vector sets.  A window of k live vector sets slides left→right; per
+  slide one VS is loaded, one fully-updated VS is stored, and each live VS
+  advances one step.  Window position i (0-based, i = paper's i+1) always
+  holds a block at time (k-1-i) pre-update.  The update of position i needs
+
+    - left rows:  own tail rows (pre-update) lane-rolled +1, lane 0 fed by
+      the left block's tail at the same time — preserved from the previous
+      slide in ``vrl[i]`` (paper line 18/24; in 0-based form the carry needs
+      no reindexing: the tail saved at position i this slide is consumed at
+      position i next slide).
+    - right rows: own head rows (pre-update) lane-rolled -1, lane vl-1 fed
+      by the right block's just-updated head (position i+1 is processed
+      first; after its update it sits at the same time level).
+
+  Each slide does one VS load + one VS store + k VS stencil updates: the
+  in-core flops/byte ratio rises k× (the paper's central claim).
+
+Boundary condition is *dirichlet* (ring of width r keeps its value); the
+paper handles tile boundaries by falling back to the natural layout (§3.4) —
+we realize that as masked ring restores on the first/last block.
+
+The Pallas kernel in kernels/stencil_kernels.py implements this same
+pipeline with VMEM tiles (grid-sequential carry in scratch); this jnp
+version is its semantic model and is tested against ``apply_steps``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import layouts
+from repro.core.stencils import StencilSpec, apply_once
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3))
+def multistep_fused(spec: StencilSpec, x: jax.Array, k: int,
+                    bc: str = "periodic") -> jax.Array:
+    def body(_, v):
+        return apply_once(spec, v, bc)
+    return lax.fori_loop(0, k, body, x)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — pipelined k-step update over vector sets (1-D, dirichlet).
+# ---------------------------------------------------------------------------
+
+def _stencil_vs(spec: StencilSpec, ext: jax.Array, m: int) -> jax.Array:
+    """Weighted window-sum over the extended tile ext (m+2r, vl)."""
+    r = spec.r
+    acc = None
+    for off, c in spec.taps:
+        lo = off[-1]
+        sl = lax.slice_in_dim(ext, r + lo, r + lo + m, axis=0)
+        term = sl * jnp.asarray(c, ext.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _left_rows(own_tail: jax.Array, left_tail: jax.Array) -> jax.Array:
+    """Assemble rows -r..-1.  own_tail/left_tail: (r, vl) rows m-r..m-1 of
+    this block / the left block, both at the VS's pre-update time.
+    Blend + permute per row (the paper's 2 ops per assembled vector)."""
+    rolled = jnp.roll(own_tail, 1, axis=-1)
+    return rolled.at[:, 0].set(left_tail[:, -1])
+
+
+def _right_rows(own_head: jax.Array, right_head: jax.Array) -> jax.Array:
+    """Assemble rows m..m+r-1 from own/right-neighbor head rows 0..r-1."""
+    rolled = jnp.roll(own_head, -1, axis=-1)
+    return rolled.at[:, -1].set(right_head[:, 0])
+
+
+def _ring_masks(vl: int, m: int, r: int):
+    """(m, vl) bool masks of the dirichlet ring cells inside the first and
+    last block.  Element e of a block sits at (row e % m, lane e // m)."""
+    import numpy as np
+    fm = np.zeros((m, vl), bool)
+    lm = np.zeros((m, vl), bool)
+    for e in range(r):
+        fm[e % m, e // m] = True
+        le = vl * m - 1 - e
+        lm[le % m, le // m] = True
+    return jnp.asarray(fm), jnp.asarray(lm)
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3, 4))
+def multistep_pipelined(spec: StencilSpec, x: jax.Array, k: int,
+                        vl: int = 8, m: int | None = None) -> jax.Array:
+    assert spec.ndim == 1
+    m = vl if m is None else m
+    r = spec.r
+    assert r <= m, "halo must fit within one vector set"
+    n = x.shape[0]
+    t = layouts.to_transpose_layout(x, vl, m)          # (nb, m, vl)
+    nb = int(t.shape[0])
+    assert nb >= k + 1, f"need at least k+1={k + 1} blocks, got {nb}"
+    dtype = x.dtype
+    first_mask, last_mask = _ring_masks(vl, m, r)
+
+    def compute(vs, left_tail, right_head, b_idx):
+        """Advance one VS one step; dirichlet masks on domain-edge blocks."""
+        ext = jnp.concatenate(
+            [_left_rows(vs[m - r:], left_tail), vs,
+             _right_rows(vs[:r], right_head)], axis=0)
+        new = _stencil_vs(spec, ext, m)
+        edge_first = (b_idx == 0) & first_mask
+        edge_last = (b_idx == nb - 1) & last_mask
+        return jnp.where(edge_first | edge_last, vs, new)
+
+    zeros_tail = jnp.zeros((r, vl), dtype)
+
+    # ---- boot: window[i] = block i must reach time k-1-i -------------------
+    # sweep s = 0..k-2 advances blocks 0..k-2-s (all at time s) by one step.
+    window = [t[i] for i in range(k)]
+    vrl = [zeros_tail for _ in range(k)]
+    for s in range(k - 1):
+        snapshot = list(window)
+
+        def left_tail_of(i):
+            return snapshot[i - 1][m - r:] if i > 0 else zeros_tail
+
+        def right_head_of(i):
+            nxt = snapshot[i + 1] if i + 1 < k else t[k]
+            return nxt[:r]
+
+        for i in range(k - 1 - s):
+            if i == k - 2 - s:          # block's final boot update:
+                vrl[i + 1] = snapshot[i][m - r:]   # save pre-update tail
+            window[i] = compute(snapshot[i], left_tail_of(i),
+                                right_head_of(i), i)
+    # consumer of vrl[0] is window[0] whose left block is out-of-domain.
+
+    # ---- steady slides ------------------------------------------------------
+    def slide(carry, j):
+        window, vrl = carry              # tuples of (m,vl) / (r,vl)
+        incoming = t[jnp.minimum(j, nb - 1)]
+        ws = list(window) + [incoming]
+        new_vr = [None] * k
+        for i in range(k - 1, -1, -1):   # paper's i = k..1
+            b_idx = j - (k - i)          # block index held at position i
+            new_vr[i] = ws[i][m - r:]    # preserve pre-update tail (vrl)
+            right_head = ws[i + 1][:r]   # position i+1 already updated
+            ws[i] = compute(ws[i], vrl[i], right_head, b_idx)
+        out_block = ws[0]                # updated k times → store
+        return (tuple(ws[1:k + 1]), tuple(new_vr)), out_block
+
+    init = (tuple(window), tuple(vrl))
+    _, out_blocks = lax.scan(slide, init, jnp.arange(k, nb + k))
+    return layouts.from_transpose_layout(out_blocks, vl, m)

@@ -1,0 +1,186 @@
+"""The vectorization schemes discussed by the paper, as jnp programs.
+
+Five schemes, all computing one Jacobi step with periodic BC, each written so
+its XLA HLO mirrors the data movement of the paper's CPU implementation:
+
+  * ``multiload``  — §2.1 first solution: unaligned overlapping vector loads
+                     (wrap-pad + static slices; re-reads each input 2r+1×).
+  * ``reorg``      — §2.1 second solution: aligned loads + inter-register
+                     permutes (whole-array rolls on the unit-stride axis).
+  * ``dlt``        — §2.2 Henretty's global dimension-lifting transpose:
+                     single-block transpose layout, locality destroyed.
+  * ``transpose``  — §3.2 OUR scheme: local (vl×m) transpose per block;
+                     neighbor access = contiguous second-minor slices of an
+                     extended tile; exactly 4r reorganization ops per vector
+                     set (2r assembled vectors × 2 ops each).
+  * ``fused``      — jnp.roll oracle (= stencils.apply_once), what a perfect
+                     compiler would do; used as the reference and as the
+                     tessellation inner step.
+
+For d-dimensional stencils the layout only affects the unit-stride (last)
+axis — offsets in other dimensions are plain rolls (paper §3.2: "Applying the
+transpose layout to higher-dimensional stencils is exactly similar ... since
+the layout only affects the unit-stride dimension").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import layouts
+from repro.core.stencils import StencilSpec, apply_once
+
+SchemeFn = Callable[..., jax.Array]
+
+
+def _roll_other_axes(arr: jax.Array, off: tuple[int, ...], ndim: int) -> jax.Array:
+    """Roll the leading (non-unit-stride) spatial axes by -off."""
+    for axis, o in enumerate(off[:-1]):
+        if o != 0:
+            arr = jnp.roll(arr, -o, axis=axis)
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# multiload: wrap-pad, then one contiguous (unaligned) slice per tap.
+# ---------------------------------------------------------------------------
+
+def step_multiload(spec: StencilSpec, x: jax.Array) -> jax.Array:
+    r = spec.r
+    pad = [(r, r)] * x.ndim
+    xp = jnp.pad(x, pad, mode="wrap")
+    acc = None
+    for off, c in spec.taps:
+        starts = tuple(r + o for o in off)
+        limits = tuple(s + n for s, n in zip(starts, x.shape))
+        sl = lax.slice(xp, starts, limits)
+        term = sl * jnp.asarray(c, x.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# reorg: aligned loads once, rolls (permute networks) for every tap.
+# ---------------------------------------------------------------------------
+
+def step_reorg(spec: StencilSpec, x: jax.Array) -> jax.Array:
+    return apply_once(spec, x, bc="periodic")
+
+
+step_fused = step_reorg  # semantic oracle
+
+
+# ---------------------------------------------------------------------------
+# dlt: global dimension-lifting transpose on the unit-stride axis.
+# ---------------------------------------------------------------------------
+
+def step_dlt(spec: StencilSpec, x: jax.Array, vl: int = 128) -> jax.Array:
+    n = x.shape[-1]
+    assert n % vl == 0
+    m = n // vl
+    return _layout_step(spec, x, vl, m)
+
+
+# ---------------------------------------------------------------------------
+# transpose (ours): local per-block transpose layout.
+# ---------------------------------------------------------------------------
+
+def step_transpose(spec: StencilSpec, x: jax.Array, vl: int = 128,
+                   m: int | None = None) -> jax.Array:
+    m = vl if m is None else m
+    return _layout_step(spec, x, vl, m)
+
+
+def _layout_step(spec: StencilSpec, x: jax.Array, vl: int, m: int) -> jax.Array:
+    """One step in (local or global) transpose layout (round-trip form)."""
+    t = layouts.to_transpose_layout(x, vl, m)          # (..., nb, m, vl)
+    out = step_in_layout(spec, t, ndim=x.ndim)
+    return layouts.from_transpose_layout(out, vl, m)
+
+
+def step_in_layout(spec: StencilSpec, t: jax.Array, ndim: int) -> jax.Array:
+    """One step on a layout-RESIDENT array (..., nb, m, vl) — the paper's
+    actual execution model: the transpose happens once per tile lifetime
+    (§3.2/§3.5), every step builds the extended tile [left r rows | VS |
+    right r rows] and sums contiguous second-minor slices."""
+    r = spec.r
+    m = t.shape[-2]
+    ext = extend_vs(t, r)                              # (..., nb, m+2r, vl)
+    acc = None
+    for off, c in spec.taps:
+        lo = off[-1]
+        sl = lax.slice_in_dim(ext, r + lo, r + lo + m, axis=ext.ndim - 2)
+        sl = _roll_other_axes(sl, off, ndim)
+        term = sl * jnp.asarray(c, t.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def extend_vs(t: jax.Array, r: int) -> jax.Array:
+    """Extend each vector set with r assembled rows on each side.
+
+    t: (..., nb, m, vl).  Row -q (q=1..r) is the lane-carried copy of row
+    m-q of the left-neighbor block; row m-1+q the lane-carried copy of row
+    q-1 of the right neighbor — each costs one blend + one permute, i.e. the
+    paper's 2 reorganization instructions per assembled vector.
+    """
+    nb, m, vl = t.shape[-3:]
+    lead = t.shape[:-3]
+    left_rows = []
+    right_rows = []
+    for q in range(1, r + 1):
+        # left row -q: element x[b*vl*m + j*m - q] = (b, m-q, j-1)|(b-1, ...)
+        src = t[..., m - q, :]                        # (..., nb, vl)
+        flat = src.reshape(lead + (nb * vl,))
+        carried = jnp.roll(flat, 1, axis=-1).reshape(lead + (nb, vl))
+        left_rows.insert(0, carried[..., None, :])
+        # right row m-1+q: x[b*vl*m + j*m + m-1+q] = (b, q-1, j+1)|(b+1, ...)
+        src = t[..., q - 1, :]
+        flat = src.reshape(lead + (nb * vl,))
+        carried = jnp.roll(flat, -1, axis=-1).reshape(lead + (nb, vl))
+        right_rows.append(carried[..., None, :])
+    return jnp.concatenate(left_rows + [t] + right_rows, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SCHEMES: dict[str, SchemeFn] = {
+    "multiload": step_multiload,
+    "reorg": step_reorg,
+    "fused": step_fused,
+    "dlt": step_dlt,
+    "transpose": step_transpose,
+}
+
+
+def get_scheme(name: str) -> SchemeFn:
+    try:
+        return SCHEMES[name]
+    except KeyError:
+        raise ValueError(f"unknown scheme {name!r}; have {sorted(SCHEMES)}")
+
+
+@partial(jax.jit, static_argnums=(0, 1, 3, 4, 5))
+def run_scheme(name: str, spec: StencilSpec, x: jax.Array, steps: int,
+               vl: int = 128, m: int | None = None) -> jax.Array:
+    """steps× application of the named scheme (jit'd driver for benches).
+
+    Layout schemes (dlt/transpose) stay layout-RESIDENT across the whole
+    run — transpose in once, step `steps` times, transpose out — exactly
+    the paper's amortization (DLT pays one global transpose per run; ours
+    one local transpose per tile per run)."""
+    if name in ("dlt", "transpose"):
+        mm = (x.shape[-1] // vl) if name == "dlt" else (m or vl)
+        t = layouts.to_transpose_layout(x, vl, mm)
+        body = lambda _, v: step_in_layout(spec, v, ndim=x.ndim)
+        t = lax.fori_loop(0, steps, body, t)
+        return layouts.from_transpose_layout(t, vl, mm)
+    fn = get_scheme(name)
+    body = lambda _, v: fn(spec, v)
+    return lax.fori_loop(0, steps, body, x)

@@ -1,0 +1,85 @@
+"""shard_map halo exchange for domain-decomposed stencils.
+
+The global grid is decomposed along its leading spatial axes over named mesh
+axes; each device holds a contiguous subdomain.  One halo exchange ships a
+ring of width w to both neighbors along every decomposed axis via
+``lax.ppermute`` (two permutes per axis; the second exchange operates on the
+already-extended array so corner/edge ghosts are captured without extra
+diagonal messages — the standard two-phase trick).
+
+Global BC is periodic (the process ring wraps), matching the core oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def exchange_axis(xl: jax.Array, width: int, axis: int, axis_name: str,
+                  n_shards: int) -> jax.Array:
+    """Extend the local block with ``width`` ghost cells on both sides of
+    ``axis``, fetched from the ring neighbors along ``axis_name``."""
+    if n_shards == 1:
+        # single shard: periodic wrap is local
+        left = lax.slice_in_dim(xl, xl.shape[axis] - width, xl.shape[axis],
+                                axis=axis)
+        right = lax.slice_in_dim(xl, 0, width, axis=axis)
+        return jnp.concatenate([left, xl, right], axis=axis)
+    fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+    tail = lax.slice_in_dim(xl, xl.shape[axis] - width, xl.shape[axis],
+                            axis=axis)
+    head = lax.slice_in_dim(xl, 0, width, axis=axis)
+    left_ghost = lax.ppermute(tail, axis_name, fwd)    # from left neighbor
+    right_ghost = lax.ppermute(head, axis_name, bwd)   # from right neighbor
+    return jnp.concatenate([left_ghost, xl, right_ghost], axis=axis)
+
+
+def exchange(xl: jax.Array, width: int, decomp: Sequence[str | None],
+             mesh: Mesh) -> jax.Array:
+    """Halo-extend along every decomposed axis (axis d ↔ decomp[d])."""
+    for axis, aname in enumerate(decomp):
+        if aname is None:
+            continue
+        xl = exchange_axis(xl, width, axis, aname,
+                           int(np.prod([mesh.shape[a] for a in _names(aname)])))
+    return xl
+
+
+def crop(xl: jax.Array, width: int, decomp: Sequence[str | None]) -> jax.Array:
+    for axis, aname in enumerate(decomp):
+        if aname is None:
+            continue
+        xl = lax.slice_in_dim(xl, width, xl.shape[axis] - width, axis=axis)
+    return xl
+
+
+def _names(aname) -> tuple[str, ...]:
+    return aname if isinstance(aname, tuple) else (aname,)
+
+
+def partition_spec(decomp: Sequence[str | None], ndim: int) -> P:
+    entries = list(decomp) + [None] * (ndim - len(decomp))
+    return P(*entries)
+
+
+def halo_bytes_per_exchange(local_shape: Sequence[int], width: int,
+                            decomp: Sequence[str | None],
+                            itemsize: int = 4) -> int:
+    """Per-device bytes sent in one halo exchange (both directions, all
+    decomposed axes, including the progressive corner growth)."""
+    shape = list(local_shape)
+    total = 0
+    for axis, aname in enumerate(decomp):
+        if aname is None:
+            continue
+        face = int(np.prod(shape)) // shape[axis]
+        total += 2 * width * face * itemsize
+        shape[axis] += 2 * width          # later axes ship the grown face
+    return total

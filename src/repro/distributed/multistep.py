@@ -1,0 +1,148 @@
+"""Communication-avoiding distributed stencil sweeps.
+
+The distributed rendering of the paper's unroll-and-jam: each device
+advances its subdomain **k steps per halo exchange** with a ghost ring of
+width k·r (overlapped/trapezoid blocking).  Collective traffic drops k×
+versus per-step exchange; the price is redundant halo compute of
+O(perimeter · k²·r/2) cells — on TPU the redundant flops are far cheaper
+than the latency of k-1 extra collectives (napkin math in EXPERIMENTS.md
+§Perf).
+
+Two local engines:
+  * engine='jnp'    — fused jnp steps on the halo-extended block (any ndim)
+  * engine='pallas' — the 1-D transpose-layout pipelined kernel with
+    edge_mask=False; halos are exchanged as whole (vl·m)-element blocks so
+    the kernel's block structure is preserved (no re-layout at the seam).
+
+``distributed_run`` builds a mesh over all visible devices; ``make_step``
+returns the jit'd shard_map program for an existing mesh (used by the
+dry-run and benchmarks).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.stencils import StencilSpec, apply_once
+from repro.distributed import halo
+
+
+def make_step(spec: StencilSpec, mesh: Mesh,
+              decomp: Sequence[str | None], k: int,
+              engine: str = "jnp", vl: int = 8, m: int | None = None,
+              interpret: bool = True):
+    """Returns step(x) advancing the global array k steps (periodic BC)."""
+    r = spec.r
+    width = k * r
+    pspec = halo.partition_spec(decomp, spec.ndim)
+
+    if engine == "jnp":
+        def local_fn(xl):
+            ext = halo.exchange(xl, width, decomp, mesh)
+            for _ in range(k):
+                ext = apply_once(spec, ext, bc="periodic")
+            return halo.crop(ext, width, decomp)
+    elif engine == "pallas":
+        assert spec.ndim == 1, "pallas engine wired for 1-D decomposition"
+        from repro.core import layouts
+        from repro.kernels import stencil_kernels as sk
+        mm = m or vl
+        blk = vl * mm
+        assert width <= blk, (width, blk)
+
+        def local_fn(xl):
+            ext = halo.exchange(xl, blk, decomp, mesh)  # one block per side
+            t = layouts.to_transpose_layout(ext, vl, mm)
+            out = sk.stencil1d_multistep(spec, t, k, interpret=interpret,
+                                         edge_mask=False)
+            flat = layouts.from_transpose_layout(out, vl, mm)
+            return lax.slice_in_dim(flat, blk, flat.shape[0] - blk, axis=0)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    shmapped = jax.shard_map(local_fn, mesh=mesh, in_specs=pspec,
+                             out_specs=pspec, check_vma=False)
+    return jax.jit(shmapped)
+
+
+def make_stepper(spec: StencilSpec, mesh: Mesh,
+                 decomp: Sequence[str | None], steps: int, k: int,
+                 engine: str = "jnp", **kw):
+    """Whole-run program: steps/k sweeps inside one jit (collectives and
+    compute scheduled/overlapped by XLA across sweeps)."""
+    assert steps % k == 0
+    step = _make_step_fn(spec, mesh, decomp, k, engine, **kw)
+    pspec = halo.partition_spec(decomp, spec.ndim)
+
+    def run(x):
+        def body(_, v):
+            return step(v)
+        return lax.fori_loop(0, steps // k, body, x)
+
+    return jax.jit(jax.shard_map(run, mesh=mesh, in_specs=pspec,
+                                 out_specs=pspec, check_vma=False))
+
+
+def _make_step_fn(spec, mesh, decomp, k, engine, vl: int = 8,
+                  m: int | None = None, interpret: bool = True):
+    """Local (per-shard) k-step function, for composition inside shard_map."""
+    width = k * spec.r
+    if engine == "jnp":
+        def local_fn(xl):
+            ext = halo.exchange(xl, width, decomp, mesh)
+            for _ in range(k):
+                ext = apply_once(spec, ext, bc="periodic")
+            return halo.crop(ext, width, decomp)
+        return local_fn
+    if engine == "pallas":
+        from repro.core import layouts
+        from repro.kernels import stencil_kernels as sk
+        mm = m or vl
+        blk = vl * mm
+
+        def local_fn(xl):
+            ext = halo.exchange(xl, blk, decomp, mesh)
+            t = layouts.to_transpose_layout(ext, vl, mm)
+            out = sk.stencil1d_multistep(spec, t, k, interpret=interpret,
+                                         edge_mask=False)
+            flat = layouts.from_transpose_layout(out, vl, mm)
+            return lax.slice_in_dim(flat, blk, flat.shape[0] - blk, axis=0)
+        return local_fn
+    raise ValueError(engine)
+
+
+def default_mesh(ndim: int, devices=None) -> tuple[Mesh, list[str | None]]:
+    """Flat mesh over all devices for 1-D decomposition; a 2-D process grid
+    for 2-D/3-D stencils when the device count factors."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if ndim == 1 or n < 4:
+        mesh = jax.make_mesh((n,), ("dx",), devices=np.asarray(devices))
+        return mesh, ["dx"] + [None] * (ndim - 1)
+    a = int(np.sqrt(n))
+    while n % a:
+        a -= 1
+    mesh = jax.make_mesh((a, n // a), ("dx", "dy"),
+                         devices=np.asarray(devices))
+    return mesh, ["dx", "dy"] + [None] * (ndim - 2)
+
+
+def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
+                    engine: str = "jnp", mesh: Mesh | None = None,
+                    decomp=None, **kw) -> jax.Array:
+    if mesh is None:
+        mesh, decomp = default_mesh(spec.ndim)
+    assert decomp is not None
+    pspec = halo.partition_spec(decomp, spec.ndim)
+    x = jax.device_put(x, NamedSharding(mesh, pspec))
+    assert steps % k == 0
+    step = make_step(spec, mesh, decomp, k, engine, **kw)
+    for _ in range(steps // k):
+        x = step(x)
+    return x

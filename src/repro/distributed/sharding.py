@@ -1,0 +1,303 @@
+"""Sharding policy: param/activation PartitionSpecs for the LM zoo.
+
+Rules (DESIGN.md §5):
+  * batch shards over ('pod','data') — pure DP across pods.
+  * every weight matrix shards its "feature-parallel" dim over 'model'
+    (Megatron TP: attn heads / d_ff / experts / vocab) and, when the tensor
+    is large, a second dim over 'data' (ZeRO-3/FSDP — XLA inserts the
+    per-layer all-gathers, which overlap with the scanned layer compute).
+  * MoE expert tensors shard E over 'model' when divisible (expert
+    parallelism: moonshot 64e/16 → 4 experts/shard); otherwise d_ff over
+    'model' (mixtral 8e over 16-way model → TP inside experts) — both
+    cases keep the dispatch all-to-all on the 'model' axis.
+  * stacked-layer leading axis (L, ...) is never sharded.
+  * optimizer states inherit the param specs (same tree structure).
+
+Divisibility is checked per dim; non-divisible dims fall back along the
+preference list (GSPMD could pad, but explicit fallback keeps the layout
+predictable for the roofline analysis).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# param-name → (axis-from-the-right preference list)
+#   each entry: list of (dim_index_from_right, mesh_axis)
+_FSDP_MIN_SIZE = 1 << 20     # tensors under 1 Mi elements: TP only
+
+
+def _fits(shape, dim: int, size: int) -> bool:
+    return shape[dim] % size == 0 and shape[dim] >= size
+
+
+def spec_for(path: str, shape: tuple[int, ...], mesh: Mesh,
+             cfg: ArchConfig) -> P:
+    """path: '/'-joined tree path, e.g. 'layers/attn/wq'."""
+    axes = dict(mesh.shape)
+    model = "model" if "model" in axes else None
+    data = "data" if "data" in axes else None
+    nd = len(shape)
+    entries: list[Any] = [None] * nd
+
+    def leading_stacked() -> int:
+        # stacked layer axis present? (layers/... params have L leading)
+        return 1 if path.startswith("layers/") and nd >= 2 else 0
+
+    lo = leading_stacked()
+    name = path.split("/")[-1]
+    body = shape[lo:]
+
+    def put(dim_from_lo: int, axis_name: str | None):
+        if axis_name is None:
+            return False
+        d = lo + dim_from_lo
+        if entries[d] is None and _fits(shape, d, axes[axis_name]):
+            entries[d] = axis_name
+            return True
+        return False
+
+    big = int(np.prod(shape)) >= _FSDP_MIN_SIZE
+
+    if name in ("router",):
+        put(0, data) if big else None
+    elif path.endswith("moe/w_in") or path.endswith("moe/w_gate") \
+            or path.endswith("moe/w_out"):
+        # (E, d_in, d_out): EP on E if divisible, else TP on the ff dim
+        ff_dim = 2 if name in ("w_in", "w_gate") else 1
+        if not put(0, model):
+            put(ff_dim, model)
+        if big:
+            put(1 if ff_dim == 2 else 2, data)
+    elif name in ("wq", "wk", "wv", "w_in", "w_gate", "in_proj"):
+        put(1, model)            # output features (heads / d_ff / d_inner)
+        if big:
+            put(0, data)
+    elif name in ("wo", "w_out", "out_proj"):
+        put(0, model)            # input features
+        if big:
+            put(1, data)
+    elif name == "embed":
+        put(0, model)            # vocab
+        if big:
+            put(1, data)
+        if big and entries[lo] is None and entries[lo + 1] == "data" \
+                and model is not None \
+                and _fits(shape, lo + 1, axes[data] * axes[model]):
+            # vocab not divisible (e.g. mamba2's 50280): shard d_model over
+            # BOTH axes instead (logits matmul all-reduces over d_model).
+            entries[lo + 1] = (data, model)
+    elif name == "head":
+        put(1, model)            # vocab out
+        if big:
+            put(0, data)
+        if big and entries[lo + 1] is None and entries[lo] == "data" \
+                and model is not None \
+                and _fits(shape, lo, axes[data] * axes[model]):
+            entries[lo] = (data, model)
+    elif name == "conv_w":
+        put(1, model)
+    elif name in ("scale", "bias", "A_log", "D", "dt_bias", "conv_b"):
+        pass                     # replicated
+    else:
+        # default: biggest dim on model, second on data
+        order = np.argsort(body)[::-1]
+        if len(order) >= 1:
+            put(int(order[0]), model)
+        if big and len(order) >= 2:
+            put(int(order[1]), data)
+    return P(*entries)
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            elif hasattr(k, "name"):
+                parts.append(str(k.name))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def param_specs(params_shape, mesh: Mesh, cfg: ArchConfig):
+    """Pytree of PartitionSpec matching the params tree (works on shapes
+    or concrete arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten(params_shape)
+    paths = _tree_paths(params_shape)
+    specs = [spec_for(path, tuple(leaf.shape), mesh, cfg)
+             for path, leaf in paths]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape, mesh: Mesh, cfg: ArchConfig):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh, cfg))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    names = [n for n in ("pod", "data") if n in dict(mesh.shape)]
+    return tuple(names) if names else ("data",)
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Shard the leading (batch) dim of every input over pod+data (skipped
+    when the batch doesn't divide — e.g. long_500k's global_batch=1)."""
+    ba = batch_axes(mesh)
+    axes = dict(mesh.shape)
+    dp = int(np.prod([axes[a] for a in ba]))
+
+    def f(leaf):
+        nd = len(leaf.shape)
+        if nd == 0 or leaf.shape[0] % dp:
+            return P(*([None] * nd))
+        return P(ba, *([None] * (nd - 1)))
+    return jax.tree.map(f, batch_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh, cfg: ArchConfig):
+    """Decode caches (L, B, T, KV, D) / SSM states (L, B, H, P, N):
+    batch over pod+data when divisible; one model-sharded dim chosen by
+    preference [heads-like (3), time/state (2), minor (last)]."""
+    ba = batch_axes(mesh)
+    axes = dict(mesh.shape)
+    dp = int(np.prod([axes[a] for a in ba]))
+    msize = axes.get("model", 1)
+
+    def f(leaf):
+        nd = len(leaf.shape)
+        entries = [None] * nd
+        if nd >= 2 and leaf.shape[1] % dp == 0 and leaf.shape[1] >= dp:
+            entries[1] = ba          # (L, B, ...)
+        for d in ([3, 2, nd - 1] if nd >= 4 else [nd - 1]):
+            if d < nd and entries[d] is None and leaf.shape[d] % msize == 0 \
+                    and leaf.shape[d] >= msize:
+                entries[d] = "model"
+                break
+        return P(*entries)
+    return jax.tree.map(f, cache_shape)
+
+
+def opt_state_specs(opt_state_shape, pspecs, mesh: Mesh):
+    """OptState(step, mu, nu): moments mirror the param specs."""
+    from repro.train.optimizer import OptState
+    return OptState(P(), pspecs, pspecs)
+
+
+# ---------------------------------------------------------------------------
+# Alternative layout: pure-DP + ZeRO-3 ("fsdp" layout).
+#
+# For small models (≲5B params) 16-way TP is the wrong mapping: per-device
+# matmuls shrink below MXU efficiency and the per-layer residual
+# all-reduces (4·L·tokens·D bytes — microbatch-independent) dominate the
+# roofline (EXPERIMENTS.md §Perf, mamba2 iteration 2).  This layout uses
+# the 'model' axis as extra data parallelism: batch shards over
+# (pod, data, model); every parameter ZeRO-3-shards its largest divisible
+# dim over ('data','model') and is all-gathered per layer (overlapping
+# with the scanned layer compute).  No TP collectives remain.
+# ---------------------------------------------------------------------------
+
+def fsdp_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    axes = dict(mesh.shape)
+    ways = axes.get("data", 1) * axes.get("model", 1)
+    nd = len(shape)
+    entries = [None] * nd
+    lo = 1 if path.startswith("layers/") and nd >= 2 else 0
+    body = shape[lo:]
+    order = np.argsort(body)[::-1]
+    for d in order:
+        if shape[lo + d] % ways == 0 and shape[lo + d] >= ways:
+            entries[lo + d] = ("data", "model")
+            break
+    else:
+        for d in order:  # fall back to a single-axis shard
+            if shape[lo + d] % axes.get("data", 1) == 0 \
+                    and shape[lo + d] >= axes.get("data", 1):
+                entries[lo + d] = "data"
+                break
+    return P(*entries)
+
+
+def fsdp_param_specs(params_shape, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten(params_shape)
+    paths = _tree_paths(params_shape)
+    specs = [fsdp_spec_for(path, tuple(leaf.shape), mesh)
+             for path, leaf in paths]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def fsdp_batch_axes(mesh: Mesh) -> tuple:
+    names = [n for n in ("pod", "data", "model") if n in dict(mesh.shape)]
+    return tuple(names)
+
+
+def fsdp_batch_specs(batch_shape, mesh: Mesh):
+    ba = fsdp_batch_axes(mesh)
+    axes = dict(mesh.shape)
+    dp = int(np.prod([axes[a] for a in ba]))
+
+    def f(leaf):
+        nd = len(leaf.shape)
+        if nd == 0 or leaf.shape[0] % dp:
+            return P(*([None] * nd))
+        return P(ba, *([None] * (nd - 1)))
+    return jax.tree.map(f, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# EP layout (MoE): mesh (data, expert, model); dense params ZeRO-3 over all
+# axes, expert weights E→'expert' + ZeRO within the expert group, batch
+# over every axis.  See roofline/model.py:train_cell_ep and §Perf.
+# ---------------------------------------------------------------------------
+
+def ep_param_specs(params_shape, mesh: Mesh):
+    axes = dict(mesh.shape)
+    dense_axes = tuple(a for a in ("data", "expert", "model") if a in axes)
+    ways = int(np.prod([axes[a] for a in dense_axes]))
+    flat, treedef = jax.tree_util.tree_flatten(params_shape)
+    paths = _tree_paths(params_shape)
+    specs = []
+    for path, leaf in paths:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        name = path.split("/")[-1]
+        lo = 1 if path.startswith("layers/") and nd >= 2 else 0
+        entries = [None] * nd
+        if (path.endswith("moe/w_in") or path.endswith("moe/w_gate")
+                or path.endswith("moe/w_out")) and \
+                shape[lo] % axes["expert"] == 0:
+            entries[lo] = "expert"
+            # ZeRO the remaining two dims inside the expert group
+            if shape[lo + 1] % axes["data"] == 0:
+                entries[lo + 1] = "data"
+            if shape[lo + 2] % axes["model"] == 0:
+                entries[lo + 2] = "model"
+        else:
+            body = shape[lo:]
+            for d in np.argsort(body)[::-1]:
+                if shape[lo + d] % ways == 0 and shape[lo + d] >= ways:
+                    entries[lo + d] = dense_axes
+                    break
+            else:
+                for d in np.argsort(body)[::-1]:
+                    if shape[lo + d] % axes["data"] == 0 \
+                            and shape[lo + d] >= axes["data"]:
+                        entries[lo + d] = "data"
+                        break
+        specs.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def ep_batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data", "expert", "model")
+                 if a in dict(mesh.shape))

@@ -1,0 +1,95 @@
+"""jit'd public wrappers around the Pallas stencil kernels.
+
+Natural-layout in/out: the wrappers perform the local transpose-layout
+round-trip (itself a Pallas kernel on the 1-D path — §3.5), pick TPU-native
+tile parameters, and run sweeps of k-step pipelined updates.
+
+On CPU hosts the kernels execute in interpret mode (validation); on TPU they
+compile via Mosaic.  ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layouts
+from repro.core.stencils import StencilSpec
+from repro.kernels import stencil_kernels as sk
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def pick_tile(spec: StencilSpec, shape, vl: int | None = None,
+              m: int | None = None, t0: int | None = None):
+    """TPU-native defaults: vl=128 lanes, m=8 sublanes, pipeline tile t0=8;
+    shrink for small/test shapes while keeping divisibility."""
+    n_minor = shape[-1]
+    vl = vl or (sk.DEFAULT_VL if n_minor % (sk.DEFAULT_VL * 2) == 0 else 8)
+    m = m or (sk.DEFAULT_M if n_minor % (vl * sk.DEFAULT_M) == 0 else
+              max(spec.r, n_minor // vl // 2 or 1))
+    while n_minor % (vl * m):
+        m -= 1
+    assert m >= spec.r, (m, spec.r, shape)
+    if len(shape) == 1:
+        return vl, m, None
+    n0 = shape[0]
+    t0 = t0 or min(8, n0)
+    while n0 % t0:
+        t0 -= 1
+    assert t0 >= spec.r
+    return vl, m, t0
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6))
+def stencil_multistep(spec: StencilSpec, x: jax.Array, k: int,
+                      vl: int | None = None, m: int | None = None,
+                      t0: int | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Advance x by k time steps with the pipelined transpose-layout kernel.
+
+    BC: dirichlet along axis 0 (1-D: the spatial axis), periodic elsewhere.
+    """
+    interpret = _auto_interpret(interpret)
+    vl, m, t0 = pick_tile(spec, x.shape, vl, m, t0)
+    if spec.ndim == 1:
+        t = sk.block_transpose(x, vl, m, interpret=interpret)
+        out = sk.stencil1d_multistep(spec, t, k, interpret=interpret)
+        return sk.block_untranspose(out, vl, m, interpret=interpret)
+    t = layouts.to_transpose_layout(x, vl, m)      # (n0, *mid, nb, m, vl)
+    out = sk.stencil_nd_multistep(spec, t, k, t0, interpret=interpret)
+    return layouts.from_transpose_layout(out, vl, m)
+
+
+def stencil_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
+                vl: int | None = None, m: int | None = None,
+                t0: int | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """steps must divide into k-step sweeps."""
+    assert steps % k == 0, (steps, k)
+    for _ in range(steps // k):
+        x = stencil_multistep(spec, x, k, vl, m, t0, interpret)
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def stencil_onestep_naive(spec: StencilSpec, x: jax.Array,
+                          vl: int = 8, interpret: bool | None = None):
+    return sk.stencil1d_naive_onestep(spec, x, vl,
+                                      interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4))
+def stencil_onestep_transpose(spec: StencilSpec, x: jax.Array,
+                              vl: int = 8, m: int | None = None,
+                              interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    m = m or vl
+    t = layouts.to_transpose_layout(x, vl, m)
+    out = sk.stencil1d_transpose_onestep(spec, t, interpret=interpret)
+    return layouts.from_transpose_layout(out, vl, m)

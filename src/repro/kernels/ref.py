@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's contract (layout, boundary conditions, step count) is
+reproduced here with plain jnp ops on the natural layout; the test-suite
+sweeps shapes/dtypes and asserts allclose(kernel, oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layouts
+from repro.core.stencils import StencilSpec, apply_steps, apply_once
+
+
+def kernel_bc(ndim: int) -> tuple[str, ...]:
+    """BC implemented by the multistep kernels: dirichlet along the
+    pipelined axis (axis 0), periodic elsewhere.  1-D pipelines along the
+    (blocked) spatial axis itself → dirichlet."""
+    return ("dirichlet",) + ("periodic",) * (ndim - 1)
+
+
+def multistep_ref(spec: StencilSpec, x: jax.Array, k: int) -> jax.Array:
+    """Oracle for stencil1d_multistep / stencil_nd_multistep."""
+    return apply_steps(spec, x, k, bc=kernel_bc(spec.ndim))
+
+
+def onestep_periodic_ref(spec: StencilSpec, x: jax.Array) -> jax.Array:
+    """Oracle for the one-step baseline kernels (fully periodic)."""
+    return apply_once(spec, x, bc="periodic")
+
+
+def block_transpose_ref(x: jax.Array, vl: int, m: int) -> jax.Array:
+    return layouts.to_transpose_layout(x, vl, m)
+
+
+def block_untranspose_ref(t: jax.Array, vl: int, m: int) -> jax.Array:
+    return layouts.from_transpose_layout(t, vl, m)

@@ -1,0 +1,121 @@
+"""Pallas SSD (Mamba2) chunk-scan kernel — Algorithm 1 at sequence scale.
+
+The bridge between the paper and the LM zoo (DESIGN.md §4): the SSD chunked
+scan is a 1-D recurrence processed in chunks, and the paper's unroll-and-jam
+pipeline maps onto it exactly:
+
+    vector set  ↔  chunk (Q tokens, VMEM-resident)
+    vrl carry   ↔  inter-chunk state h (B, H, P, N) in VMEM scratch
+    one VS load+store per slide  ↔  one chunk load + one y-chunk store
+    in-register k-step update    ↔  intra-chunk masked-decay matmul (MXU)
+
+Grid is sequential over chunks; the state never round-trips to HBM between
+chunks — per chunk HBM traffic is exactly one read of (x,B,C,dt) and one
+write of y.  TPU layout note: P (head_dim) rides the 128-lane minor dim,
+N (d_state) the second-minor; both are 64–128 in the assigned configs.
+
+Inputs are the post-conv, post-split SSD tensors (heads already expanded):
+    xh (nc, B, Q, H, P) · bm/cm (nc, B, Q, H, N) · dt (nc, B, Q, H) ·
+    a_neg (H,) negative decay rates
+Output: y (nc, B, Q, H, P);  oracle: ref.ssd_chunk_ref (token recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, h_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # (B, Q, H, P)
+    bm = b_ref[0].astype(jnp.float32)     # (B, Q, H, N)
+    cm = c_ref[0].astype(jnp.float32)
+    dt = dt_ref[0].astype(jnp.float32)    # (B, Q, H)
+    a_neg = a_ref[...]                    # (H,) < 0
+    q = x.shape[1]
+
+    da = dt * a_neg                       # (B, Q, H)
+    da_cs = jnp.cumsum(da, axis=1)        # inclusive within chunk
+
+    # ---- intra-chunk: masked decay attention (MXU matmuls) ---------------
+    cb = jnp.einsum("bqhn,bthn->bhqt", cm, bm)
+    da_h = da_cs.transpose(0, 2, 1)       # (B, H, Q)
+    decay = jnp.exp(da_h[..., :, None] - da_h[..., None, :])
+    mask = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    att = jnp.where(mask, cb * decay, 0.0)
+    att = att * dt.transpose(0, 2, 1)[..., None, :]
+    y = jnp.einsum("bhqt,bthp->bqhp", att, x)
+
+    # ---- inter-chunk: apply the carried state (the paper's vrl) ----------
+    h = h_ref[...]                        # (B, H, P, N) f32
+    y = y + jnp.einsum("bqhn,bhpn->bqhp", cm, h) * jnp.exp(da_cs)[..., None]
+
+    # ---- state update: one carry write per chunk --------------------------
+    tail = jnp.exp(da_cs[:, -1:, :] - da_cs)          # (B, Q, H)
+    bx = jnp.einsum("bqhn,bqhp->bhpn", bm, x * (dt * tail)[..., None])
+    h_ref[...] = h * jnp.exp(da_cs[:, -1, :])[..., None, None] + bx
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_chunk_scan(xh: jax.Array, bm: jax.Array, cm: jax.Array,
+                   dt: jax.Array, a_neg: jax.Array,
+                   *, interpret: bool = True) -> jax.Array:
+    """(nc, B, Q, H, P) × (nc, B, Q, H, N)² × (nc, B, Q, H) × (H,) → y."""
+    nc, b, q, h, p = xh.shape
+    n = bm.shape[-1]
+    assert bm.shape == cm.shape == (nc, b, q, h, n)
+    assert dt.shape == (nc, b, q, h)
+
+    def im5(jj):
+        return (jj, 0, 0, 0, 0)
+
+    def im4(jj):
+        return (jj, 0, 0, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1, b, q, h, p), im5),
+            pl.BlockSpec((1, b, q, h, n), im5),
+            pl.BlockSpec((1, b, q, h, n), im5),
+            pl.BlockSpec((1, b, q, h), im4),
+            pl.BlockSpec((h,), lambda jj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, b, q, h, p), im5),
+        out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
+        scratch_shapes=[pltpu.VMEM((b, h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xh, bm, cm, dt, a_neg)
+
+
+def ssd_chunk_ref(xh, bm, cm, dt, a_neg):
+    """Token-by-token recurrence oracle on the same tensors."""
+    nc, b, q, h, p = xh.shape
+    n = bm.shape[-1]
+    xf = xh.astype(jnp.float32).reshape(b * 0 + nc * q, -1) if False else None
+    x2 = xh.astype(jnp.float32).transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, p)
+    b2 = bm.astype(jnp.float32).transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, n)
+    c2 = cm.astype(jnp.float32).transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, n)
+    d2 = dt.astype(jnp.float32).transpose(1, 0, 2, 3).reshape(b, nc * q, h)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(nc * q):
+        da = jnp.exp(d2[:, t] * a_neg)                    # (B, H)
+        state = state * da[..., None, None] + \
+            (d2[:, t][..., None] * x2[:, t])[..., None] * b2[:, t][:, :, None, :]
+        ys.append(jnp.einsum("bhn,bhpn->bhp", c2[:, t], state))
+    y = jnp.stack(ys, axis=1)                             # (B, S, H, P)
+    return y.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4) \
+        .astype(xh.dtype)

@@ -1,0 +1,346 @@
+"""Pallas TPU kernels: transpose-layout + k-step unroll-and-jam stencils.
+
+TPU rendering of the paper (see DESIGN.md §2):
+
+  * vector  = one 128-lane row; VREG tile = (8, 128); VMEM tile = BlockSpec.
+  * transpose layout: the unit-stride spatial dim is blocked into
+    (nb, m, vl=128) with the local (vl × m) transpose of core/layouts.py —
+    a +1 spatial shift becomes a second-minor row shift (free renaming /
+    cheap sublane shift) instead of a 128-lane cross-lane roll.  Only the
+    2r boundary rows per vector set need a lane-carry (blend + permute),
+    built by ``vectorize.extend_vs``.
+  * k-step unroll-and-jam: the Pallas grid is sequential on a TensorCore,
+    so VMEM scratch persists across grid steps — the window of k live
+    vector sets + the ``vrl`` carries of Algorithm 1 live in scratch.  Each
+    grid step loads ONE block, stores ONE fully-updated block, and performs
+    k block updates: HBM traffic is 1 read + 1 write per k time steps
+    (arithmetic intensity ↑ k×, the paper's §3.3 claim, at VMEM scale).
+  * multidimensional: the pipeline runs along the outermost spatial axis
+    (y for 2-D, z for 3-D); inner spatial dims stay VMEM-resident per grid
+    step, so their halos are internal (rolls on major axes); the
+    unit-stride dim uses the transpose layout.  BC: dirichlet along the
+    pipelined axis, periodic elsewhere (kernels' oracle in kernels/ref.py).
+
+Grid-step uniform formulation (boot folded into the steady loop): at grid
+step j, window position i holds block ``j-k+i`` at time ``k-1-i``; blocks
+outside [0, nb) are masked; output block ``max(j-k, 0)`` is (re)written
+every step — the final (j = b+k) write is the completed block, and on TPU
+the out buffer only flushes when its block index changes, so intermediate
+writes never touch HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.stencils import StencilSpec
+from repro.core.vectorize import extend_vs
+
+DEFAULT_VL = 128   # TPU lane count
+DEFAULT_M = 8      # TPU sublane count (f32)
+
+
+def _ring_masks_np(vl: int, m: int, r: int):
+    """(m, vl) masks of the first/last r elements of a block (see
+    core.unroll_jam._ring_masks)."""
+    fm = np.zeros((m, vl), bool)
+    lm = np.zeros((m, vl), bool)
+    for e in range(r):
+        fm[e % m, e // m] = True
+        le = vl * m - 1 - e
+        lm[le % m, le // m] = True
+    return fm, lm
+
+
+def _tap_sum_1d(spec: StencilSpec, ext: jax.Array, m: int) -> jax.Array:
+    r = spec.r
+    acc = None
+    for off, c in spec.taps:
+        sl = lax.slice_in_dim(ext, r + off[-1], r + off[-1] + m, axis=0)
+        term = sl * jnp.asarray(c, ext.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# 1-D: pipeline along the block axis (pure Algorithm 1).
+# ---------------------------------------------------------------------------
+
+def _kernel_1d(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
+               nb: int, m: int, vl: int, k: int, edge_mask: bool = True):
+    r = spec.r
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        win_ref[...] = jnp.zeros_like(win_ref)
+        vrl_ref[...] = jnp.zeros_like(vrl_ref)
+
+    # ring masks built in-kernel (pallas kernels may not capture consts):
+    # element e of a block sits at (row e % m, lane e // m); with r <= m the
+    # first r elements are lane 0 / rows < r, the last r lane vl-1 / rows
+    # >= m-r (cf. _ring_masks_np, property-tested against this closed form).
+    rows = lax.broadcasted_iota(jnp.int32, (m, vl), 0)
+    lanes = lax.broadcasted_iota(jnp.int32, (m, vl), 1)
+    first_mask = (lanes == 0) & (rows < r)
+    last_mask = (lanes == vl - 1) & (rows >= m - r)
+
+    incoming = t_ref[0]                           # (m, vl)
+    ws = [win_ref[i] for i in range(k)] + [incoming]
+    new_vr = [None] * k
+    for i in range(k - 1, -1, -1):                # paper's i = k..1
+        b = j - (k - i)                           # block held at position i
+        vs = ws[i]
+        new_vr[i] = vs[m - r:, :]                 # preserve pre-update tail
+        left_tail = vrl_ref[i]                    # left block tail, same time
+        right_head = ws[i + 1][:r, :]             # right block, just updated
+        # Assemble (blend + permute) — 2 ops per boundary vector (Fig. 3)
+        left_rows = jnp.roll(vs[m - r:, :], 1, axis=-1)
+        left_rows = left_rows.at[:, 0].set(left_tail[:, -1])
+        right_rows = jnp.roll(vs[:r, :], -1, axis=-1)
+        right_rows = right_rows.at[:, -1].set(right_head[:, 0])
+        ext = jnp.concatenate([left_rows, vs, right_rows], axis=0)
+        new = _tap_sum_1d(spec, ext, m)
+        keep = (b < 0) | (b >= nb)
+        if edge_mask:   # dirichlet ring; False → caller crops halo blocks
+            keep = keep | ((b == 0) & first_mask) | \
+                ((b == nb - 1) & last_mask)
+        ws[i] = jnp.where(keep, vs, new)
+    o_ref[0] = ws[0]
+    for i in range(k):
+        win_ref[i] = ws[i + 1]
+        vrl_ref[i] = new_vr[i]
+
+
+def stencil1d_multistep(spec: StencilSpec, t: jax.Array, k: int,
+                        *, interpret: bool = True,
+                        edge_mask: bool = True) -> jax.Array:
+    """t: (nb, m, vl) transpose-layout input → k-step update (dirichlet).
+
+    edge_mask=False leaves the first/last blocks un-masked (garbage within
+    k·r of the domain edge) — used by the distributed halo path, which
+    exchanges whole halo blocks and crops them after the sweep."""
+    nb, m, vl = t.shape
+    r = spec.r
+    assert r <= m and r <= vl
+    kern = functools.partial(_kernel_1d, spec=spec, nb=nb, m=m, vl=vl, k=k,
+                             edge_mask=edge_mask)
+    return pl.pallas_call(
+        kern,
+        grid=(nb + k,),
+        in_specs=[pl.BlockSpec((1, m, vl),
+                               lambda j: (jnp.minimum(j, nb - 1), 0, 0))],
+        out_specs=pl.BlockSpec((1, m, vl),
+                               lambda j: (jnp.maximum(j - k, 0), 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, vl), t.dtype),
+        scratch_shapes=[pltpu.VMEM((k, m, vl), t.dtype),
+                        pltpu.VMEM((k, r, vl), t.dtype)],
+        interpret=interpret,
+    )(t)
+
+
+# ---------------------------------------------------------------------------
+# n-D (n = 2, 3): pipeline along axis 0; inner dims VMEM-resident.
+# ---------------------------------------------------------------------------
+
+def _kernel_nd(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
+               n0t: int, t0: int, k: int):
+    """t_ref block: (t0, *mid, nb, m, vl); pipeline along axis 0."""
+    r = spec.r
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        win_ref[...] = jnp.zeros_like(win_ref)
+        vrl_ref[...] = jnp.zeros_like(vrl_ref)
+
+    incoming = t_ref[...]
+    m = incoming.shape[-2]
+    ndim_mid = incoming.ndim - 4                  # spatial dims between 0 & x
+    ws = [win_ref[i] for i in range(k)] + [incoming]
+    new_vr = [None] * k
+    row_idx = lax.broadcasted_iota(
+        jnp.int32, (t0,) + (1,) * (incoming.ndim - 1), 0)
+    for i in range(k - 1, -1, -1):
+        b = j - (k - i)
+        tile = ws[i]
+        new_vr[i] = tile[t0 - r:]
+        up_rows = vrl_ref[i]                      # (r, *mid, nb, m, vl)
+        down_rows = ws[i + 1][:r]
+        ext0 = jnp.concatenate([up_rows, tile, down_rows], axis=0)
+        extx = extend_vs(ext0, r)                 # lane-carry on x (periodic)
+        acc = None
+        for off, c in spec.taps:
+            o0, ox = off[0], off[-1]
+            sl = lax.slice_in_dim(extx, r + o0, r + o0 + t0, axis=0)
+            for ax, o in enumerate(off[1:-1]):
+                if o:
+                    sl = jnp.roll(sl, -o, axis=1 + ax)   # periodic mid dims
+            sl = lax.slice_in_dim(sl, r + ox, r + ox + m, axis=sl.ndim - 2)
+            term = sl * jnp.asarray(c, tile.dtype)
+            acc = term if acc is None else acc + term
+        # dirichlet ring along axis 0 on the global first/last tiles
+        ring = ((b == 0) & (row_idx < r)) | \
+               ((b == n0t - 1) & (row_idx >= t0 - r))
+        keep = ring | (b < 0) | (b >= n0t)
+        ws[i] = jnp.where(keep, tile, acc)
+    o_ref[...] = ws[0]
+    for i in range(k):
+        win_ref[i] = ws[i + 1]
+        vrl_ref[i] = new_vr[i]
+
+
+def stencil_nd_multistep(spec: StencilSpec, t: jax.Array, k: int, t0: int,
+                         *, interpret: bool = True) -> jax.Array:
+    """t: (n0, *mid, nb, m, vl) — transpose layout on the minor spatial dim.
+
+    Pipelines k time steps along axis 0 in tiles of t0 rows.  BC: dirichlet
+    along axis 0, periodic along every other axis."""
+    n0 = t.shape[0]
+    r = spec.r
+    assert n0 % t0 == 0 and t0 >= r, (n0, t0, r)
+    n0t = n0 // t0
+    assert spec.r <= t.shape[-2]
+    block = (t0,) + t.shape[1:]
+    nd = t.ndim
+    kern = functools.partial(_kernel_nd, spec=spec, n0t=n0t, t0=t0, k=k)
+    zeros_tail = (0,) * (nd - 1)
+    return pl.pallas_call(
+        kern,
+        grid=(n0t + k,),
+        in_specs=[pl.BlockSpec(block,
+                               lambda j: (jnp.minimum(j, n0t - 1),) + zeros_tail)],
+        out_specs=pl.BlockSpec(block,
+                               lambda j: (jnp.maximum(j - k, 0),) + zeros_tail),
+        out_shape=jax.ShapeDtypeStruct(t.shape, t.dtype),
+        scratch_shapes=[pltpu.VMEM((k,) + block, t.dtype),
+                        pltpu.VMEM((k, r) + block[1:], t.dtype)],
+        interpret=interpret,
+    )(t)
+
+
+# ---------------------------------------------------------------------------
+# §3.5 — block transpose kernel (the layout transform itself).
+# ---------------------------------------------------------------------------
+
+def _kernel_transpose(x_ref, o_ref):
+    o_ref[...] = jnp.swapaxes(x_ref[...], -1, -2)
+
+
+def block_transpose(x: jax.Array, vl: int, m: int,
+                    *, interpret: bool = True, blocks_per_step: int = 8
+                    ) -> jax.Array:
+    """(N,) → (nb, m, vl) transpose layout via an in-VMEM tile transpose.
+
+    On TPU each (vl, m) → (m, vl) tile transpose lowers to the Mosaic
+    sublane/lane transpose unit — the structural analogue of the paper's
+    8-instruction in-register transpose; we never materialize a global DLT.
+    """
+    n = x.shape[-1]
+    nb = n // (vl * m)
+    assert n % (vl * m) == 0
+    g = max(1, min(blocks_per_step, nb))
+    while nb % g:
+        g -= 1
+    xb = x.reshape(nb, vl, m)
+    return pl.pallas_call(
+        _kernel_transpose,
+        grid=(nb // g,),
+        in_specs=[pl.BlockSpec((g, vl, m), lambda j: (j, 0, 0))],
+        out_specs=pl.BlockSpec((g, m, vl), lambda j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, vl), x.dtype),
+        interpret=interpret,
+    )(xb)
+
+
+def block_untranspose(t: jax.Array, vl: int, m: int,
+                      *, interpret: bool = True, blocks_per_step: int = 8
+                      ) -> jax.Array:
+    nb = t.shape[0]
+    g = max(1, min(blocks_per_step, nb))
+    while nb % g:
+        g -= 1
+    out = pl.pallas_call(
+        _kernel_transpose,
+        grid=(nb // g,),
+        in_specs=[pl.BlockSpec((g, m, vl), lambda j: (j, 0, 0))],
+        out_specs=pl.BlockSpec((g, vl, m), lambda j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, vl, m), t.dtype),
+        interpret=interpret,
+    )(t)
+    return out.reshape(nb * vl * m)
+
+
+# ---------------------------------------------------------------------------
+# Baseline one-step kernels (for the layout A/B comparison in benchmarks):
+# natural layout with cross-lane rolls vs transpose layout.
+# ---------------------------------------------------------------------------
+
+def _kernel_naive_1d(x_ref, o_ref, *, spec: StencilSpec):
+    x = x_ref[...]                                # (rows, vl) natural layout
+    rows, vl = x.shape
+    acc = None
+    for off, c in spec.taps:
+        o = off[-1]
+        # natural layout: +1 spatial shift crosses lanes — the data
+        # alignment conflict: a full cross-lane roll per tap.
+        sl = jnp.roll(x.reshape(-1), -o).reshape(rows, vl)
+        term = sl * jnp.asarray(c, x.dtype)
+        acc = term if acc is None else acc + term
+    o_ref[...] = acc
+
+
+def stencil1d_naive_onestep(spec: StencilSpec, x: jax.Array, vl: int = DEFAULT_VL,
+                            *, interpret: bool = True) -> jax.Array:
+    """One periodic step, natural layout: per-tap 128-lane rolls (baseline)."""
+    n = x.shape[-1]
+    assert n % vl == 0
+    xb = x.reshape(n // vl, vl)
+    out = pl.pallas_call(
+        functools.partial(_kernel_naive_1d, spec=spec),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(xb.shape, lambda j: (0, 0))],
+        out_specs=pl.BlockSpec(xb.shape, lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(xb.shape, x.dtype),
+        interpret=interpret,
+    )(xb)
+    return out.reshape(n)
+
+
+def _kernel_transpose_1d(t_ref, o_ref, *, spec: StencilSpec):
+    t = t_ref[...]                                # (nb, m, vl)
+    m = t.shape[-2]
+    ext = extend_vs(t, spec.r)
+    o_ref[...] = _tap_sum_nd(spec, ext, m)
+
+
+def _tap_sum_nd(spec, ext, m):
+    r = spec.r
+    acc = None
+    for off, c in spec.taps:
+        sl = lax.slice_in_dim(ext, r + off[-1], r + off[-1] + m,
+                              axis=ext.ndim - 2)
+        term = sl * jnp.asarray(c, ext.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def stencil1d_transpose_onestep(spec: StencilSpec, t: jax.Array,
+                                *, interpret: bool = True) -> jax.Array:
+    """One periodic step in the transpose layout: per vector set, 2r
+    assembled rows (lane-carry) + pure second-minor slices."""
+    nb, m, vl = t.shape
+    return pl.pallas_call(
+        functools.partial(_kernel_transpose_1d, spec=spec),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(t.shape, lambda j: (0, 0, 0))],
+        out_specs=pl.BlockSpec(t.shape, lambda j: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(t.shape, t.dtype),
+        interpret=interpret,
+    )(t)

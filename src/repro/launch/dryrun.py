@@ -1,0 +1,395 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  This override exists ONLY here — tests/benches see 1 device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+import numpy as np                           # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs import base as cfgbase    # noqa: E402
+from repro.distributed import sharding       # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.models import zoo                 # noqa: E402
+from repro.roofline import analysis          # noqa: E402
+from repro.train import optimizer as opt_mod  # noqa: E402
+from repro.train import train_loop           # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks", "results",
+                           "dryrun")
+
+"""Multi-pod dry-run: .lower().compile() for every (arch × shape × mesh).
+
+For each cell we build the REAL program (train_step with optimizer update
+and microbatching for train shapes; model.prefill for prefill; decode_step
+for decode shapes), lower it against ShapeDtypeStruct inputs with the
+production shardings, compile at 256 / 512 partitions, and record:
+
+  * memory_analysis()     — proves the per-device working set fits HBM
+  * cost_analysis()       — per-device HLO flops / bytes (roofline terms)
+  * post-SPMD HLO         — collective op census → collective bytes
+
+Results land incrementally in benchmarks/results/dryrun/<cell>.json so an
+interrupted sweep resumes where it stopped.
+"""
+
+
+def _microbatches(arch: cfgbase.ArchConfig, shape: cfgbase.ShapeConfig,
+                  dp: int) -> int:
+    local = max(1, shape.global_batch // dp)
+    target_micro_local = 2
+    n = max(1, local // target_micro_local)
+    while shape.global_batch % (dp * 1) or local % n:
+        n -= 1
+    return max(1, n)
+
+
+def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               opts: dict | None = None):
+    """Returns (jitted_fn, example_args_as_SDS) for one cell.
+
+    opts (perf knobs, EXPERIMENTS.md §Perf):
+      sp: bool            — sequence-parallel residual sharding
+      microbatches: int   — override gradient-accumulation count
+      serve_dtype: str    — 'f32' (baseline) | 'bf16' serving weights
+    """
+    opts = opts or {}
+    arch = cfgbase.get_arch(arch_name)
+    shape = cfgbase.SHAPES[shape_name]
+    layout = opts.get("layout") or "tp"
+    if layout == "ep":
+        from repro.launch.mesh import make_ep_mesh
+        mesh = make_ep_mesh(multi_pod=multi_pod, ep=opts.get("ep", 8))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    model = zoo.build(arch)
+    dp = int(np.prod([dict(mesh.shape)[a]
+                      for a in sharding.batch_axes(mesh)]))
+
+    fsdp_layout = layout in ("fsdp", "ep")
+    if fsdp_layout:
+        ba_fn = sharding.ep_batch_axes if layout == "ep" \
+            else sharding.fsdp_batch_axes
+        dp = int(np.prod([dict(mesh.shape)[a] for a in ba_fn(mesh)]))
+
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    dequant = None
+    if opts.get("serve_dtype") == "bf16" and shape.kind != "train":
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            params_sds)
+    elif opts.get("serve_dtype") == "int8" and shape.kind != "train":
+        # weight-only int8 serving: ≥2-D tensors stored int8 + one f32
+        # scale per output column; dequant at entry — XLA fuses the
+        # (cast × scale) into each consumer inside the layer scan, so HBM
+        # weight reads drop to 1 byte/param (§Perf decode iteration 3).
+        def _q(s):
+            if len(s.shape) >= 2 and s.dtype == jnp.float32:
+                return {"q": jax.ShapeDtypeStruct(s.shape, jnp.int8),
+                        "s": jax.ShapeDtypeStruct(s.shape[-1:], jnp.float32)}
+            return jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype)
+        params_sds = jax.tree.map(_q, params_sds)
+
+        def dequant(p):
+            def f(leaf):
+                return leaf
+            def walk(t):
+                if isinstance(t, dict) and set(t) == {"q", "s"}:
+                    return t["q"].astype(jnp.bfloat16) * \
+                        t["s"].astype(jnp.bfloat16)
+                if isinstance(t, dict):
+                    return {k: walk(v) for k, v in t.items()}
+                if isinstance(t, (list, tuple)):
+                    return type(t)(walk(v) for v in t)
+                return t
+            return walk(p)
+    if layout == "ep":
+        pspecs = sharding.ep_param_specs(params_sds, mesh)
+    elif layout == "fsdp":
+        pspecs = sharding.fsdp_param_specs(params_sds, mesh)
+    else:
+        pspecs = sharding.param_specs(params_sds, mesh, arch)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    params_in = jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        params_sds, pshard)
+
+    def mk_batch_specs(b_sds):
+        if layout == "ep":
+            ba = sharding.ep_batch_axes(mesh)
+            return jax.tree.map(
+                lambda leaf: P(ba, *([None] * (len(leaf.shape) - 1)))
+                if leaf.shape and leaf.shape[0] % dp == 0
+                else P(*([None] * len(leaf.shape))), b_sds)
+        if layout == "fsdp":
+            return sharding.fsdp_batch_specs(b_sds, mesh)
+        return sharding.batch_specs(b_sds, mesh)
+
+    if shape.kind == "train":
+        n_micro = opts.get("microbatches") or _microbatches(arch, shape, dp)
+        act_sharding = None
+        if opts.get("sp"):
+            ba = sharding.batch_axes(mesh)
+            act_sharding = NamedSharding(mesh, P(ba, "model", None))
+        tc = train_loop.TrainConfig(
+            opt=opt_mod.OptConfig(total_steps=10_000),
+            n_microbatches=n_micro, act_sharding=act_sharding,
+            remat=opts.get("remat") or "full")
+        batch_sds = zoo.batch_inputs(arch, shape.global_batch, shape.seq_len,
+                                     concrete=False)
+        if not fsdp_layout:
+            fn, _ = train_loop.make_train_step(model, tc, mesh, params_sds,
+                                               batch_sds)
+        opt_sds = jax.eval_shape(opt_mod.init_opt_state, params_sds)
+        bshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              mk_batch_specs(batch_sds))
+        ospecs = sharding.opt_state_specs(None, pspecs, mesh)
+        if fsdp_layout:
+            import functools as _ft
+            oshard_ = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(_ft.partial(train_loop.train_step, model, tc),
+                         in_shardings=(pshard, oshard_, bshard),
+                         donate_argnums=(0, 1))
+        oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        opt_in = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            opt_sds, oshard,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        batch_in = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            batch_sds, bshard)
+        args = (params_in, opt_in, batch_in)
+        extra = {"n_microbatches": n_micro, "sp": bool(opts.get("sp")),
+                 "layout": layout, "remat": opts.get("remat") or "full"}
+    elif shape.kind == "prefill":
+        batch_sds = zoo.batch_inputs(arch, shape.global_batch, shape.seq_len,
+                                     concrete=False)
+        batch_sds.pop("labels")
+        bshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              mk_batch_specs(batch_sds))
+        batch_in = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            batch_sds, bshard)
+        fn = jax.jit(lambda p, b: model.prefill(p, b),
+                     in_shardings=(pshard, bshard))
+        args = (params_in, batch_in)
+        extra = {}
+    else:  # decode: serve_step — one new token against a seq_len cache
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              sharding.cache_specs(cache_sds, mesh, arch))
+        cache_in = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            cache_sds, cshard)
+        tok_sds = zoo.decode_inputs(arch, shape.global_batch, concrete=False)
+        tok_sds.pop("labels")
+        tshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              sharding.batch_specs(tok_sds, mesh))
+        tok_in = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            tok_sds, tshard)
+        pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+        if dequant is not None:
+            fn = jax.jit(
+                lambda p, c, b, pos: model.decode_step(dequant(p), c, b,
+                                                       pos),
+                in_shardings=(pshard, cshard, tshard, None),
+                donate_argnums=(1,))
+        else:
+            fn = jax.jit(
+                lambda p, c, b, pos: model.decode_step(p, c, b, pos),
+                in_shardings=(pshard, cshard, tshard, None),
+                donate_argnums=(1,))
+        args = (params_in, cache_in, tok_in, pos_in)
+        extra = {"serve_dtype": opts.get("serve_dtype", "f32")}
+    return arch, shape, mesh, fn, args, extra
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, force: bool = False,
+             opts: dict | None = None, suffix: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch_name.replace('-', '_').replace('.', 'p')}" \
+              f"__{shape_name}__{mesh_name}" + (f"__{suffix}" if suffix
+                                                else "")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    t0 = time.perf_counter()
+    arch, shape, mesh, fn, args, extra = build_cell(
+        arch_name, shape_name, multi_pod, opts)
+    n_dev = int(np.prod(list(dict(mesh.shape).values())))
+
+    lowered = fn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    colls = analysis.parse_collectives(hlo)
+    mf = analysis.lm_model_flops(arch, shape.kind, shape.seq_len,
+                                 shape.global_batch)
+    roof = analysis.summarize(cost, hlo, n_dev, mf)
+
+    # primary roofline: analytic model (HLO cost_analysis counts scan
+    # bodies once — see roofline/model.py docstring); HLO kept as the
+    # structural cross-check (collective census, memory fit).
+    from repro.roofline import model as rmodel
+    opts = opts or {}
+    knobs = rmodel.PerfKnobs(
+        n_microbatches=extra.get("n_microbatches", 1),
+        remat=opts.get("remat") or "full",
+        serve_dtype_bytes={"f32": 4, "bf16": 2, "int8": 1}[
+            opts.get("serve_dtype") or "f32"])
+    if opts.get("layout") == "ep" and shape.kind == "train":
+        aroof = rmodel.train_cell_ep(arch, shape,
+                                     512 if multi_pod else 256,
+                                     opts.get("ep", 8), knobs)
+    else:
+        if opts.get("layout") in ("fsdp", "ep"):
+            mfac = rmodel.MeshFactors(dp=512 if multi_pod else 256, tp=1,
+                                      fsdp=256)
+        else:
+            mfac = rmodel.MeshFactors.multi() if multi_pod \
+                else rmodel.MeshFactors.single()
+        aroof = rmodel.cell(arch, shape, mfac, knobs)
+
+    by_kind = {}
+    for c in colls:
+        by_kind.setdefault(c["kind"], {"count": 0, "operand_bytes": 0})
+        by_kind[c["kind"]]["count"] += 1
+        by_kind[c["kind"]]["operand_bytes"] += c["operand_bytes"]
+
+    result = {
+        "cell": cell_id, "arch": arch.name, "shape": shape.name,
+        "mesh": ("pod=2," if multi_pod else "") + "data=16,model=16",
+        "n_devices": n_dev, "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params": arch.param_count(),
+        "active_params": arch.active_param_count(),
+        **extra,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_d,
+        "collectives": by_kind,
+        "roofline_hlo": roof.to_dict(),
+        "roofline": aroof.to_dict(),
+    }
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def all_cells() -> list[tuple[str, str, bool]]:
+    cells = []
+    for arch_id in cfgbase.ARCH_IDS:
+        arch = cfgbase.get_arch(arch_id)
+        for shape in cfgbase.cells(arch):
+            for multi in (False, True):
+                cells.append((arch.name, shape.name, multi))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    # perf knobs (§Perf hillclimbing)
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel residual sharding")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--serve-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32")
+    ap.add_argument("--layout", choices=["tp", "fsdp", "ep"], default="tp",
+                    help="fsdp = pure-DP + ZeRO-3 (model axis → data); "
+                         "ep = expert-parallel mesh re-axis (MoE)")
+    ap.add_argument("--remat", choices=["full", "dots", "none"],
+                    default="full")
+    ap.add_argument("--suffix", default="",
+                    help="result-file suffix (e.g. 'opt1')")
+    args = ap.parse_args()
+    opts = {"sp": args.sp, "microbatches": args.microbatches,
+            "serve_dtype": args.serve_dtype, "layout": args.layout,
+            "remat": args.remat}
+
+    if args.list:
+        for c in all_cells():
+            print(c)
+        return
+
+    todo = []
+    if args.all:
+        todo = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        todo = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = []
+    for arch_name, shape_name, multi in todo:
+        tag = f"{arch_name} × {shape_name} × " \
+              f"{'multi(512)' if multi else 'single(256)'}"
+        try:
+            r = run_cell(arch_name, shape_name, multi, args.out, args.force,
+                         opts=opts, suffix=args.suffix)
+            roof = r["roofline"]
+            print(f"[ok] {tag}: compile {r.get('compile_s', '?')}s  "
+                  f"bottleneck={roof['bottleneck']}  "
+                  f"t_bound={max(roof['t_compute_s'], roof['t_memory_s'], roof['t_collective_s']):.4f}s  "
+                  f"mfu_bound={roof['mfu_bound']:.3f}")
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            print(f"[FAIL] {tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nDRY-RUN PASS")
+
+
+if __name__ == "__main__":
+    main()

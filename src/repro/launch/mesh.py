@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Shapes: one v5e pod = 16×16 = 256 chips
+(data × model); multi-pod prepends a pure-DP 'pod' axis (2 × 256 = 512).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n])   # single-pod uses the first 256
+    return jax.make_mesh(shape, axes, devices=devs)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over the actually-available devices (tests/examples)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    a = int(np.sqrt(n))
+    while n % a:
+        a -= 1
+    return jax.make_mesh((a, n // a), ("data", "model"),
+                         devices=np.asarray(devs[:n]))
+
+
+def make_ep_mesh(*, multi_pod: bool = False, ep: int = 8):
+    """Same physical chips as the production mesh, re-axised for expert
+    parallelism: (data, expert, model) with data·expert·model = 256/pod.
+    Used by the --layout ep perf variant (EXPERIMENTS.md §Perf)."""
+    model = 256 // (16 * ep)
+    shape = (2, 16, ep, model) if multi_pod else (16, ep, model)
+    axes = ("pod", "data", "expert", "model") if multi_pod \
+        else ("data", "expert", "model")
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n])
+    return jax.make_mesh(shape, axes, devices=devs)

@@ -1,0 +1,59 @@
+"""End-to-end training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
+        --steps 200 --batch 16 --seq 128 --ckpt /tmp/ckpt
+
+--smoke uses the reduced config (CPU-runnable); on real hardware the full
+config + production mesh engage automatically (mesh axes fold onto the
+devices jax reports).  Restart the same command after a crash and it
+resumes from the newest complete checkpoint (fault tolerance path is
+exercised by tests/test_train.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_arch
+from repro.launch.mesh import make_test_mesh
+from repro.models import zoo
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over all visible devices")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = zoo.build(cfg)
+    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    tc = train_loop.TrainConfig(
+        opt=opt_mod.OptConfig(peak_lr=args.lr, warmup_steps=20,
+                              total_steps=args.steps),
+        n_microbatches=args.microbatches)
+    mesh = make_test_mesh() if args.mesh else None
+    train_loop.train(model, tc, steps=args.steps, batch=args.batch,
+                     seq=args.seq, mesh=mesh, checkpoint_dir=args.ckpt,
+                     ckpt_every=args.ckpt_every)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Attention: MHA/GQA/MQA with RoPE or M-RoPE, causal + sliding window,
+full-sequence (train/prefill) and single-token decode against a KV cache.
+
+Decode caches:
+  * full causal: cache length = max_seq (written at absolute position)
+  * sliding window W: ring buffer of length W (the O(W) state that makes
+    SWA archs honest `long_500k` candidates)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": blocks.dense_init(ks[0], d, h * hd),
+        "wk": blocks.dense_init(ks[1], d, kv * hd),
+        "wv": blocks.dense_init(ks[2], d, kv * hd),
+        "wo": blocks.dense_init(ks[3], h * hd, d),
+    }
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions, pos3=None):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    if cfg.mrope_sections is not None:
+        assert pos3 is not None
+        q = blocks.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = blocks.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q: (B,S,H,D); k,v: (B,T,KV,D); mask: (B,1,S,T) or (1,1,S,T) bool."""
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    groups = h // kv
+    b, s, _, hd = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, s, kv, groups, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                       scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, window: Optional[int], dtype=bool) -> jax.Array:
+    """(1, 1, S, S) causal (optionally banded) mask."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m[None, None]
+
+
+def attention_full(p, x, cfg: ArchConfig, positions=None, pos3=None):
+    """Train/prefill path. x: (B, S, D) → (B, S, D); returns (out, (k, v))
+    so prefill can seed the decode cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions, pos3)
+    mask = causal_mask(s, cfg.window)
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, T, KV, D) — T = max_seq or window
+    v: jax.Array
+    # write cursor is carried by the caller (same for all layers)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                  dtype=blocks.ACT_DTYPE) -> KVCache:
+    t = min(max_seq, cfg.window) if cfg.window else max_seq
+    shape = (batch, t, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(p, x, cache: KVCache, pos, cfg: ArchConfig, pos3=None):
+    """x: (B, 1, D); pos: scalar int32 absolute position of the new token.
+    Ring-buffer write for SWA; full-length write otherwise."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, pos3)
+    t = cache.k.shape[1]
+    slot = (pos % t) if cfg.window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            slot, axis=1)
+    # mask: valid cache slots (absolute position <= pos, within window)
+    idx = jnp.arange(t)
+    if cfg.window:
+        # ring: slot holds absolute position  pos - ((slot - idx) mod t)
+        age = (slot - idx) % t
+        abs_pos = pos - age
+        valid = (abs_pos >= 0) & (age < t)
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, :]                 # (1,1,1,T)
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), KVCache(k, v)

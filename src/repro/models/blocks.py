@@ -1,0 +1,109 @@
+"""Shared model blocks: norms, rotary embeddings (incl. M-RoPE), inits.
+
+Pure-function style: ``init_*`` builds param pytrees (f32 masters),
+``apply`` fns compute in the activation dtype (bf16 by default)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (d_in, d_out), 1.0 / np.sqrt(d_in),
+                                 dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL M-RoPE: positions3 (..., S, 3) = (t, h, w) ids; the D/2
+    frequency slots are split into |sections| groups, each rotated by its
+    own positional stream.  sections sums to head_dim/2."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                     # (D/2,)
+    # pick which positional stream drives each frequency slot
+    sel = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    sel = jnp.asarray(sel)                           # (D/2,)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sel, positions3.shape[:-1] + (d // 2,)).astype(jnp.int32),
+        axis=-1)                                     # (..., S, D/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":
+        return lambda v: jnp.square(jax.nn.relu(v))
+    if name in ("swiglu", "geglu"):
+        # gate nonlinearity only; gating handled by the FFN
+        return jax.nn.silu if name == "swiglu" else jax.nn.gelu
+    raise ValueError(name)
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")

@@ -1,0 +1,28 @@
+"""Dense FFN variants: SwiGLU / GeGLU (gated), squared-ReLU / GELU (plain)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": blocks.dense_init(ks[0], d_model, d_ff),
+        "w_out": blocks.dense_init(ks[1], d_ff, d_model),
+    }
+    if blocks.is_gated(act):
+        p["w_gate"] = blocks.dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def apply_ffn(p, x: jax.Array, act: str) -> jax.Array:
+    fn = blocks.act_fn(act)
+    h = x @ p["w_in"].astype(x.dtype)
+    if blocks.is_gated(act):
+        h = fn(x @ p["w_gate"].astype(x.dtype)) * h
+    else:
+        h = fn(h)
+    return h @ p["w_out"].astype(x.dtype)

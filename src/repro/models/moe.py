@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN — GShard/Switch-style capacity dispatch.
+
+Tokens are processed in groups of ``moe_group_size``; per group each token's
+top-k experts get a capacity slot (C = k·g/E·capacity_factor, rounded up to
+a multiple of 8 for TPU tiling).  Dispatch/combine are one-hot einsums —
+fully static shapes, GSPMD-friendly:
+
+  * experts axis E shards over the 'model' mesh axis (expert parallelism)
+    when divisible (moonshot 64e/16 = 4 per shard); otherwise GSPMD pads
+    (mixtral 8e over 16 ⇒ the expert weights also shard over d_ff, see
+    distributed/sharding.py).
+  * the dispatch einsum induces the token all-to-all; the combine einsum the
+    return path.
+
+A standard load-balance auxiliary loss (Switch §4) is returned alongside.
+Dropped tokens (capacity overflow) fall through the residual connection.
+
+Shared experts (DeepSeek/Moonlight style) are a dense FFN of hidden size
+n_shared·moe_d_ff applied to every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.ffn import init_ffn, apply_ffn
+
+
+def _capacity(cfg: ArchConfig, g: int) -> int:
+    c = int(np.ceil(cfg.top_k * g / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def init_moe(key, cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": blocks.truncated_normal_init(ks[0], (d, e), scale),
+        "w_in": blocks.truncated_normal_init(ks[1], (e, d, f), scale),
+        "w_gate": blocks.truncated_normal_init(ks[2], (e, d, f), scale),
+        "w_out": blocks.truncated_normal_init(ks[3], (e, f, d),
+                                              1.0 / np.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks[4], d, cfg.n_shared_experts * f, "swiglu")
+    return p
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig):
+    """x: (B, S, D) → (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    g = min(cfg.moe_group_size, t)
+    while t % g:
+        g -= 1
+    n_groups = t // g
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, g)
+
+    xg = x.reshape(n_groups, g, d)
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, g, E)
+
+    top_vals, top_idx = jax.lax.top_k(probs, k)           # (G, g, k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    # sequential slot assignment (GShard): earlier slots get priority
+    counts = jnp.zeros((n_groups, e), jnp.int32)
+    dispatch = jnp.zeros((n_groups, g, e, cap), x.dtype)
+    combine = jnp.zeros((n_groups, g, e, cap), x.dtype)
+    for slot in range(k):
+        oh = jax.nn.one_hot(top_idx[..., slot], e, dtype=jnp.int32)
+        pos = counts[:, None, :] + jnp.cumsum(oh, axis=1) - oh   # (G, g, E)
+        counts = counts + jnp.sum(oh, axis=1)
+        keep = (pos < cap) & (oh > 0)
+        slot_oh = keep[..., None] & \
+            (pos[..., None] == jnp.arange(cap)[None, None, None, :])
+        slot_oh = slot_oh.astype(x.dtype)
+        dispatch = dispatch + slot_oh
+        combine = combine + slot_oh * top_vals[..., slot, None, None] \
+            .astype(x.dtype)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_in"].astype(x.dtype))
+    gate = jnp.einsum("gecd,edf->gecf", expert_in,
+                      p["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(gate) * h
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(x.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+    y = y.reshape(b, s, d)
+
+    # Switch load-balance aux: E · Σ_e f_e · P_e  (per group, then mean)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32), axis=1)
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    if cfg.n_shared_experts:
+        y = y + apply_ffn(p["shared"], x, "swiglu")
+    return y, aux

@@ -1,0 +1,215 @@
+"""Mamba2 / SSD (state-space duality) block — chunked scan.
+
+The SSD chunked algorithm is the transformer-era rendering of the paper's
+temporal blocking: the sequence is cut into VMEM-sized chunks; within a
+chunk the recurrence is computed as a (masked, decay-weighted) attention-
+like matmul (MXU-friendly); across chunks only the (H, P, N) state is
+carried — exactly the ``vrl`` carry of Algorithm 1, one chunk = one vector
+set (DESIGN.md §4).
+
+Layer structure follows mamba_ssm v2: in_proj → causal depthwise conv on
+(x,B,C) → SSD → gated RMSNorm → out_proj.
+
+Shapes: B batch, S seq, H heads, P head_dim, N d_state, G groups, Q chunk.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+
+
+def init_ssm(key, cfg: ArchConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    convdim = di + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": blocks.dense_init(ks[0], d, 2 * di + 2 * g * n + h),
+        "conv_w": blocks.truncated_normal_init(ks[1], (cfg.ssm_conv, convdim),
+                                               1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((convdim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, h, dtype=jnp.float32))),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out_proj": blocks.dense_init(ks[2], di, d),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, gn, h = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, cfg: ArchConfig):
+    """Depthwise causal conv along S. xbc: (B, S, convdim)."""
+    kw = cfg.ssm_conv
+    w = p["conv_w"].astype(xbc.dtype)                  # (kw, convdim)
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(kw))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(y.dtype)
+
+
+class SSMState(NamedTuple):
+    h: jax.Array           # (B, H, P, N) f32
+    conv: jax.Array        # (B, kw-1, convdim)
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int,
+                   dtype=blocks.ACT_DTYPE) -> SSMState:
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    convdim = cfg.d_inner + 2 * g * n
+    return SSMState(
+        jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, n), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, convdim), dtype))
+
+
+def ssd_full(p, x: jax.Array, cfg: ArchConfig,
+             return_state: bool = False):
+    """Full-sequence SSD. x: (B, S, D) → (B, S, D) [, final SSMState]."""
+    bsz, s, _ = x.shape
+    h_heads, pdim, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_groups
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(p, xbc, cfg)
+    xin = xbc[..., :cfg.d_inner]
+    b_in = xbc[..., cfg.d_inner:cfg.d_inner + g * n]
+    c_in = xbc[..., cfg.d_inner + g * n:]
+
+    # chunked views
+    xh = xin.reshape(bsz, nc, q, h_heads, pdim)
+    bmat = b_in.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    cmat = c_in.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"]).reshape(bsz, nc, q, h_heads)
+    a_neg = -jnp.exp(p["A_log"])                        # (H,) < 0
+    da = dt * a_neg                                     # (B,nc,Q,H) ≤ 0
+    da_cs = jnp.cumsum(da, axis=2)                      # inclusive
+
+    rep = h_heads // g
+    xf = xh.astype(jnp.float32)
+    bheads = jnp.repeat(bmat, rep, axis=3)              # (B,nc,Q,H,N)
+    cheads = jnp.repeat(cmat, rep, axis=3)
+
+    # ---- intra-chunk (masked decay attention over the chunk) -------------
+    cb = jnp.einsum("bcqgn,bctgn->bcgqt", cmat, bmat)   # (B,nc,G,Q,Q)
+    cb = jnp.repeat(cb, rep, axis=2)                    # (B,nc,H,Q,Q)
+    da_cs_h = da_cs.transpose(0, 1, 3, 2)               # (B,nc,H,Q)
+    decay = jnp.exp(da_cs_h[..., :, None] - da_cs_h[..., None, :])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = jnp.where(mask, cb * decay, 0.0)
+    att = att * dt.transpose(0, 1, 3, 2)[..., None, :]  # × dt[t]
+    y_intra = jnp.einsum("bchqt,bcthp->bcqhp", att, xf)
+
+    # ---- chunk states and inter-chunk recurrence --------------------------
+    tail_decay = jnp.exp(da_cs[:, :, -1:, :] - da_cs)   # (B,nc,Q,H)
+    wtd_x = xf * (dt * tail_decay)[..., None]           # (B,nc,Q,H,P)
+    bx = jnp.einsum("bcqhn,bcqhp->bchpn", bheads, wtd_x)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])           # (B,nc,H)
+
+    def scan_body(hprev, inputs):
+        cd, bx_c = inputs                               # (B,H), (B,H,P,N)
+        hnew = hprev * cd[..., None, None] + bx_c
+        return hnew, hprev                              # emit state BEFORE
+
+    h0 = jnp.zeros((bsz, h_heads, pdim, n), jnp.float32)
+    hlast, hstates = jax.lax.scan(
+        scan_body, h0,
+        (chunk_decay.transpose(1, 0, 2), bx.transpose(1, 0, 2, 3, 4)))
+    hstates = hstates.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", cheads, hstates)
+    y_inter = y_inter * jnp.exp(da_cs)[..., None]
+
+    y = (y_intra + y_inter).astype(x.dtype) \
+        + xh * p["D"].astype(x.dtype)[..., None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = _gated_norm(p["norm"], y, z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        conv_tail = xbc_raw_tail(cfg, x, p, zxbcdt)
+        return out, SSMState(hlast, conv_tail)
+    return out
+
+
+def xbc_raw_tail(cfg, x, p, zxbcdt):
+    """Last (kw-1) pre-conv xbc rows — seeds the decode conv state."""
+    _, xbc, _ = _split_proj(cfg, zxbcdt)
+    return xbc[:, -(cfg.ssm_conv - 1):, :]
+
+
+def ssd_decode(p, x: jax.Array, state: SSMState, cfg: ArchConfig):
+    """One-token decode. x: (B, 1, D) → (B, 1, D), new state.  O(1) in
+    sequence length — the honest long_500k path for SSM archs."""
+    bsz = x.shape[0]
+    h_heads, pdim, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_groups
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)           # (B,1,·)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # conv ring: append new row, convolve last kw rows
+    conv_in = jnp.concatenate([state.conv, xbc], axis=1)  # (B, kw, convdim)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]        # (B,1,convdim)
+    new_conv = conv_in[:, 1:, :]
+
+    xin = conv_out[..., :cfg.d_inner]
+    b_in = conv_out[..., cfg.d_inner:cfg.d_inner + g * n]
+    c_in = conv_out[..., cfg.d_inner + g * n:]
+
+    xh = xin.reshape(bsz, h_heads, pdim).astype(jnp.float32)
+    bvec = b_in.reshape(bsz, g, n).astype(jnp.float32)
+    cvec = c_in.reshape(bsz, g, n).astype(jnp.float32)
+    rep = h_heads // g
+    bvec = jnp.repeat(bvec, rep, axis=1)
+    cvec = jnp.repeat(cvec, rep, axis=1)                # (B,H,N)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    da = jnp.exp(dt * (-jnp.exp(p["A_log"])))           # (B,H)
+    hnew = state.h * da[..., None, None] \
+        + (dt[..., None] * xh)[..., None] * bvec[:, :, None, :]
+    y = jnp.einsum("bhn,bhpn->bhp", cvec, hnew)
+    y = y.astype(x.dtype) + xh.astype(x.dtype) * p["D"].astype(x.dtype)[:, None]
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = _gated_norm(p["norm"], y, z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SSMState(hnew, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# naive O(S·N) recurrence — oracle for tests
+# ---------------------------------------------------------------------------
+
+def ssd_reference(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Token-by-token recurrence (slow, exact)."""
+    bsz, s, _ = x.shape
+    state = init_ssm_state(cfg, bsz, x.dtype)
+    outs = []
+    for t in range(s):
+        o, state = ssd_decode(p, x[:, t:t + 1, :], state, cfg)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

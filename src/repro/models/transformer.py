@@ -1,0 +1,404 @@
+"""Decoder stacks for every architecture family.
+
+Layers are scanned (stacked params, one compiled block body) with
+``jax.checkpoint`` on the body — compile-time O(1) in depth and activation
+memory O(L · B·S·D) at layer boundaries only; train/train_loop.py adds
+microbatching on top for the big shapes.
+
+Families:
+  dense / audio / vlm : [norm→attn→res] [norm→ffn→res]
+  moe                 : [norm→attn→res] [norm→moe→res]   (+aux loss)
+  ssm                 : [norm→ssd→res]
+  hybrid (zamba2)     : ssm backbone + ONE weight-shared attn+ffn block
+                        applied every `shared_attn_every` layers
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, blocks, ffn, moe, ssm
+
+Params = Any
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Any                 # (key) -> params
+    forward: Any              # (params, batch) -> (logits, aux)
+    prefill: Any              # (params, batch) -> (logits_last, cache)
+    decode_step: Any          # (params, cache, batch1, pos) -> (logits, cache)
+    init_cache: Any           # (batch, max_seq) -> cache
+
+
+def _split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig):
+    ks = _split_keys(key, 4)
+    if cfg.family == "ssm":
+        return {"norm": blocks.init_norm(cfg.norm, cfg.d_model),
+                "ssm": ssm.init_ssm(ks[0], cfg)}
+    if cfg.family == "hybrid":
+        return {"norm": blocks.init_norm(cfg.norm, cfg.d_model),
+                "ssm": ssm.init_ssm(ks[0], cfg)}
+    p = {"norm1": blocks.init_norm(cfg.norm, cfg.d_model),
+         "norm2": blocks.init_norm(cfg.norm, cfg.d_model),
+         "attn": attention.init_attention(ks[0], cfg)}
+    if cfg.family == "moe":
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = ffn.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _apply_attn_block(p, x, cfg, pos3=None):
+    h = blocks.apply_norm(cfg.norm, p["norm1"], x)
+    a, _ = attention.attention_full(p["attn"], h, cfg, pos3=pos3)
+    x = x + a
+    h = blocks.apply_norm(cfg.norm, p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        f, aux = moe.apply_moe(p["moe"], h, cfg)
+    else:
+        f = ffn.apply_ffn(p["ffn"], h, cfg.act)
+    return x + f, aux
+
+
+def _apply_ssm_block(p, x, cfg):
+    h = blocks.apply_norm(cfg.norm, p["norm"], x)
+    return x + ssm.ssd_full(p["ssm"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    kemb, klayers, kshared, khead = _split_keys(key, 4)
+    layer_keys = jax.random.split(klayers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p = {
+        # σ = 1/√d: the input path multiplies by √d (O(1) activations) and
+        # the tied head then produces O(1) logits ⇒ initial CE ≈ ln(V).
+        "embed": blocks.truncated_normal_init(
+            kemb, (cfg.vocab, cfg.d_model), cfg.d_model ** -0.5),
+        "norm_f": blocks.init_norm(cfg.norm, cfg.d_model),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = blocks.dense_init(khead, cfg.d_model, cfg.vocab)
+    if cfg.family == "hybrid":
+        ks = _split_keys(kshared, 3)
+        p["shared"] = {
+            "norm1": blocks.init_norm(cfg.norm, cfg.d_model),
+            "norm2": blocks.init_norm(cfg.norm, cfg.d_model),
+            "attn": attention.init_attention(ks[0], cfg),
+            "ffn": ffn.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.act),
+        }
+    return p
+
+
+def _embed_in(params, batch, cfg: ArchConfig):
+    if "embeds" in batch:            # stubbed modality frontend
+        return batch["embeds"].astype(blocks.ACT_DTYPE)
+    tok = batch["tokens"]
+    e = params["embed"].astype(blocks.ACT_DTYPE)[tok]
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        e = e * float(np.sqrt(cfg.d_model))   # python float: stays bf16
+    return e
+
+
+def _lm_head(params, x, cfg: ArchConfig):
+    h = blocks.apply_norm(cfg.norm, params["norm_f"], x)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(h.dtype).T
+    else:
+        w = params["head"].astype(h.dtype)
+    return h @ w
+
+
+def _shared_block(params, x, cfg, pos3=None):
+    sp = params["shared"]
+    h = blocks.apply_norm(cfg.norm, sp["norm1"], x)
+    a, _ = attention.attention_full(sp["attn"], h, cfg, pos3=pos3)
+    x = x + a
+    h = blocks.apply_norm(cfg.norm, sp["norm2"], x)
+    return x + ffn.apply_ffn(sp["ffn"], h, cfg.act)
+
+
+def _remat_wrap(body, remat: str):
+    """remat policy for the scanned layer body:
+    'full' — recompute everything in bwd (min memory, 4/3 flops);
+    'dots' — save matmul outputs, recompute elementwise (≈3.15/3 flops);
+    'none' — save everything (3/3 flops, max memory)."""
+    if remat == "full":
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if remat == "none":
+        return body
+    raise ValueError(remat)
+
+
+def forward(params, batch, cfg: ArchConfig, act_sharding=None,
+            remat: str = "full"):
+    """Full-sequence forward → (logits, aux).
+
+    act_sharding: optional NamedSharding for the residual stream (B, S, D).
+    Passing P(batch_axes, 'model', None) turns on **sequence parallelism**:
+    layer boundaries (and the saved remat residuals) are sharded over the
+    TP axis, cutting activation memory tp× — which in turn lets training
+    run with fewer/no microbatches, dividing the TP collective traffic by
+    the old microbatch count (EXPERIMENTS.md §Perf iteration 1).  XLA
+    inserts the all-gather/reduce-scatter pairs at the attention/FFN
+    boundaries (Korthikanti et al., arXiv:2205.05198 — adapted here to the
+    GSPMD constraint style)."""
+    x = _embed_in(params, batch, cfg)
+    pos3 = batch.get("pos3")
+
+    def constrain(v):
+        if act_sharding is not None:
+            return jax.lax.with_sharding_constraint(v, act_sharding)
+        return v
+
+    x = constrain(x)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _apply_attn_block(lp, x, cfg, pos3=pos3)
+            return (constrain(x), aux + a), None
+        body = _remat_wrap(body, remat)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            return constrain(_apply_ssm_block(lp, x, cfg)), None
+        body = _remat_wrap(body, remat)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        assert cfg.n_layers % every == 0
+        n_super = cfg.n_layers // every
+        # restack: (n_super, every, ...)
+        lp = jax.tree.map(
+            lambda a: a.reshape((n_super, every) + a.shape[1:]),
+            params["layers"])
+
+        def super_body(x, lps):
+            def inner(x, lp1):
+                return constrain(_apply_ssm_block(lp1, x, cfg)), None
+            x, _ = jax.lax.scan(inner, x, lps)
+            x = _shared_block(params, x, cfg, pos3=pos3)  # weight-shared
+            return constrain(x), None
+        super_body = _remat_wrap(super_body, remat)
+        x, _ = jax.lax.scan(super_body, x, lp)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+
+    return _lm_head(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# decode: caches stacked over layers, scanned
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        one = attention.init_kv_cache(cfg, batch, max_seq)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy()
+            if False else jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    if cfg.family == "ssm":
+        one = ssm.init_ssm_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        s_one = ssm.init_ssm_state(cfg, batch)
+        k_one = attention.init_kv_cache(cfg, batch, max_seq)
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), s_one),
+            "kv": jax.tree.map(
+                lambda a: jnp.zeros((n_super,) + a.shape, a.dtype), k_one),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cache, batch, pos, cfg: ArchConfig):
+    """batch: one-token inputs ({'tokens': (B,1)} or {'embeds': (B,1,D)},
+    optional 'pos3': (B,1,3)); pos: scalar int32 → (logits (B,1,V), cache)."""
+    x = _embed_in(params, batch, cfg)
+    pos3 = batch.get("pos3")
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(x, inputs):
+            lp, kv = inputs
+            h = blocks.apply_norm(cfg.norm, lp["norm1"], x)
+            a, kv = attention.attention_decode(
+                lp["attn"], h, attention.KVCache(*kv), pos, cfg, pos3=pos3)
+            x = x + a
+            h = blocks.apply_norm(cfg.norm, lp["norm2"], x)
+            if cfg.family == "moe":
+                f, _ = moe.apply_moe(lp["moe"], h, cfg)
+            else:
+                f = ffn.apply_ffn(lp["ffn"], h, cfg.act)
+            return x + f, tuple(kv)
+        x, new_cache = jax.lax.scan(body, x, (params["layers"],
+                                              tuple(cache)))
+        new_cache = attention.KVCache(*new_cache)
+    elif cfg.family == "ssm":
+        def body(x, inputs):
+            lp, st = inputs
+            h = blocks.apply_norm(cfg.norm, lp["norm"], x)
+            o, st = ssm.ssd_decode(lp["ssm"], h, ssm.SSMState(*st), cfg)
+            return x + o, tuple(st)
+        x, new_cache = jax.lax.scan(body, x, (params["layers"],
+                                              tuple(cache)))
+        new_cache = ssm.SSMState(*new_cache)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_super = cfg.n_layers // every
+        lp = jax.tree.map(
+            lambda a: a.reshape((n_super, every) + a.shape[1:]),
+            params["layers"])
+        ssm_c = jax.tree.map(
+            lambda a: a.reshape((n_super, every) + a.shape[1:]),
+            cache["ssm"])
+
+        def super_body(x, inputs):
+            lps, sc, kv = inputs
+            def inner(x, iv):
+                lp1, st = iv
+                h = blocks.apply_norm(cfg.norm, lp1["norm"], x)
+                o, st = ssm.ssd_decode(lp1["ssm"], h, ssm.SSMState(*st), cfg)
+                return x + o, tuple(st)
+            x, sc = jax.lax.scan(inner, x, (lps, tuple(sc)))
+            sp = params["shared"]
+            h = blocks.apply_norm(cfg.norm, sp["norm1"], x)
+            a, kv = attention.attention_decode(
+                sp["attn"], h, attention.KVCache(*kv), pos, cfg, pos3=pos3)
+            x = x + a
+            h = blocks.apply_norm(cfg.norm, sp["norm2"], x)
+            x = x + ffn.apply_ffn(sp["ffn"], h, cfg.act)
+            return x, (sc, tuple(kv))
+        x, (new_ssm, new_kv) = jax.lax.scan(
+            super_body, x, (lp, tuple(ssm_c), tuple(cache["kv"])))
+        new_cache = {
+            "ssm": jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]),
+                ssm.SSMState(*new_ssm)),
+            "kv": attention.KVCache(*new_kv),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    return _lm_head(params, x, cfg), new_cache
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int | None = None):
+    """Run the full sequence, return (last-token logits, primed cache).
+
+    Rendering: forward for logits + cache seeding.  Attention caches are
+    seeded by re-running the per-layer K/V projections inside the scan;
+    SSM states come from ssd_full(return_state=True)."""
+    x = _embed_in(params, batch, cfg)
+    pos3 = batch.get("pos3")
+    s = x.shape[1]
+    max_seq = max_seq or s
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        t = min(max_seq, cfg.window) if cfg.window else max_seq
+
+        def body(x, lp):
+            h = blocks.apply_norm(cfg.norm, lp["norm1"], x)
+            a, (k, v) = attention.attention_full(lp["attn"], h, cfg,
+                                                 pos3=pos3)
+            x = x + a
+            h = blocks.apply_norm(cfg.norm, lp["norm2"], x)
+            if cfg.family == "moe":
+                f, _ = moe.apply_moe(lp["moe"], h, cfg)
+            else:
+                f = ffn.apply_ffn(lp["ffn"], h, cfg.act)
+            kv = _seed_kv(k, v, t, cfg)
+            return x + f, kv
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        cache = attention.KVCache(*kvs)
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            h = blocks.apply_norm(cfg.norm, lp["norm"], x)
+            o, st = ssm.ssd_full(lp["ssm"], h, cfg, return_state=True)
+            return x + o, tuple(st)
+        x, sts = jax.lax.scan(body, x, params["layers"])
+        cache = ssm.SSMState(*sts)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_super = cfg.n_layers // every
+        t = max_seq
+        lp = jax.tree.map(
+            lambda a: a.reshape((n_super, every) + a.shape[1:]),
+            params["layers"])
+
+        def super_body(x, lps):
+            def inner(x, lp1):
+                h = blocks.apply_norm(cfg.norm, lp1["norm"], x)
+                o, st = ssm.ssd_full(lp1["ssm"], h, cfg, return_state=True)
+                return x + o, tuple(st)
+            x, sts = jax.lax.scan(inner, x, lps)
+            sp = params["shared"]
+            h = blocks.apply_norm(cfg.norm, sp["norm1"], x)
+            a, (k, v) = attention.attention_full(sp["attn"], h, cfg,
+                                                 pos3=pos3)
+            x = x + a
+            h = blocks.apply_norm(cfg.norm, sp["norm2"], x)
+            x = x + ffn.apply_ffn(sp["ffn"], h, cfg.act)
+            return x, (sts, _seed_kv(k, v, t, cfg))
+        x, (sts, kvs) = jax.lax.scan(super_body, x, lp)
+        cache = {
+            "ssm": jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]),
+                ssm.SSMState(*sts)),
+            "kv": attention.KVCache(*kvs),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _lm_head(params, x[:, -1:, :], cfg)
+    return logits, cache
+
+
+def _seed_kv(k, v, t, cfg: ArchConfig):
+    """Place the last ≤t keys/values into a length-t cache buffer laid out
+    for attention_decode (ring order for SWA)."""
+    b, s, kvh, hd = k.shape
+    dtype = blocks.ACT_DTYPE
+    if s == t:
+        buf_k, buf_v = k, v
+    elif s > t:
+        buf_k, buf_v = k[:, -t:], v[:, -t:]
+        s = t
+    else:
+        pad = t - s
+        buf_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        buf_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.window:
+        # ring layout: absolute position p lives at slot p % t
+        start = max(0, k.shape[1] - t)
+        pos0 = start % t
+        buf_k = jnp.roll(buf_k, pos0, axis=1)
+        buf_v = jnp.roll(buf_v, pos0, axis=1)
+    return attention.KVCache(buf_k.astype(dtype), buf_v.astype(dtype))

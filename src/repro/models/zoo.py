@@ -1,0 +1,85 @@
+"""Model zoo: ArchConfig → Model (init/forward/prefill/decode) + input specs.
+
+``input_specs(cfg, shape, kind)`` returns ShapeDtypeStruct stand-ins for
+every model input — the dry-run lowers against these (no allocation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import blocks, transformer
+
+
+def build(cfg: ArchConfig) -> transformer.Model:
+    return transformer.Model(
+        cfg=cfg,
+        init=functools.partial(transformer.init_params, cfg=cfg),
+        forward=functools.partial(transformer.forward, cfg=cfg),
+        prefill=functools.partial(transformer.prefill, cfg=cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg=cfg),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches (synthetic) and ShapeDtypeStruct specs
+# ---------------------------------------------------------------------------
+
+def batch_inputs(cfg: ArchConfig, batch: int, seq: int, key=None,
+                 concrete: bool = True):
+    """Model inputs (+labels for training).  concrete=False returns
+    ShapeDtypeStructs (dry-run)."""
+    specs = {}
+    if cfg.frontend == "token":
+        specs["tokens"] = ((batch, seq), jnp.int32)
+    else:
+        specs["embeds"] = ((batch, seq, cfg.d_model), blocks.ACT_DTYPE)
+    if cfg.mrope_sections is not None:
+        specs["pos3"] = ((batch, seq, 3), jnp.int32)
+    specs["labels"] = ((batch, seq), jnp.int32)
+
+    if not concrete:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in specs.items()}
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, len(specs))
+    out = {}
+    for (name, (shape, dtype)), k in zip(specs.items(), ks):
+        if dtype == jnp.int32:
+            if name == "pos3":
+                pos = jnp.arange(shape[1], dtype=jnp.int32)
+                out[name] = jnp.broadcast_to(pos[None, :, None], shape)
+            else:
+                out[name] = jax.random.randint(k, shape, 0, cfg.vocab,
+                                               jnp.int32)
+        else:
+            out[name] = 0.02 * jax.random.normal(k, shape, jnp.float32) \
+                .astype(dtype)
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, batch: int, concrete: bool = True,
+                  key=None):
+    return batch_inputs(cfg, batch, 1, key=key, concrete=concrete)
+
+
+def loss_fn(model: transformer.Model, params, batch,
+            aux_weight: float = 0.01, act_sharding=None,
+            remat: str = "full"):
+    """Next-token cross entropy (+MoE aux)."""
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    logits, aux = model.forward(params, inputs, act_sharding=act_sharding,
+                                remat=remat)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

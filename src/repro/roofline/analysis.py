@@ -1,0 +1,198 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_chip
+    memory     = HLO_bytes_per_device / HBM_bw_chip
+    collective = collective_bytes_per_device / link_bw_chip
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed — already
+per-partition for SPMD modules); collective bytes are parsed from the
+post-SPMD HLO text (``compiled.as_text()``): the operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+scaled by the ring-traffic factor of the op type (an all-reduce moves
+2·(n-1)/n · size per link; gather/scatter (n-1)/n; permute 1).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# traffic per participant relative to operand bytes on a ring of n devices
+_TRAFFIC_FACTOR = {
+    "all-gather": lambda n: (n - 1),            # operand is the local shard
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(spec: str) -> int:
+    m = _SHAPE_RE.match(spec.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Extract every collective op: kind, operand bytes, group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"=\s*\S+\s+{c}(-start)?\(", stripped):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand shapes: everything inside the call parens
+        call = stripped.split("(", 1)[1] if "(" in stripped else ""
+        operand_bytes = 0
+        for spec in re.findall(r"(\w+\[[\d,]*\])", call):
+            operand_bytes += _shape_bytes(spec)
+        gsize = _group_size(stripped)
+        out.append({"kind": kind, "operand_bytes": operand_bytes,
+                    "group_size": gsize, "line": stripped[:160]})
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ID_RE.search(line)
+    if m:
+        return int(m.group(2))        # iota groups [ngroups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([t for t in first.split(",") if t.strip() != ""])
+    return 2
+
+
+def collective_bytes_per_device(collectives: list[dict]) -> float:
+    total = 0.0
+    for c in collectives:
+        f = _TRAFFIC_FACTOR[c["kind"]](max(c["group_size"], 2))
+        total += c["operand_bytes"] * f
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    n_devices: int
+    model_flops: float = 0.0          # useful algorithmic flops (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline lower bound on step time (terms overlap perfectly)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        hw = self.flops_per_device * self.n_devices
+        return self.model_flops / hw if hw else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-flops utilization if the step ran exactly at the roofline
+        bound (the score the perf loop pushes up)."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.n_devices * PEAK_FLOPS * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "n_devices": self.n_devices,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def lm_model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """6·N_active·tokens (+ SSD/attention state flops are <5% at these
+    shapes and counted inside HLO_FLOPs anyway — the ratio column exposes
+    remat/redundancy, so keep the canonical 6ND definition)."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = batch * seq
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * batch
+
+
+def stencil_model_flops(spec, shape, steps: int) -> float:
+    from repro.core.stencils import model_flops
+    return float(model_flops(spec, shape, steps))
+
+
+def summarize(cost: dict, hlo_text: str, n_devices: int,
+              model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo_text)
+    return Roofline(flops, byts, collective_bytes_per_device(colls),
+                    n_devices, model_flops)

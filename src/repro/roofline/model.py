@@ -1,0 +1,296 @@
+"""Analytic per-cell cost model — the primary §Roofline source.
+
+Why analytic: XLA's ``cost_analysis()`` counts every while/scan body ONCE
+(verified experimentally — scan(10×matmul) reports the flops of 1 matmul),
+so any scanned-layers program underreports by the trip product.  Rather
+than heuristically rescaling opaque HLO aggregates, the roofline terms are
+derived from the architecture + sharding policy with explicit formulas —
+the exact napkin math the §Perf loop needs — and *cross-checked* against
+``cost_analysis()`` on unscanned unit configs (tests/test_roofline_model.py)
+and against the HLO collective census (op kinds and per-body bytes).
+
+All quantities are per-device per-step; seconds via v5e constants in
+analysis.py.
+
+Model knobs that the perf loop iterates: n_microbatches, remat policy
+factor, serve dtype, FSDP on/off, TP fraction of params.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.roofline import analysis
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshFactors:
+    dp: int           # batch ways  (pod × data)
+    tp: int           # tensor/model ways
+    fsdp: int         # param second-shard ways (data axis)
+
+    @property
+    def n_chips(self) -> int:
+        return self.dp * self.tp * 1 if False else self.dp * self.tp
+
+    @classmethod
+    def single(cls):
+        return cls(dp=16, tp=16, fsdp=16)
+
+    @classmethod
+    def multi(cls):
+        return cls(dp=32, tp=16, fsdp=16)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfKnobs:
+    n_microbatches: int = 1
+    remat: bool | str = True      # True/'full' | 'dots' | False/'none'
+    serve_dtype_bytes: int = 4    # f32 serving params (baseline)
+    train_param_bytes: int = 4    # f32 masters
+    fsdp: bool = True
+    act_traffic_factor: float = 3.0   # write + read + bwd-grad traffic
+
+
+def _remat_mult(remat) -> float:
+    if remat in (True, "full"):
+        return 4.0       # fwd + full fwd recompute + bwd(2×)
+    if remat == "dots":
+        return 3.15      # matmul outputs saved; elementwise recomputed
+    return 3.0           # 'none'/False
+
+
+def _attn_ctx(cfg: ArchConfig, s: int) -> int:
+    return min(s, cfg.window) if cfg.window else s
+
+
+def _fwd_flops_per_token_layer(cfg: ArchConfig, s: int) -> float:
+    """Matmul-free-ish extras beyond 6N: attention scores/AV or SSD."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        ctx = _attn_ctx(cfg, s)
+        return 2.0 * ctx * cfg.n_heads * cfg.head_dim   # 2 matmuls × causal½
+    if cfg.family in ("ssm", "hybrid"):
+        q = cfg.ssm_chunk
+        intra = 2.0 * q * cfg.d_inner                   # chunk attn-like
+        state = 6.0 * cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state / \
+            max(q, 1) * q                               # state build/apply
+        f = intra + state
+        if cfg.family == "hybrid":
+            # one shared attn block every k layers
+            ctx = _attn_ctx(cfg, s)
+            f += 2.0 * ctx * cfg.n_heads * cfg.head_dim / cfg.shared_attn_every
+        return f
+    raise ValueError(cfg.family)
+
+
+def _layer_act_bytes_per_token(cfg: ArchConfig, s: int, dtype_b: int = 2
+                               ) -> float:
+    """HBM bytes of within-layer intermediates per token (one fwd)."""
+    d = cfg.d_model
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        ctx = _attn_ctx(cfg, s)
+        qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+        scores = cfg.n_heads * ctx            # ½·2 (scores+softmax) ≈ 1
+        if cfg.family == "moe":
+            ff = 3 * (cfg.top_k + cfg.n_shared_experts) * cfg.moe_d_ff \
+                + 2 * cfg.n_experts * cfg.capacity_factor  # dispatch/combine
+        else:
+            ff = 3 * cfg.d_ff if cfg.act in ("swiglu", "geglu") \
+                else 2 * cfg.d_ff
+        per_tok = qkv + cfg.n_heads * cfg.head_dim + scores + ff + 2 * d
+    else:
+        di = cfg.d_inner
+        gn = cfg.ssm_groups * cfg.ssm_state
+        per_tok = (2 * di + 2 * gn + cfg.ssm_nheads) + di \
+            + cfg.ssm_chunk * cfg.ssm_nheads \
+            + 2 * cfg.ssm_nheads * cfg.ssm_head_dim + 2 * d
+        if cfg.family == "hybrid":
+            per_tok += (3 * cfg.d_ff + 2 * cfg.n_heads * cfg.head_dim) \
+                / cfg.shared_attn_every
+    return per_tok * dtype_b
+
+
+def train_cell(cfg: ArchConfig, shape: ShapeConfig, mf: MeshFactors,
+               knobs: PerfKnobs) -> analysis.Roofline:
+    tokens = shape.global_batch * shape.seq_len
+    tok_dev = tokens / mf.dp
+    mb = knobs.n_microbatches
+    tok_mu = tok_dev / mb
+    p_total, p_act = cfg.param_count(), cfg.active_param_count()
+    L = cfg.n_layers
+
+    # ---- flops ------------------------------------------------------------
+    f_fwd = 2.0 * p_act * tok_dev / mf.tp \
+        + L * _fwd_flops_per_token_layer(cfg, shape.seq_len) * tok_dev / mf.tp
+    mult = _remat_mult(knobs.remat)         # fwd + bwd(2×) (+ remat fwd)
+    flops_dev = mult * f_fwd
+
+    # ---- HBM bytes ---------------------------------------------------------
+    wb = 2                                   # gathered weights are bf16
+    shard = mf.tp * (mf.fsdp if knobs.fsdp else 1)
+    weight_reads = (3.0 if knobs.remat in (True, "full") else 2.0) * mb * (p_total / mf.tp) * wb
+    weight_gather_writes = mb * (p_total / mf.tp) * wb if knobs.fsdp else 0.0
+    grad_traffic = mb * (p_total / mf.tp) * wb \
+        + 2.0 * mb * (p_total / shard) * 4   # accum read+write f32
+    opt_traffic = 6.0 * (p_total / shard) * 4 + 2.0 * (p_total / shard) * 4
+    boundaries = 2.0 * L * tok_dev * cfg.d_model * 2
+    internals = knobs.act_traffic_factor * L * tok_dev \
+        * _layer_act_bytes_per_token(cfg, shape.seq_len) / mf.tp
+    logits = 3.0 * tok_dev * cfg.vocab / mf.tp * 2
+    bytes_dev = weight_reads + weight_gather_writes + grad_traffic \
+        + opt_traffic + boundaries + internals + logits
+
+    # ---- collective bytes ---------------------------------------------------
+    coll = 0.0
+    if knobs.fsdp:
+        # per-µb per-layer param all-gather over fsdp: each device receives
+        # (fsdp-1)/fsdp of its P/tp gathered slice, fwd(+remat)+bwd = 2×
+        coll += 2.0 * mb * (p_total / mf.tp) * wb * (mf.fsdp - 1) / mf.fsdp
+        # grad reduce-scatter back over fsdp
+        coll += mb * (p_total / mf.tp) * wb * (mf.fsdp - 1) / mf.fsdp
+    else:
+        coll += mb * (p_total / mf.tp) * wb * 2 * (mf.dp - 1) / mf.dp
+    # TP: 2 all-reduces per layer per µb on the residual stream (fwd), ×2 bwd
+    ar = 2.0 * (mf.tp - 1) / mf.tp
+    coll += 4.0 * L * mb * tok_mu * cfg.d_model * 2 * ar
+    if cfg.family == "moe" and cfg.n_experts % mf.tp == 0:
+        # expert parallelism (E % tp == 0, e.g. moonshot 64e/16): dispatch +
+        # return all-to-all of top_k·tokens hidden states.  TP-sharded
+        # experts (mixtral 8e over 16) have no token a2a — the expert
+        # matmuls are d_ff-sharded like a dense FFN.
+        a2a = (mf.tp - 1) / mf.tp
+        coll += 2.0 * mb * tok_mu * cfg.top_k * cfg.d_model * 2 * a2a \
+            * (2.0 if knobs.remat in (True, "full") else 1.0) * 2   # fwd(+remat)+bwd
+    if mf.dp > mf.fsdp:                     # cross-pod pure-DP grad sync
+        pods = mf.dp // mf.fsdp
+        coll += (p_total / (mf.tp * mf.fsdp)) * 4 * 2 * (pods - 1) / pods
+
+    mfl = analysis.lm_model_flops(cfg, "train", shape.seq_len,
+                                  shape.global_batch)
+    return analysis.Roofline(flops_dev, bytes_dev, coll,
+                             mf.dp * mf.tp, mfl)
+
+
+def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mf: MeshFactors,
+                 knobs: PerfKnobs) -> analysis.Roofline:
+    tokens = shape.global_batch * shape.seq_len
+    tok_dev = tokens / mf.dp
+    p_total, p_act = cfg.param_count(), cfg.active_param_count()
+    L = cfg.n_layers
+    f_fwd = 2.0 * p_act * tok_dev / mf.tp \
+        + L * _fwd_flops_per_token_layer(cfg, shape.seq_len) * tok_dev / mf.tp
+    wb = knobs.serve_dtype_bytes
+    bytes_dev = (p_total / mf.tp) * wb \
+        + 2.0 * L * tok_dev * cfg.d_model * 2 \
+        + L * tok_dev * _layer_act_bytes_per_token(cfg, shape.seq_len) / mf.tp
+    coll = 2.0 * L * tok_dev * cfg.d_model * 2 * 2.0 * (mf.tp - 1) / mf.tp
+    if knobs.fsdp:
+        coll += (p_total / mf.tp) * wb * (mf.fsdp - 1) / mf.fsdp
+    mfl = analysis.lm_model_flops(cfg, "prefill", shape.seq_len,
+                                  shape.global_batch)
+    return analysis.Roofline(f_fwd, bytes_dev, coll, mf.dp * mf.tp, mfl)
+
+
+def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mf: MeshFactors,
+                knobs: PerfKnobs) -> analysis.Roofline:
+    b = shape.global_batch
+    b_dev = max(1.0, b / mf.dp)
+    p_total, p_act = cfg.param_count(), cfg.active_param_count()
+    L = cfg.n_layers
+    f = 2.0 * p_act * b_dev / mf.tp \
+        + L * _decode_state_flops(cfg, shape.seq_len) * b_dev / mf.tp
+    wb = knobs.serve_dtype_bytes
+    state_bytes = _decode_state_bytes(cfg, shape.seq_len)   # per sequence
+    bytes_dev = (p_total / mf.tp) * wb + b_dev * state_bytes / mf.tp
+    # TP all-reduce on the residual per layer (decode: b_dev tokens)
+    coll = 2.0 * L * b_dev * cfg.d_model * 2 * 2.0 * (mf.tp - 1) / mf.tp
+    mfl = analysis.lm_model_flops(cfg, "decode", shape.seq_len, b)
+    return analysis.Roofline(f, bytes_dev, coll, mf.dp * mf.tp, mfl)
+
+
+def _decode_state_flops(cfg: ArchConfig, s: int) -> float:
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        ctx = _attn_ctx(cfg, s)
+        return 2.0 * ctx * cfg.n_heads * cfg.head_dim
+    f = 6.0 * cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state
+    if cfg.family == "hybrid":
+        f += 2.0 * _attn_ctx(cfg, s) * cfg.n_heads * cfg.head_dim \
+            / cfg.shared_attn_every
+    return f
+
+
+def _decode_state_bytes(cfg: ArchConfig, s: int) -> float:
+    """Per-sequence per-layer-summed state read per decode step (bf16)."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        ctx = _attn_ctx(cfg, s)
+        return cfg.n_layers * 2.0 * ctx * cfg.n_kv_heads * cfg.head_dim * 2
+    per = 2.0 * cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state * 4  # f32
+    total = cfg.n_layers * per
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        total += n_super * 2.0 * s * cfg.n_kv_heads * cfg.head_dim * 2
+    return total
+
+
+def cell(cfg: ArchConfig, shape: ShapeConfig, mf: MeshFactors,
+         knobs: PerfKnobs | None = None) -> analysis.Roofline:
+    knobs = knobs or PerfKnobs()
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mf, knobs)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mf, knobs)
+    return decode_cell(cfg, shape, mf, knobs)
+
+
+def train_cell_ep(cfg: ArchConfig, shape: ShapeConfig, n_chips: int,
+                  ep: int, knobs: PerfKnobs) -> analysis.Roofline:
+    """EP layout (MoE): mesh re-axised as (data, expert=ep, model); batch
+    (and dense ZeRO-3) over ALL axes; expert weights sharded E over
+    'expert' with ZeRO inside each expert group; token all-to-all routes
+    top-k tokens to expert groups.  No TP all-reduces remain
+    (EXPERIMENTS.md §Perf, mixtral iteration 3)."""
+    assert cfg.family == "moe" and cfg.n_experts % ep == 0
+    tokens = shape.global_batch * shape.seq_len
+    tok_dev = tokens / n_chips                  # 256-way DP for dense parts
+    L = cfg.n_layers
+    p_total, p_act = cfg.param_count(), cfg.active_param_count()
+    p_exp = cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff * L
+    p_dense = p_total - p_exp
+    act_exp = (cfg.top_k + cfg.n_shared_experts) * 3 * cfg.d_model \
+        * cfg.moe_d_ff * L
+    act_dense = p_act - act_exp
+
+    mult = _remat_mult(knobs.remat)
+    f_fwd = 2.0 * act_dense * tok_dev \
+        + 2.0 * act_exp * tok_dev \
+        + L * _fwd_flops_per_token_layer(cfg, shape.seq_len) * tok_dev
+    flops_dev = mult * f_fwd
+
+    wb = 2
+    gathers = 3.0 if knobs.remat in (True, "full") else 2.0
+    w_dense = gathers * (p_dense) * wb              # full dense per device
+    w_exp = gathers * (p_exp / ep) * wb             # own expert slice
+    grad = (p_dense + p_exp / ep) * wb + 2.0 * (p_total / n_chips) * 4
+    opt = 8.0 * (p_total / n_chips) * 4
+    boundaries = 2.0 * L * tok_dev * cfg.d_model * 2
+    internals = knobs.act_traffic_factor * L * tok_dev \
+        * _layer_act_bytes_per_token(cfg, shape.seq_len)
+    logits = 3.0 * tok_dev * cfg.vocab * 2 / min(n_chips, 256)
+    bytes_dev = w_dense + w_exp + grad + opt + boundaries + internals + logits
+
+    coll = 0.0
+    # ZeRO gathers: dense over n_chips, expert slice over its group
+    coll += gathers * p_dense * wb * (n_chips - 1) / n_chips
+    grp = n_chips // ep
+    coll += gathers * (p_exp / ep) * wb * (grp - 1) / grp
+    # grad reduce-scatters (mirror of the gathers, once)
+    coll += p_dense * wb + (p_exp / ep) * wb
+    # token all-to-all: top-k dispatch + return, fwd(+remat)+bwd
+    rounds = 2.0 * (2.0 if knobs.remat in (True, "full") else 1.0)
+    coll += rounds * tok_dev * cfg.top_k * cfg.d_model * 2 * (ep - 1) / ep
+
+    mfl = analysis.lm_model_flops(cfg, "train", shape.seq_len,
+                                  shape.global_batch)
+    return analysis.Roofline(flops_dev, bytes_dev, coll, n_chips, mfl)

@@ -1,0 +1,126 @@
+"""Serving engine: prefill + batched decode with continuous batching.
+
+``serve_step`` (one new token for every sequence in the batch against the
+KV/SSM cache) is the program the decode_32k / long_500k dry-run cells lower.
+
+The engine adds the scheduling shell a real deployment needs:
+  * continuous batching: a fixed-slot batch; finished sequences release
+    their slot, queued requests claim it (cache slot reset), so the decode
+    program never recompiles (static shapes);
+  * greedy / temperature sampling;
+  * per-slot position counters (ragged progress across the batch is handled
+    by masking, not by shape changes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer, zoo
+
+
+def make_serve_step(model: transformer.Model, temperature: float = 0.0):
+    """(params, cache, batch1, pos) → (next_token, logits, cache)."""
+    def step(params, cache, batch1, pos, key):
+        logits, cache = model.decode_step(params, cache, batch1, pos)
+        logits = logits[:, 0].astype(jnp.float32)
+        if temperature > 0.0:
+            tok = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        return tok.astype(jnp.int32), logits, cache
+    return jax.jit(step)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over a single shared decode program."""
+
+    def __init__(self, model: transformer.Model, params, n_slots: int,
+                 max_seq: int, temperature: float = 0.0):
+        self.model, self.params = model, params
+        self.cfg = model.cfg
+        self.n_slots, self.max_seq = n_slots, max_seq
+        self.cache = model.init_cache(n_slots, max_seq)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.active: list[Optional[Request]] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.step_fn = make_serve_step(model, temperature)
+        self.prefill_fn = jax.jit(
+            lambda p, b: model.prefill(p, b, max_seq=max_seq))
+        self.key = jax.random.PRNGKey(0)
+        self._next_tok = np.zeros(n_slots, np.int32)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                # prefill the prompt into this slot's cache lane.
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                if self.cfg.frontend != "token":
+                    d = self.cfg.d_model
+                    batch = {"embeds": jnp.zeros(
+                        (1, len(req.prompt), d), jnp.bfloat16)}
+                logits, cache1 = self.prefill_fn(self.params, batch)
+                self.cache = _write_slot(self.cache, cache1, slot)
+                self.pos[slot] = len(req.prompt)
+                self._next_tok[slot] = int(jnp.argmax(logits[0, 0]))
+
+    def run(self, max_steps: int = 256) -> list[Request]:
+        finished = []
+        self._admit()
+        for _ in range(max_steps):
+            if not any(r is not None for r in self.active):
+                break
+            batch1 = {"tokens": jnp.asarray(self._next_tok[:, None])}
+            if self.cfg.frontend != "token":
+                table_key = jax.random.PRNGKey(7)
+                table = 0.02 * jax.random.normal(
+                    table_key, (256, self.cfg.d_model), jnp.float32)
+                batch1 = {"embeds": table[self._next_tok % 256][:, None, :]
+                          .astype(jnp.bfloat16)}
+            pos = int(max(self.pos.max(), 1) - 1)
+            self.key, sub = jax.random.split(self.key)
+            tok, _, self.cache = self.step_fn(
+                self.params, self.cache, batch1, jnp.int32(pos), sub)
+            tok = np.asarray(tok)
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                req.out.append(int(tok[slot]))
+                self.pos[slot] += 1
+                self._next_tok[slot] = tok[slot]
+                if len(req.out) >= req.max_new \
+                        or self.pos[slot] >= self.max_seq - 1:
+                    req.done = True
+                    finished.append(req)
+                    self.active[slot] = None
+            self._admit()
+        return finished
+
+
+def _write_slot(cache, cache1, slot: int):
+    """Copy a 1-batch cache into lane `slot` of the batched cache."""
+    def f(big, small):
+        # big: (L, B, ...) or (L, B, T, ...); small: (L, 1, ...)
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=1)
+    return jax.tree.map(f, cache, cache1)

@@ -1,0 +1,110 @@
+"""Optimizers built from scratch (no optax): AdamW + Lion, f32 master
+states, cosine/linear schedules, global-norm clipping.
+
+States are plain pytrees mirroring the params tree, so every param sharding
+rule applies verbatim to the optimizer state (FSDP for the 1st/2nd moments
+comes for free)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array                # () int32
+    mu: Any                        # pytree like params (f32)
+    nu: Any                        # pytree like params (f32) — empty for lion
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | lion
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"       # cosine | linear | constant
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.end_lr_frac + (1 - cfg.end_lr_frac) * 0.5 * \
+            (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1.0 - cfg.end_lr_frac) * frac
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.peak_lr * warm * decay
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def _decay_mask(path_leaf) -> bool:
+    """No weight decay on norms/biases/1-d params."""
+    return path_leaf.ndim >= 2
+
+
+def apply_updates(cfg: OptConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        _, gnorm = clip_by_global_norm(grads, 1e30)
+    lr = schedule_lr(cfg, state.step)
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+
+    if cfg.kind == "adamw":
+        mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - cfg.b1 ** sf
+        bc2 = 1 - cfg.b2 ** sf
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if _decay_mask(p):
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = OptState(step, mu, nu)
+    elif cfg.kind == "lion":
+        def upd(p, m, g):
+            u = jnp.sign(cfg.b1 * m + (1 - cfg.b1) * g)
+            if _decay_mask(p):
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, state.mu, grads)
+        mu = jax.tree.map(lambda m, g: cfg.b2 * m + (1 - cfg.b2) * g,
+                          state.mu, grads)
+        new_state = OptState(step, mu, state.nu)
+    else:
+        raise ValueError(cfg.kind)
+
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,160 @@
+"""Training step and driver: remat'd scan-over-layers forward (models/),
+microbatched gradient accumulation, mixed precision (f32 masters, bf16
+activations), donation, and deterministic synthetic data.
+
+``make_train_step`` builds the jit'd (params, opt, batch) → (params, opt,
+metrics) program with explicit in/out shardings — the exact artifact the
+multi-pod dry-run lowers and the roofline analysis reads.
+
+Microbatching is the train-side rendering of the paper's k-step idea: k
+local (micro)steps per optimizer/collective round — the gradient
+all-reduce amortizes over ``n_microbatches`` forward/backwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding
+from repro.models import transformer, zoo
+from repro.train import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt_mod.OptConfig = opt_mod.OptConfig()
+    n_microbatches: int = 1
+    aux_weight: float = 0.01
+    # sequence parallelism: NamedSharding for the residual stream, e.g.
+    # NamedSharding(mesh, P(('pod','data'), 'model', None)).  See
+    # models/transformer.forward and EXPERIMENTS.md §Perf.
+    act_sharding: Any = None
+    remat: str = "full"              # full | dots | none
+
+
+def loss_and_grads(model, params, batch, aux_weight, n_micro: int,
+                   act_sharding=None, remat: str = "full"):
+    """Microbatched value-and-grad, grads averaged in f32."""
+    if n_micro == 1:
+        (loss, (nll, aux)), grads = jax.value_and_grad(
+            lambda p: zoo.loss_fn(model, p, batch, aux_weight,
+                                  act_sharding, remat),
+            has_aux=True)(params)
+        return loss, nll, aux, grads
+
+    def reshape(v):
+        b = v.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return v.reshape((n_micro, b // n_micro) + v.shape[1:])
+    mb = jax.tree.map(reshape, batch)
+
+    def body(acc, micro):
+        loss_sum, nll_sum, aux_sum, gacc = acc
+        (loss, (nll, aux)), grads = jax.value_and_grad(
+            lambda p: zoo.loss_fn(model, p, micro, aux_weight,
+                                  act_sharding, remat),
+            has_aux=True)(params)
+        gacc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / n_micro, gacc, grads)
+        return (loss_sum + loss / n_micro, nll_sum + nll / n_micro,
+                aux_sum + aux / n_micro, gacc), None
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32), zero_g)
+    (loss, nll, aux, grads), _ = jax.lax.scan(body, init, mb)
+    return loss, nll, aux, grads
+
+
+def train_step(model, tc: TrainConfig, params, opt_state, batch):
+    loss, nll, aux, grads = loss_and_grads(
+        model, params, batch, tc.aux_weight, tc.n_microbatches,
+        tc.act_sharding, tc.remat)
+    params, opt_state, om = opt_mod.apply_updates(
+        tc.opt, params, grads, opt_state)
+    metrics = {"loss": loss, "nll": nll, "aux": aux, **om}
+    return params, opt_state, metrics
+
+
+def make_train_step(model, tc: TrainConfig, mesh: Mesh,
+                    params_shape, batch_shape, donate: bool = True):
+    """jit with explicit shardings; returns (fn, shardings dict)."""
+    cfg = model.cfg
+    pspecs = sharding.param_specs(params_shape, mesh, cfg)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    ospecs = sharding.opt_state_specs(None, pspecs, mesh)
+    oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    bspecs = sharding.batch_specs(batch_shape, mesh)
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    mshard = NamedSharding(mesh, P())
+
+    fn = jax.jit(
+        functools.partial(train_step, model, tc),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard,
+                       jax.tree.map(lambda _: mshard,
+                                    {"loss": 0, "nll": 0, "aux": 0,
+                                     "lr": 0, "grad_norm": 0})),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return fn, {"params": pshard, "opt": oshard, "batch": bshard}
+
+
+# ---------------------------------------------------------------------------
+# driver (single-host; the launcher composes this with checkpointing)
+# ---------------------------------------------------------------------------
+
+def train(model, tc: TrainConfig, steps: int, batch: int, seq: int,
+          mesh: Optional[Mesh] = None, log_every: int = 10,
+          checkpoint_dir: str | None = None, ckpt_every: int = 200,
+          data_seed: int = 17):
+    from repro.train import checkpoint as ckpt_mod
+    from repro.train.data import synthetic_batch
+
+    cfg = model.cfg
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt_state = opt_mod.init_opt_state(params)
+    start_step = 0
+    if checkpoint_dir:
+        restored = ckpt_mod.try_restore(checkpoint_dir, params, opt_state)
+        if restored is not None:
+            params, opt_state, start_step = restored
+
+    if mesh is None:
+        step_fn = jax.jit(functools.partial(train_step, model, tc),
+                          donate_argnums=(0, 1))
+    else:
+        params_shape = jax.eval_shape(model.init, key)
+        batch_shape = jax.eval_shape(
+            lambda: zoo.batch_inputs(cfg, batch, seq, concrete=False))
+        step_fn, _ = make_train_step(model, tc, mesh, params_shape,
+                                     jax.tree.map(lambda x: x, batch_shape))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, steps):
+        b = synthetic_batch(cfg, batch, seq, seed=data_seed, step=step)
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            history.append({"step": step, **m, "elapsed_s": dt})
+            print(f"step {step:5d}  loss {m['loss']:.4f}  "
+                  f"nll {m['nll']:.4f}  lr {m['lr']:.2e}  "
+                  f"gnorm {m['grad_norm']:.2f}  {dt:8.1f}s")
+        if checkpoint_dir and (step + 1) % ckpt_every == 0:
+            ckpt_mod.save(checkpoint_dir, params, opt_state, step + 1)
+    if checkpoint_dir:
+        ckpt_mod.save(checkpoint_dir, params, opt_state, steps)
+    return params, opt_state, history

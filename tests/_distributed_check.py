@@ -1,0 +1,64 @@
+"""Subprocess body for distributed tests: runs with 8 forced host devices.
+
+Invoked by test_distributed.py; exits non-zero on any mismatch."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import stencils  # noqa: E402
+from repro.distributed import halo, multistep  # noqa: E402
+
+
+def check(name, shape, steps, k, engine="jnp", **kw):
+    spec = stencils.make(name)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    got = multistep.distributed_run(spec, x, steps, k, engine=engine, **kw)
+    want = stencils.apply_steps(spec, x, steps, bc="periodic")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)
+    print(f"ok: {name} {shape} steps={steps} k={k} engine={engine}")
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+
+    # 1-D decomposition over 8 devices, k-step trapezoid sweeps
+    check("1d3p", (8 * 64,), steps=4, k=2)
+    check("1d3p", (8 * 64,), steps=4, k=4)
+    check("1d5p", (8 * 64,), steps=2, k=2)
+
+    # 2-D decomposition (4×2 process grid), both axes halo'd
+    check("2d5p", (32, 32), steps=4, k=2)
+    check("2d9p", (32, 32), steps=2, k=2)
+
+    # 3-D: 2-D process grid over the two leading axes
+    check("3d7p", (16, 16, 16), steps=2, k=2)
+
+    # pallas local engine (1-D, transpose-layout pipelined kernel, whole-
+    # block halos, edge_mask=False)
+    check("1d3p", (8 * 4 * 4 * 4,), steps=4, k=2, engine="pallas", vl=4, m=4)
+
+    # one-step exchange (k=1) baseline
+    check("1d3p", (8 * 64,), steps=3, k=1)
+
+    # halo byte accounting sanity
+    b = halo.halo_bytes_per_exchange((64,), 2, ["dx"], 4)
+    assert b == 2 * 2 * 1 * 4, b
+    b2 = halo.halo_bytes_per_exchange((16, 16), 2, ["dx", "dy"], 4)
+    assert b2 == 2 * 2 * 16 * 4 + 2 * 2 * 20 * 4, b2
+
+    print("ALL DISTRIBUTED CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the 512-device override is
+# exclusively for launch/dryrun.py, which sets XLA_FLAGS itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_src = os.path.join(os.path.dirname(_here), "src")
+if _src not in sys.path:
+    sys.path.insert(0, _src)
+
+# NOTE: x64 is NOT enabled globally — model code is f32/bf16 native.  Tests
+# that want f64 oracles use jax.experimental.enable_x64 locally.

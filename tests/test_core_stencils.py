@@ -1,0 +1,121 @@
+"""Core stencil semantics: specs, oracles, layouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layouts, stencils
+
+ALL = ["1d3p", "1d5p", "2d5p", "2d9p", "3d7p", "3d27p"]
+SHAPES = {
+    1: (96,),
+    2: (24, 32),
+    3: (12, 8, 16),
+}
+
+
+def _rand(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_spec_registry(name):
+    spec = stencils.make(name)
+    assert spec.name == name
+    npts = {"1d3p": 3, "1d5p": 5, "2d5p": 5, "2d9p": 9, "3d7p": 7,
+            "3d27p": 27}[name]
+    assert spec.npoints == npts
+    assert spec.flops_per_point == 2 * npts - 1
+    # coefficients sum to 1 (stable diffusion-like stencils)
+    total = sum(c for _, c in spec.taps)
+    assert abs(total - 1.0) < 1e-12
+    cube = spec.coeff_array()
+    assert cube.shape == (2 * spec.r + 1,) * spec.ndim
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_jnp_matches_numpy_oracle(name):
+    spec = stencils.make(name)
+    x = _rand(SHAPES[spec.ndim])
+    got = np.asarray(stencils.apply_once(spec, jnp.asarray(x)))
+    want = stencils.numpy_apply_once(spec, x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["1d3p", "2d5p"])
+def test_dirichlet_keeps_ring(name):
+    spec = stencils.make(name)
+    x = _rand(SHAPES[spec.ndim])
+    y = np.asarray(stencils.apply_steps(spec, jnp.asarray(x), 3,
+                                        bc="dirichlet"))
+    mask = np.asarray(stencils.interior_mask(spec, x.shape))
+    np.testing.assert_array_equal(y[~mask], x[~mask])
+    assert not np.allclose(y[mask], x[mask])
+
+
+def test_stability_periodic():
+    # coefficients sum to one and are positive → max-norm non-increasing
+    spec = stencils.make("2d5p")
+    x = jnp.asarray(_rand((16, 16)))
+    y = stencils.apply_steps(spec, x, 50)
+    assert jnp.max(jnp.abs(y)) <= jnp.max(jnp.abs(x)) + 1e-5
+    assert jnp.isfinite(y).all()
+
+
+# ---------------------------------------------------------------------------
+# layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vl,m", [(4, 4), (8, 8), (4, 8), (8, 2)])
+def test_transpose_roundtrip(vl, m):
+    n = vl * m * 5
+    x = jnp.arange(n, dtype=jnp.float32)
+    t = layouts.to_transpose_layout(x, vl, m)
+    assert t.shape == (5, m, vl)
+    back = layouts.from_transpose_layout(t, vl, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_transpose_layout_element_placement():
+    # VS[s, j] = x[b*vl*m + j*m + s]  (paper Fig. 2 convention)
+    vl, m, nb = 4, 4, 3
+    n = vl * m * nb
+    x = jnp.arange(n)
+    t = np.asarray(layouts.to_transpose_layout(x, vl, m))
+    for b in range(nb):
+        for s in range(m):
+            for j in range(vl):
+                assert t[b, s, j] == b * vl * m + j * m + s
+
+
+def test_index_map_matches():
+    vl, m, nb = 4, 8, 4
+    n = vl * m * nb
+    x = np.arange(n)
+    perm = layouts.transpose_index_map(n, vl, m)
+    t = np.asarray(layouts.to_transpose_layout(jnp.asarray(x), vl, m))
+    np.testing.assert_array_equal(t.reshape(-1), x[perm])
+
+
+def test_dlt_is_single_block_transpose():
+    vl, n = 4, 28  # the paper's Fig. 1 example size
+    x = jnp.arange(n, dtype=jnp.float32)
+    d = np.asarray(layouts.dlt_layout(x, vl))
+    assert d.shape == (7, 4)
+    # row 1 should be (1, 8, 15, 22) — the paper's example vector
+    np.testing.assert_array_equal(d[1], [1, 8, 15, 22])
+    back = layouts.from_dlt_layout(jnp.asarray(d), vl)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("shift", [-2, -1, 1, 2])
+def test_shift_in_layout_periodic(shift):
+    vl, m, nb = 4, 4, 3
+    n = vl * m * nb
+    x = jnp.arange(n, dtype=jnp.float32)
+    t = layouts.to_transpose_layout(x, vl, m)
+    shifted = layouts.shift_in_layout(t, shift)
+    back = layouts.from_transpose_layout(shifted, vl, m)
+    want = np.roll(np.arange(n), -shift)
+    np.testing.assert_array_equal(np.asarray(back), want)

@@ -1,0 +1,23 @@
+"""Distributed halo runtime — runs in a subprocess with 8 forced devices
+(XLA locks the device count at first init, so the main pytest process keeps
+its single real device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+@pytest.mark.timeout(600)
+def test_distributed_suite():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_distributed_check.py")],
+        capture_output=True, text=True, env=env, timeout=580)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, "distributed checks failed"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

@@ -1,0 +1,47 @@
+"""Dry-run integration: one real cell through the actual
+``repro.launch.dryrun`` machinery in a subprocess (512 forced devices,
+(16,16) production mesh), asserting it lowers, compiles, and emits sane
+roofline JSON.  The full 66-cell sweep runs out-of-band (see
+EXPERIMENTS.md §Dry-run); this test keeps the path from rotting."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+
+@pytest.mark.timeout(560)
+def test_dryrun_single_cell():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    with tempfile.TemporaryDirectory() as out:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "qwen2-vl-2b", "--shape", "train_4k",
+             "--mesh", "single", "--out", out],
+            capture_output=True, text=True, env=env, timeout=540,
+            cwd=REPO)
+        sys.stdout.write(proc.stdout[-2000:])
+        sys.stderr.write(proc.stderr[-2000:])
+        assert proc.returncode == 0
+        assert "DRY-RUN PASS" in proc.stdout
+        files = [f for f in os.listdir(out) if f.endswith(".json")]
+        assert len(files) == 1
+        with open(os.path.join(out, files[0])) as f:
+            r = json.load(f)
+        assert r["n_devices"] == 256
+        roof = r["roofline"]
+        assert roof["t_compute_s"] > 0 and roof["t_memory_s"] > 0
+        assert roof["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 < roof["mfu_bound"] <= 1.0
+        assert r["collectives"], "no collectives found in 256-way program?"
+        # memory fits a 16 GB HBM chip
+        mem = r["memory_analysis"]
+        if mem.get("temp_size_bytes") is not None:
+            assert mem["temp_size_bytes"] < 16e9

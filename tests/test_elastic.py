@@ -1,0 +1,25 @@
+"""Elastic rescaling: checkpoint written on an 8-device mesh restores onto
+a 2-device mesh bit-exactly and training continues (subprocess — forced
+multi-device)."""
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+@pytest.mark.timeout(560)
+def test_elastic_rescale_roundtrip():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as d:
+        proc = subprocess.run(
+            [sys.executable, os.path.join(HERE, "_elastic_check.py"), d],
+            capture_output=True, text=True, env=env, timeout=540)
+        sys.stdout.write(proc.stdout)
+        sys.stderr.write(proc.stderr[-3000:])
+        assert proc.returncode == 0
+        assert "ELASTIC CHECK PASSED" in proc.stdout

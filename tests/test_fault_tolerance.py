@@ -1,0 +1,57 @@
+"""Fault tolerance end-to-end: crash + resume must be bit-equivalent to an
+uninterrupted run (atomic checkpoints + stateless-seekable data)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import zoo
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_crash_resume_equivalence(tmp_path):
+    cfg = get_arch("qwen2_vl_2b").smoke()
+    model = zoo.build(cfg)
+    tc = train_loop.TrainConfig(opt=opt_mod.OptConfig(
+        peak_lr=1e-3, warmup_steps=2, total_steps=10))
+
+    # uninterrupted 10 steps
+    p_full, o_full, _ = train_loop.train(
+        model, tc, steps=10, batch=4, seq=16, log_every=100)
+
+    # 10 steps with a "crash" after 5: run to 5 with checkpointing...
+    d = str(tmp_path / "ckpt")
+    train_loop.train(model, tc, steps=5, batch=4, seq=16,
+                     log_every=100, checkpoint_dir=d, ckpt_every=5)
+    # ...then a fresh process-equivalent resume (restores step=5, replays
+    # the SAME data for steps 5..9 thanks to (seed, step) addressing)
+    p_res, o_res, _ = train_loop.train(
+        model, tc, steps=10, batch=4, seq=16, log_every=100,
+        checkpoint_dir=d, ckpt_every=100)
+
+    _params_equal(p_full, p_res)
+    assert int(o_full.step) == int(o_res.step) == 10
+
+
+def test_elastic_restore_is_shape_stable(tmp_path):
+    """Checkpoints store logical tensors: a job restarted with a different
+    device layout restores the same pytree (resharding is applied at
+    device_put time — single-device here, the property is structural)."""
+    from repro.train import checkpoint as ckpt
+    cfg = get_arch("gemma_2b").smoke()
+    model = zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = opt_mod.init_opt_state(params)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, params, opt, 3)
+    p2, o2, step = ckpt.restore(ckpt.latest(d), params, opt)
+    assert step == 3
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)):
+        assert a.shape == b.shape and a.dtype == b.dtype

@@ -1,0 +1,178 @@
+"""Pallas kernels (interpret mode) vs ref.py oracles — shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layouts, stencils
+from repro.kernels import ops, ref
+from repro.kernels import stencil_kernels as sk
+
+
+def _rand(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# block transpose kernel (§3.5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vl,m,nb", [(8, 8, 4), (8, 4, 6), (16, 8, 3),
+                                     (128, 8, 2)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_block_transpose_kernel(vl, m, nb, dtype):
+    x = _rand((vl * m * nb,), dtype=dtype)
+    got = sk.block_transpose(x, vl, m, interpret=True)
+    want = ref.block_transpose_ref(x, vl, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    back = sk.block_untranspose(got, vl, m, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# 1-D multistep pipeline kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+@pytest.mark.parametrize("name,vl,m,nb", [
+    ("1d3p", 8, 8, 6), ("1d3p", 8, 4, 8), ("1d3p", 16, 8, 5),
+    ("1d5p", 8, 8, 6), ("1d5p", 8, 4, 8),
+])
+def test_stencil1d_multistep(name, vl, m, nb, k):
+    spec = stencils.make(name)
+    x = _rand((vl * m * nb,), seed=1)
+    t = layouts.to_transpose_layout(x, vl, m)
+    got_t = sk.stencil1d_multistep(spec, t, k, interpret=True)
+    got = layouts.from_transpose_layout(got_t, vl, m)
+    want = ref.multistep_ref(spec, x, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-5), (np.float64, 1e-12)])
+def test_stencil1d_multistep_dtypes(dtype, tol):
+    spec = stencils.make("1d3p")
+    x = _rand((8 * 8 * 5,), seed=2, dtype=dtype)
+    t = layouts.to_transpose_layout(x, 8, 8)
+    got = layouts.from_transpose_layout(
+        sk.stencil1d_multistep(spec, t, 2, interpret=True), 8, 8)
+    want = ref.multistep_ref(spec, x, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# n-D multistep pipeline kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("name,shape,vl,m,t0", [
+    ("2d5p", (16, 64), 8, 4, 4),
+    ("2d5p", (24, 64), 8, 8, 8),
+    ("2d9p", (16, 64), 8, 4, 4),
+    ("3d7p", (8, 6, 64), 8, 4, 4),
+    ("3d27p", (8, 6, 64), 8, 4, 2),
+])
+def test_stencil_nd_multistep(name, shape, vl, m, t0, k):
+    spec = stencils.make(name)
+    x = _rand(shape, seed=3)
+    t = layouts.to_transpose_layout(x, vl, m)
+    got_t = sk.stencil_nd_multistep(spec, t, k, t0, interpret=True)
+    got = layouts.from_transpose_layout(got_t, vl, m)
+    want = ref.multistep_ref(spec, x, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# jit'd public wrappers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,shape", [
+    ("1d3p", (512,)), ("1d5p", (512,)),
+    ("2d5p", (16, 64)), ("3d7p", (8, 4, 64)),
+])
+def test_ops_stencil_multistep(name, shape):
+    spec = stencils.make(name)
+    x = _rand(shape, seed=4)
+    got = ops.stencil_multistep(spec, x, 2, interpret=True)
+    want = ref.multistep_ref(spec, x, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_stencil_run_many_steps():
+    spec = stencils.make("1d3p")
+    x = _rand((8 * 8 * 6,), seed=5)
+    got = ops.stencil_run(spec, x, steps=6, k=2, vl=8, m=8, interpret=True)
+    want = ref.multistep_ref(spec, x, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# one-step baseline kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["1d3p", "1d5p"])
+def test_onestep_baselines(name):
+    spec = stencils.make(name)
+    x = _rand((8 * 8 * 4,), seed=6)
+    want = ref.onestep_periodic_ref(spec, x)
+    got_naive = ops.stencil_onestep_naive(spec, x, 8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_naive), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    got_tr = ops.stencil_onestep_transpose(spec, x, 8, 8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_tr), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# TPU-native tile shape (128 lanes) — interpret mode, one heavier case.
+def test_tpu_native_tile_1d():
+    spec = stencils.make("1d3p")
+    x = _rand((128 * 8 * 3,), seed=7)
+    got = ops.stencil_multistep(spec, x, 2, vl=128, m=8, interpret=True)
+    want = ref.multistep_ref(spec, x, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name,shape,vl,m,t0", [
+    ("2d5p", (16, 64), 8, 4, 4),
+])
+def test_stencil_nd_multistep_bf16(name, shape, vl, m, t0):
+    spec = stencils.make(name)
+    x = _rand(shape, seed=9).astype(jnp.bfloat16)
+    t = layouts.to_transpose_layout(x, vl, m)
+    got_t = sk.stencil_nd_multistep(spec, t, 2, t0, interpret=True)
+    got = layouts.from_transpose_layout(got_t, vl, m).astype(jnp.float32)
+    want = ref.multistep_ref(spec, x.astype(jnp.float32), 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_stencil1d_multistep_bf16():
+    spec = stencils.make("1d3p")
+    x = _rand((8 * 8 * 5,), seed=10).astype(jnp.bfloat16)
+    t = layouts.to_transpose_layout(x, 8, 8)
+    got = layouts.from_transpose_layout(
+        sk.stencil1d_multistep(spec, t, 2, interpret=True), 8, 8)
+    want = ref.multistep_ref(spec, x.astype(jnp.float32), 2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+def test_ring_mask_closed_form():
+    """The in-kernel iota ring masks equal the index-arithmetic version
+    (_ring_masks_np) for every (vl, m, r) with r <= m."""
+    import jax.lax as lax
+    for vl, m, r in [(4, 4, 1), (8, 8, 2), (8, 4, 3), (16, 8, 1),
+                     (128, 8, 2)]:
+        fm, lm = sk._ring_masks_np(vl, m, r)
+        rows = np.arange(m)[:, None]
+        lanes = np.arange(vl)[None, :]
+        first = (lanes == 0) & (rows < r)
+        last = (lanes == vl - 1) & (rows >= m - r)
+        np.testing.assert_array_equal(fm, first, err_msg=f"{vl},{m},{r}")
+        np.testing.assert_array_equal(lm, last, err_msg=f"{vl},{m},{r}")

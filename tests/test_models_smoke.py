@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-style grad step + prefill/decode consistency on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models import zoo
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    return get_arch(request.param)
+
+
+def _build_smoke(arch_cfg):
+    cfg = arch_cfg.smoke()
+    model = zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params = _build_smoke(arch)
+    b, s = 2, 32
+    batch = zoo.batch_inputs(cfg, b, s, key=jax.random.PRNGKey(1))
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    logits, aux = jax.jit(model.forward)(params, inputs)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all(), arch.name
+    assert jnp.isfinite(aux)
+
+
+def test_grad_step_no_nans(arch):
+    cfg, model, params = _build_smoke(arch)
+    batch = zoo.batch_inputs(cfg, 2, 16, key=jax.random.PRNGKey(2))
+
+    def loss(p):
+        l, _ = zoo.loss_fn(model, p, batch)
+        return l
+
+    l0, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert jnp.isfinite(l0)
+    flat = jax.tree.leaves(grads)
+    assert all(jnp.isfinite(g).all() for g in flat), arch.name
+    # at least some gradient signal everywhere important
+    gnorm = sum(jnp.sum(jnp.abs(g)) for g in flat)
+    assert gnorm > 0
+
+
+def test_decode_matches_forward(arch):
+    """prefill + N decode steps must match the full forward logits.
+
+    MoE archs run this with dense routing (top_k = n_experts): top-k
+    selection is discontinuous, so bf16 path differences between the two
+    implementations can flip near-tied experts — dense routing makes the
+    comparison continuous while exercising the identical decode path
+    (router behaviour itself is covered by tests/test_moe.py)."""
+    import dataclasses
+    cfg, model, params = _build_smoke(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, top_k=cfg.n_experts,
+                                  capacity_factor=4.0)
+        model = zoo.build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = zoo.batch_inputs(cfg, b, s, key=jax.random.PRNGKey(3))
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    full_logits, _ = jax.jit(model.forward)(params, inputs)
+
+    n_pre = s - 4
+    pre_inputs = {k: v[:, :n_pre] for k, v in inputs.items()}
+    logits_last, cache = jax.jit(
+        lambda p, bb: model.prefill(p, bb, max_seq=s))(params, pre_inputs)
+    # bf16 activations: chunked-vs-sequential paths differ by a few ulps
+    # (f32 exactness is covered by tests/test_ssm.py); compare at bf16 grain.
+    np.testing.assert_allclose(
+        np.asarray(logits_last[:, 0].astype(jnp.float32)),
+        np.asarray(full_logits[:, n_pre - 1].astype(jnp.float32)),
+        rtol=6e-2, atol=0.2)
+
+    step = jax.jit(model.decode_step)
+    for i in range(n_pre, s):
+        tok_inputs = {k: v[:, i:i + 1] for k, v in inputs.items()}
+        logits, cache = step(params, cache, tok_inputs, jnp.int32(i))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0].astype(jnp.float32)),
+            np.asarray(full_logits[:, i].astype(jnp.float32)),
+            rtol=6e-2, atol=0.2, err_msg=f"{arch.name} pos {i}")
+
+
+def test_param_count_close_to_analytic(arch):
+    cfg, model, params = _build_smoke(arch)
+    got = zoo.param_count(params)
+    want = cfg.param_count()
+    assert abs(got - want) / want < 0.25, (arch.name, got, want)
+
+
+def test_full_config_analytic_size(arch):
+    """Full configs should be in the advertised parameter ballpark."""
+    n = arch.param_count()
+    expect = {
+        "moonshot-v1-16b-a3b": 16e9, "mixtral-8x22b": 141e9,
+        "zamba2-2.7b": 2.7e9, "mamba2-2.7b": 2.7e9, "gemma-2b": 2.5e9,
+        "nemotron-4-15b": 15e9, "deepseek-coder-33b": 33e9,
+        "starcoder2-7b": 7e9, "musicgen-large": 3.3e9, "qwen2-vl-2b": 1.5e9,
+    }[arch.name]
+    assert 0.4 * expect < n < 1.9 * expect, (arch.name, n / 1e9)

@@ -1,0 +1,95 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layouts, stencils, vectorize
+from repro.core.unroll_jam import multistep_pipelined
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(vl=st.sampled_from([2, 4, 8, 16]), m=st.sampled_from([2, 4, 8]),
+       nb=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_layout_roundtrip(vl, m, nb, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(vl * m * nb), dtype=jnp.float32)
+    t = layouts.to_transpose_layout(x, vl, m)
+    back = layouts.from_transpose_layout(t, vl, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(a=st.integers(-3, 3), b=st.integers(-3, 3), seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_shift_composition(a, b, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(4 * 4 * 3), dtype=jnp.float32)
+    t = layouts.to_transpose_layout(x, 4, 4)
+    lhs = layouts.shift_in_layout(layouts.shift_in_layout(t, a), b)
+    rhs = layouts.shift_in_layout(t, a + b)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=0)
+
+
+@given(name=st.sampled_from(["1d3p", "1d5p", "2d5p", "2d9p"]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_stencil_linearity(name, seed):
+    spec = stencils.make(name)
+    shape = (64,) if spec.ndim == 1 else (8, 32)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    y = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    a, b = 0.7, -1.3
+    lhs = stencils.apply_once(spec, a * x + b * y)
+    rhs = a * stencils.apply_once(spec, x) + b * stencils.apply_once(spec, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(name=st.sampled_from(["1d3p", "2d5p", "3d7p", "2d9p"]),
+       seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_conservation_periodic(name, seed, steps):
+    # coefficients sum to 1 → the grid total is conserved under periodic BC
+    import jax
+    spec = stencils.make(name)
+    shape = {1: (64,), 2: (8, 16), 3: (4, 4, 8)}[spec.ndim]
+    rng = np.random.default_rng(seed)
+    with jax.enable_x64(True):
+        x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float64)
+        y = stencils.apply_once(spec, x)
+        for _ in range(steps - 1):
+            y = stencils.apply_once(spec, y)
+        np.testing.assert_allclose(float(jnp.sum(y)), float(jnp.sum(x)),
+                                   rtol=1e-9, atol=1e-9)
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 3),
+       nb=st.integers(4, 8))
+@settings(max_examples=10, deadline=None)
+def test_pipelined_equals_oracle(seed, k, nb):
+    spec = stencils.make("1d3p")
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(4 * 4 * nb), dtype=jnp.float32)
+    got = multistep_pipelined(spec, x, k, vl=4, m=4)
+    want = stencils.apply_steps(spec, x, k, bc="dirichlet")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(name=st.sampled_from(["1d3p", "1d5p"]), seed=st.integers(0, 999),
+       vl=st.sampled_from([4, 8]), m=st.sampled_from([4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_schemes_agree(name, seed, vl, m):
+    spec = stencils.make(name)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(vl * m * 4), dtype=jnp.float32)
+    want = np.asarray(stencils.apply_once(spec, x))
+    for scheme in ("multiload", "reorg"):
+        got = vectorize.get_scheme(scheme)(spec, x)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                                   atol=2e-5)
+    got = vectorize.step_transpose(spec, x, vl=vl, m=m)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,95 @@
+"""Cross-check the analytic roofline model against XLA cost_analysis at
+unit scale (n_layers=1, one device, no microbatching — where the
+scan-body-counted-once quirk is harmless because trip counts are 1)."""
+import dataclasses
+import functools
+
+import jax
+import pytest
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.models import zoo
+from repro.roofline import analysis, model as rmodel
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+
+MF1 = rmodel.MeshFactors(dp=1, tp=1, fsdp=1)
+KN1 = rmodel.PerfKnobs(n_microbatches=1, fsdp=False)
+
+
+def _unit_cfg(arch_id, **kw):
+    cfg = get_arch(arch_id).smoke()
+    return dataclasses.replace(cfg, n_layers=1, **kw)
+
+
+@pytest.mark.parametrize("arch_id", ["gemma_2b", "nemotron_4_15b"])
+def test_train_flops_close_to_hlo(arch_id):
+    cfg = _unit_cfg(arch_id)
+    model = zoo.build(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(opt_mod.init_opt_state, params)
+    b, s = 4, 64
+    batch = zoo.batch_inputs(cfg, b, s, concrete=False)
+    tc = train_loop.TrainConfig(opt=opt_mod.OptConfig(total_steps=10))
+    fn = jax.jit(functools.partial(train_loop.train_step, model, tc))
+    hlo = fn.lower(params, opt, batch).compile().cost_analysis()
+    flops_hlo = float(hlo["flops"])
+
+    shape = ShapeConfig("unit", s, b, "train")
+    roof = rmodel.train_cell(cfg, shape, MF1, KN1)
+    ratio = roof.flops_per_device / flops_hlo
+    assert 0.4 < ratio < 2.5, (arch_id, ratio, roof.flops_per_device,
+                               flops_hlo)
+
+
+def test_decode_flops_close_to_hlo():
+    cfg = _unit_cfg("gemma_2b")
+    model = zoo.build(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    b, s = 8, 128
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    tok = zoo.decode_inputs(cfg, b, concrete=False)
+    tok.pop("labels")
+    fn = jax.jit(lambda p, c, t: model.decode_step(p, c, t, 5))
+    hlo = fn.lower(params, cache, tok).compile().cost_analysis()
+    flops_hlo = float(hlo["flops"])
+    shape = ShapeConfig("unit", s, b, "decode")
+    roof = rmodel.decode_cell(cfg, shape, MF1, KN1)
+    ratio = roof.flops_per_device / flops_hlo
+    assert 0.3 < ratio < 3.0, (ratio, roof.flops_per_device, flops_hlo)
+
+
+def test_terms_scale_sanely():
+    """Analytic model responds correctly to its knobs."""
+    cfg = get_arch("deepseek_coder_33b")
+    shape = ShapeConfig("train_4k", 4096, 256, "train")
+    mf = rmodel.MeshFactors.single()
+    base = rmodel.train_cell(cfg, shape, mf, rmodel.PerfKnobs(
+        n_microbatches=8))
+    # more microbatches → more collective bytes (re-gathered weights)
+    more = rmodel.train_cell(cfg, shape, mf, rmodel.PerfKnobs(
+        n_microbatches=16))
+    assert more.coll_bytes_per_device > base.coll_bytes_per_device
+    # no remat → fewer flops
+    norem = rmodel.train_cell(cfg, shape, mf, rmodel.PerfKnobs(
+        n_microbatches=8, remat=False))
+    assert norem.flops_per_device < base.flops_per_device
+    # decode: bf16 serving halves the weight-read bytes
+    dshape = ShapeConfig("decode_32k", 32768, 128, "decode")
+    d32 = rmodel.decode_cell(cfg, dshape, mf, rmodel.PerfKnobs())
+    d16 = rmodel.decode_cell(cfg, dshape, mf, rmodel.PerfKnobs(
+        serve_dtype_bytes=2))
+    assert d16.bytes_per_device < d32.bytes_per_device
+    # MoE: mixtral train is more collective-heavy than dense of same size
+    mix = get_arch("mixtral_8x22b")
+    moe_roof = rmodel.train_cell(mix, shape, mf,
+                                 rmodel.PerfKnobs(n_microbatches=8))
+    assert moe_roof.coll_bytes_per_device > 0
+
+
+def test_model_flops_definitions():
+    cfg = get_arch("moonshot_v1_16b_a3b")
+    act, tot = cfg.active_param_count(), cfg.param_count()
+    assert act < 0.35 * tot          # 64e top-6(+2 shared) ⇒ ~aggressive MoE
+    mfl_train = analysis.lm_model_flops(cfg, "train", 4096, 256)
+    assert mfl_train == 6.0 * act * 4096 * 256

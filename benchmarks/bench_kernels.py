@@ -30,7 +30,8 @@ def _intensity(spec, k: int):
     t = layouts.to_transpose_layout(x, VL, M)
     fn = jax.jit(lambda v: sk.stencil1d_multistep(spec, v, k,
                                                   interpret=True))
-    c = fn.lower(t).compile().cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+    c = cost_analysis_dict(fn.lower(t).compile().cost_analysis())
     flops = float(c.get("flops", 0.0))
     byts = float(c.get("bytes accessed", 1.0))
     return flops, byts, flops / byts

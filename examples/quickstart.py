@@ -4,9 +4,12 @@
 
 Runs the same 1D3P problem through every vectorization scheme (multiload /
 reorg / DLT / transpose layout), the k-step unroll-and-jam, the tessellate
-tiler and the Pallas kernel, checks they all agree with the oracle, and
-prints a mini benchmark."""
+tiler and the Pallas kernel, checks they all agree with the oracle, prints
+a mini benchmark, and finishes with ``plan="auto"`` — the measured-search
+autotuner picking (and caching) the fastest plan for this machine."""
+import os
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, "src")
@@ -57,6 +60,24 @@ def main():
     err = float(jnp.max(jnp.abs(y - want)))
     print(f"  {'pallas kernel k=2':18s} max_err={err:.2e}  "
           f"(interpret mode on CPU)")
+    assert err < 1e-3
+
+    # plan="auto": measured search over every legal plan, winner cached
+    if "REPRO_PLAN_CACHE" not in os.environ:
+        os.environ["REPRO_PLAN_CACHE"] = os.path.join(tempfile.mkdtemp(),
+                                                      "plans.json")
+    t0 = time.perf_counter()
+    y = prob.run(x, STEPS, plan="auto")       # tunes (first call, measured)
+    jax.block_until_ready(y)
+    t_tune = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    y = prob.run(x, STEPS, plan="auto")       # cache hit — no measurement
+    jax.block_until_ready(y)
+    dt = time.perf_counter() - t0
+    err = float(jnp.max(jnp.abs(y - oracle)))
+    print(f"  {'plan=auto':18s} max_err={err:.2e}  {dt*1e3:7.1f} ms "
+          f"(tuning took {t_tune:.1f}s, cached in "
+          f"{os.environ['REPRO_PLAN_CACHE']})")
     assert err < 1e-3
     print("OK — all paths agree with the oracle")
 

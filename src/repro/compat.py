@@ -1,0 +1,36 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+Two call sites drift across jax releases:
+
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` (keyword
+  ``check_rep``) to ``jax.shard_map`` (keyword ``check_vma``).
+* ``Compiled.cost_analysis()`` — older jaxlibs return a one-element list of
+  per-program dicts, newer ones a flat dict.
+
+Everything else in the repo calls through here so the version split lives
+in exactly one file.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
+def cost_analysis_dict(cost: Any) -> dict:
+    """Normalize ``compiled.cost_analysis()`` to a flat {metric: value} dict."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)

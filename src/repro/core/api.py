@@ -52,43 +52,89 @@ class StencilProblem:
     # ------------------------------------------------------------------
     def run(self, x: jax.Array, steps: int,
             plan: StencilPlan | str = "auto") -> jax.Array:
-        plan = self.default_plan() if plan == "auto" else plan
+        """Advance ``x`` by ``steps`` Jacobi steps under ``plan``.
+
+        plan:
+          * a ``StencilPlan`` — executed as given;
+          * ``"default"`` — the static fallback plan (no measurement);
+          * ``"auto"`` — resolved by the measured-search autotuner
+            (:mod:`repro.core.autotune`): legal candidates are enumerated,
+            roofline-pruned, the best few are *timed on this device*, and
+            the winner is persisted to the JSON plan cache (path from the
+            ``REPRO_PLAN_CACHE`` env var, default
+            ``~/.cache/repro/plan_cache.json``; see the autotune module
+            docstring for the file format).  Later runs of the same
+            (stencil, shape, dtype, backend, device-kind) signature hit the
+            cache and skip re-measurement.
+
+        Any plan is valid for any ``steps``: when k (or the tessellation
+        height) does not divide ``steps``, the remainder runs as fused
+        single steps.
+        """
+        if isinstance(plan, str):
+            if plan == "auto":
+                from repro.core import autotune
+                plan = autotune.best_plan(self)
+            elif plan == "default":
+                plan = self.default_plan()
+            else:
+                raise ValueError(f"unknown plan {plan!r}; expected 'auto', "
+                                 f"'default' or a StencilPlan")
         assert isinstance(plan, StencilPlan)
         if plan.backend == "pallas":
             from repro.kernels import ops
-            return ops.stencil_run(self.spec, x, steps, k=plan.k)
+            # m=None means "kernel auto-picks the native tile" (vl=128 on
+            # TPU); tuner-built pallas plans always carry an explicit
+            # (vl, m) pair and those are honored.
+            vl = plan.vl if plan.m is not None else None
+            return self._chunked(
+                x, steps, plan.k,
+                lambda v, n, k: ops.stencil_run(self.spec, v, n, k=k,
+                                                vl=vl, m=plan.m))
         if plan.backend == "distributed":
             from repro.distributed import multistep as dms
-            return dms.distributed_run(self.spec, x, steps, k=plan.k)
+            return self._chunked(
+                x, steps, plan.k,
+                lambda v, n, k: dms.distributed_run(self.spec, v, n, k=k))
         if plan.tiling == "tessellate":
             h = plan.height or plan.k
             tile = plan.tile or self._default_tile(h)
-            return tessellate.tessellate_run(
-                self.spec, x, steps, tile, h, inner=plan.scheme
-                if plan.scheme in ("fused", "transpose", "dlt") else "fused",
-                vl=plan.vl)
+
+            def step(v, n, k):
+                if k == 1:          # remainder: fused single steps
+                    return vectorize.run_scheme("fused", self.spec, v, n,
+                                                plan.vl, plan.m)
+                return tessellate.tessellate_run(
+                    self.spec, v, n, tile, h, inner=plan.scheme
+                    if plan.scheme in ("fused", "transpose", "dlt")
+                    else "fused", vl=plan.vl)
+            return self._chunked(x, steps, h, step)
         if plan.k > 1:
-            assert steps % plan.k == 0
-            out = x
-            for _ in range(steps // plan.k):
-                out = unroll_jam.multistep_fused(self.spec, out, plan.k)
-            return out
+            def step(v, n, k):
+                for _ in range(n // k):
+                    v = unroll_jam.multistep_fused(self.spec, v, k)
+                return v
+            return self._chunked(x, steps, plan.k, step)
         return vectorize.run_scheme(plan.scheme, self.spec, x, steps,
                                     plan.vl, plan.m)
 
+    def _chunked(self, x: jax.Array, steps: int, k: int, step) -> jax.Array:
+        """Run ``steps`` as k-blocked sweeps plus a single-step remainder:
+        step(x, n_steps, k) advances x by n_steps in k-step blocks."""
+        main = steps - steps % k
+        if main:
+            x = step(x, main, k)
+        if steps - main:
+            x = step(x, steps - main, 1)
+        return x
+
     def default_plan(self) -> StencilPlan:
+        """The static pre-autotuner plan — also the baseline every tuning
+        run measures against (the tuned pick can never be slower)."""
         return StencilPlan(scheme="transpose", k=2, vl=8)
 
     def _default_tile(self, h: int) -> tuple[int, ...]:
-        r = self.spec.r
-        w = max(4 * h * r, 8)
-        tile = []
-        for n in self.shape:
-            t = min(w, n)
-            while n % t:
-                t -= 1
-            tile.append(max(t, 2 * h * r))
-        return tuple(tile)
+        return tessellate.fit_tile(self.spec, self.shape, h)
 
     # ------------------------------------------------------------------
     def model_flops(self, steps: int) -> int:

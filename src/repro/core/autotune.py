@@ -1,0 +1,372 @@
+"""Measured-search autotuner behind ``StencilProblem.run(plan="auto")``.
+
+The paper's performance hinges on picking the right vectorization
+parameters — scheme, vector length ``vl``, transpose block ``m``,
+unroll-and-jam factor ``k``, tessellation tile — per (stencil, shape,
+dtype, backend).  This module turns that menu into a measured search:
+
+  1. :func:`candidate_plans` enumerates every *legal* ``StencilPlan`` for
+     the problem (layout divisibility, halo-fits-block, backend gates);
+  2. the analytic roofline in :mod:`repro.roofline.stencil` ranks them and
+     the top ``max_measure`` survive;
+  3. survivors are timed with :func:`repro.core.timing.bench` and the
+     fastest wins;
+  4. the winner is written to a persistent JSON plan cache keyed by
+     problem signature + device kind, so every later run — including the
+     serving path, which never measures — reuses it.
+
+Plan-cache file format (JSON, ``REPRO_PLAN_CACHE`` env var or
+``~/.cache/repro/plan_cache.json``)::
+
+    {"version": 1,
+     "entries": {
+       "2d5p|512x512|float32|jnp|cpu": {
+         "plan": {"scheme": "transpose", "k": 2, "tiling": "none",
+                  "tile": null, "height": null, "vl": 8, "m": 8,
+                  "backend": "jnp"},
+         "seconds_per_step": 1.2e-4,
+         "n_candidates": 23, "n_measured": 8,
+         "measurements": [{"plan": {...}, "seconds_per_step": ...}, ...]
+       }}}
+
+``measurements`` is the tuning log: one row per measured candidate, in
+measurement order.  Corrupt or version-mismatched files are ignored (the
+tuner re-measures and overwrites).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import tempfile
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stencils
+from repro.core.api import StencilPlan
+from repro.core.timing import bench
+from repro.roofline.stencil import estimate_plan_time
+
+logger = logging.getLogger("repro.autotune")
+
+CACHE_VERSION = 1
+CACHE_ENV = "REPRO_PLAN_CACHE"
+
+# search space knobs
+_VLS = (4, 8, 16)
+_KS = (1, 2, 4)
+_MEASURE_STEPS = 4        # lcm-friendly with every k in _KS
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "plan_cache.json")
+
+
+def device_kind() -> str:
+    return jax.devices()[0].device_kind.lower().replace(" ", "_")
+
+
+def plan_key(spec_name: str, shape: Sequence[int], dtype, backend: str,
+             device: str | None = None) -> str:
+    device = device_kind() if device is None else device
+    return "|".join([spec_name, "x".join(str(n) for n in shape),
+                     jnp.dtype(dtype).name, backend, device])
+
+
+def plan_to_dict(plan: StencilPlan) -> dict:
+    d = dataclasses.asdict(plan)
+    d["tile"] = list(plan.tile) if plan.tile is not None else None
+    return d
+
+
+def plan_from_dict(d: dict) -> StencilPlan:
+    d = dict(d)
+    if d.get("tile") is not None:
+        d["tile"] = tuple(d["tile"])
+    return StencilPlan(**d)
+
+
+# ---------------------------------------------------------------------------
+# persistent plan cache
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """On-disk JSON plan cache; load-once, explicit save, atomic write."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self._entries: dict[str, dict] = {}
+        self._mtime: int | None = None
+        self._dirty: set[str] = set()      # put() since last load/save
+        self._load()
+
+    def _load(self):
+        self._entries = {}
+        self._mtime = None
+        try:
+            self._mtime = os.stat(self.path).st_mtime_ns
+            with open(self.path) as f:
+                raw = json.load(f)
+            if raw.get("version") == CACHE_VERSION:
+                self._entries = dict(raw.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+
+    def refresh(self):
+        """Re-read the file if another process wrote it since our last
+        read (a long-lived server picks up offline tuning runs).  Only
+        *unsaved local* entries shadow the disk; everything loaded earlier
+        is superseded by the newer file contents."""
+        try:
+            mtime = os.stat(self.path).st_mtime_ns
+        except OSError:
+            return
+        if mtime == self._mtime:
+            return
+        dirty = {k: self._entries[k] for k in self._dirty
+                 if k in self._entries}
+        self._load()
+        self._entries.update(dirty)
+
+    def get(self, key: str) -> dict | None:
+        return self._entries.get(key)
+
+    def put(self, key: str, record: dict):
+        self._entries[key] = record
+        self._dirty.add(key)
+
+    def save(self):
+        # read-merge-write under an exclusive lock: concurrent tuners
+        # (serving host + bench, say) sharing the default path must not
+        # erase each other's entries.  Our unsaved entries win on key
+        # collision; the file wins for everything else.
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        with open(self.path + ".lock", "w") as lk:
+            try:
+                import fcntl
+                fcntl.flock(lk, fcntl.LOCK_EX)
+            except (ImportError, OSError):
+                pass                        # best-effort on odd platforms
+            merged: dict[str, dict] = {}
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                if raw.get("version") == CACHE_VERSION:
+                    merged = dict(raw.get("entries", {}))
+            except (OSError, ValueError):
+                pass
+            dirty = {k: self._entries[k] for k in self._dirty
+                     if k in self._entries}
+            merged.update(dirty)
+            self._entries = merged
+            payload = {"version": CACHE_VERSION, "entries": self._entries}
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            self._dirty.clear()
+            try:
+                self._mtime = os.stat(self.path).st_mtime_ns
+            except OSError:
+                pass
+
+    def __len__(self):
+        return len(self._entries)
+
+
+_caches: dict[str, PlanCache] = {}
+
+
+def get_cache(path: str | None = None) -> PlanCache:
+    """Process-wide cache instance per path (avoids re-reading the file on
+    every ``plan="auto"`` call)."""
+    path = path or default_cache_path()
+    if path not in _caches:
+        _caches[path] = PlanCache(path)
+    return _caches[path]
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+def _layout_pairs(n: int, r: int):
+    """Legal (vl, m) for layout schemes on a unit-stride extent n: blocks
+    of vl·m must tile n and the halo must fit inside one vector set."""
+    out = []
+    for vl in _VLS:
+        for m in dict.fromkeys((vl, max(vl // 2, 1), 2 * vl)):
+            if m < r:
+                continue
+            if n % (vl * m):
+                continue
+            out.append((vl, m))
+    return out
+
+
+def candidate_plans(spec: stencils.StencilSpec, shape: Sequence[int],
+                    dtype=jnp.float32, backend: str = "jnp"
+                    ) -> list[StencilPlan]:
+    """Every legal StencilPlan for (spec, shape, dtype, backend).
+
+    ``StencilProblem.run`` handles steps not divisible by k/height by
+    finishing with fused single steps, so any plan here is valid for any
+    step count."""
+    shape = tuple(shape)
+    n = shape[-1]
+    cands: list[StencilPlan] = []
+
+    if backend == "pallas":
+        if spec.ndim == 1:
+            for vl, m in _layout_pairs(n, spec.r):
+                for k in _KS:
+                    if n // (vl * m) >= k + 1:      # pipeline needs blocks
+                        cands.append(StencilPlan(
+                            scheme="transpose", k=k, vl=vl, m=m,
+                            backend="pallas"))
+        return cands
+    if backend == "distributed":
+        for k in _KS:
+            cands.append(StencilPlan(scheme="fused", k=k,
+                                     backend="distributed"))
+        return cands
+
+    # jnp backend -----------------------------------------------------------
+    # single-step schemes
+    for scheme in ("fused", "reorg", "multiload"):
+        cands.append(StencilPlan(scheme=scheme, k=1))
+    if n % min(_VLS) == 0:
+        cands.append(StencilPlan(scheme="dlt", k=1, vl=min(_VLS)))
+    for vl, m in _layout_pairs(n, spec.r):
+        cands.append(StencilPlan(scheme="transpose", k=1, vl=vl, m=m))
+    # unroll-and-jam (fused multistep — scheme inert on the k>1 jnp path)
+    for k in _KS[1:]:
+        cands.append(StencilPlan(scheme="transpose", k=k))
+    # tessellation: tiles must divide the grid with room for the halo ramp
+    from repro.core.tessellate import fit_tile
+    for h in (2, 4):
+        tile = fit_tile(spec, shape, h, strict=True)
+        if tile is not None:
+            cands.append(StencilPlan(scheme="fused", k=1,
+                                     tiling="tessellate", tile=tile,
+                                     height=h))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuneResult:
+    key: str
+    plan: StencilPlan
+    seconds_per_step: float
+    n_candidates: int
+    n_measured: int
+    cached: bool                       # True: served from the plan cache
+    measurements: list[dict] = dataclasses.field(default_factory=list)
+
+
+def _default_timer(fn: Callable[[], jax.Array], plan: StencilPlan) -> float:
+    return bench(fn, warmup=1, iters=2, min_time_s=0.05)
+
+
+def tune(problem, backend: str = "jnp", cache_path: str | None = None,
+         timer=None, max_measure: int = 8, measure_steps: int =
+         _MEASURE_STEPS, force: bool = False) -> TuneResult:
+    """Resolve the best plan for ``problem`` (a StencilProblem).
+
+    Cache hit → returns immediately without measuring.  Miss (or
+    ``force=True``) → enumerate, roofline-prune to ``max_measure``, measure
+    each survivor with ``timer(fn, plan)`` (seconds per ``measure_steps``
+    steps), persist the winner.
+    """
+    spec = problem.spec
+    key = plan_key(spec.name, problem.shape, problem.dtype, backend)
+    cache = get_cache(cache_path)
+    if not force:
+        cache.refresh()
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(key=key, plan=plan_from_dict(hit["plan"]),
+                              seconds_per_step=hit["seconds_per_step"],
+                              n_candidates=hit.get("n_candidates", 0),
+                              n_measured=hit.get("n_measured", 0),
+                              cached=True)
+
+    timer = timer or _default_timer
+    cands = candidate_plans(spec, problem.shape, problem.dtype, backend)
+    if not cands:
+        raise ValueError(f"no legal plans for {key}")
+    itemsize = jnp.dtype(problem.dtype).itemsize
+    ranked = sorted(cands, key=lambda p: estimate_plan_time(
+        spec, problem.shape, itemsize, p))
+    survivors = ranked[:max_measure]
+    # the historical fixed default must stay in the pool so the tuned plan
+    # can never lose to it
+    default = problem.default_plan()
+    if backend == "jnp" and default not in survivors:
+        survivors.append(default)
+
+    x = problem.init(seed=0)
+    measurements = []
+    best_plan, best_t = None, float("inf")
+    for plan in survivors:
+        fn = lambda p=plan: problem.run(x, measure_steps, p)
+        try:
+            t = float(timer(fn, plan)) / measure_steps
+        except Exception as e:   # a candidate that fails to run is skipped
+            logger.warning("candidate %s failed: %s", plan, e)
+            continue
+        measurements.append({"plan": plan_to_dict(plan),
+                             "seconds_per_step": t})
+        logger.info("measured %s: %.3es/step", plan, t)
+        if t < best_t:
+            best_plan, best_t = plan, t
+    if best_plan is None:
+        raise RuntimeError(f"every candidate failed for {key}")
+
+    record = {"plan": plan_to_dict(best_plan), "seconds_per_step": best_t,
+              "n_candidates": len(cands), "n_measured": len(measurements),
+              "measurements": measurements}
+    cache.put(key, record)
+    cache.save()
+    logger.info("tuned %s → %s (%.3es/step, %d measured of %d)", key,
+                best_plan, best_t, len(measurements), len(cands))
+    return TuneResult(key=key, plan=best_plan, seconds_per_step=best_t,
+                      n_candidates=len(cands),
+                      n_measured=len(measurements), cached=False,
+                      measurements=measurements)
+
+
+def best_plan(problem, backend: str = "jnp",
+              cache_path: str | None = None, **kw) -> StencilPlan:
+    return tune(problem, backend=backend, cache_path=cache_path, **kw).plan
+
+
+def cached_plan(problem, backend: str = "jnp",
+                cache_path: str | None = None) -> StencilPlan | None:
+    """Cache lookup only — never measures.  The serving path uses this so a
+    cold cache falls back to the static default instead of blocking a
+    request on a tuning run."""
+    key = plan_key(problem.spec.name, problem.shape, problem.dtype, backend)
+    cache = get_cache(cache_path)
+    cache.refresh()
+    hit = cache.get(key)
+    return plan_from_dict(hit["plan"]) if hit is not None else None

@@ -110,6 +110,26 @@ def _inner_step(spec: StencilSpec, inner: str, vl: int):
     raise ValueError(f"unknown inner scheme {inner!r}")
 
 
+def fit_tile(spec: StencilSpec, shape, height: int,
+             strict: bool = False) -> tuple[int, ...] | None:
+    """Largest tile of target edge ``max(4·height·r, 8)`` that divides
+    every grid dim.  ``strict=True`` returns None when a dim cannot fit a
+    tile big enough for the halo ramp (``2·height·r + 1``) — used by the
+    autotuner to reject illegal tessellation candidates; ``strict=False``
+    clamps instead (the historical API default-tile behavior)."""
+    r = spec.r
+    w = max(4 * height * r, 8)
+    tile = []
+    for n in shape:
+        t = min(w, n)
+        while n % t:
+            t -= 1
+        if strict and t < 2 * height * r + 1:
+            return None
+        tile.append(t if strict else max(t, 2 * height * r))
+    return tuple(tile)
+
+
 def tessellate_run(spec: StencilSpec, x: jax.Array, steps: int,
                    tile: tuple[int, ...], height: int,
                    inner: str = "fused", vl: int = 8) -> jax.Array:

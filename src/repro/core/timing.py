@@ -1,0 +1,51 @@
+"""Wall-clock measurement utilities.
+
+Lives in the library (not ``benchmarks/``) because the autotuner in
+:mod:`repro.core.autotune` measures candidate plans at ``plan="auto"``
+resolution time; the benchmark scripts import the same primitives via the
+``benchmarks/timing.py`` shim.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def bench(fn, *args, warmup: int = 2, iters: int = 5,
+          min_time_s: float = 0.2):
+    """Median wall time per call (seconds) of a jit'd fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    # calibrate repeats so the measurement window is at least min_time_s
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    once = time.perf_counter() - t0
+    inner = max(1, int(min_time_s / max(once, 1e-9)))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / inner)
+    return float(np.median(times))
+
+
+def gflops(flops: float, seconds: float) -> float:
+    return flops / seconds / 1e9
+
+
+class Row:
+    """CSV row in the required ``name,us_per_call,derived`` format."""
+
+    def __init__(self, name: str, seconds: float, derived: str = ""):
+        self.name = name
+        self.us = seconds * 1e6
+        self.derived = derived
+
+    def __str__(self):
+        return f"{self.name},{self.us:.1f},{self.derived}"

@@ -29,6 +29,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.stencils import StencilSpec, apply_once
 from repro.distributed import halo
 
@@ -66,8 +67,8 @@ def make_step(spec: StencilSpec, mesh: Mesh,
     else:
         raise ValueError(f"unknown engine {engine!r}")
 
-    shmapped = jax.shard_map(local_fn, mesh=mesh, in_specs=pspec,
-                             out_specs=pspec, check_vma=False)
+    shmapped = shard_map(local_fn, mesh=mesh, in_specs=pspec,
+                         out_specs=pspec)
     return jax.jit(shmapped)
 
 
@@ -85,8 +86,8 @@ def make_stepper(spec: StencilSpec, mesh: Mesh,
             return step(v)
         return lax.fori_loop(0, steps // k, body, x)
 
-    return jax.jit(jax.shard_map(run, mesh=mesh, in_specs=pspec,
-                                 out_specs=pspec, check_vma=False))
+    return jax.jit(shard_map(run, mesh=mesh, in_specs=pspec,
+                             out_specs=pspec))
 
 
 def _make_step_fn(spec, mesh, decomp, k, engine, vl: int = 8,

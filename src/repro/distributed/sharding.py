@@ -150,6 +150,26 @@ def batch_axes(mesh: Mesh) -> tuple:
     return tuple(names) if names else ("data",)
 
 
+def microbatch_constraint(mesh: Mesh, ba: tuple | None = None):
+    """Constraint for the (n_micro, micro_batch, ...) tensors the gradient-
+    accumulation scan iterates over.  The reshape (B, ...) →
+    (n_micro, B/n_micro, ...) splits the sharded batch axis across two dims
+    and SPMD propagation drops the sharding (every activation then carries
+    the full microbatch per device); re-pin the microbatch dim explicitly."""
+    ba = batch_axes(mesh) if ba is None else ba
+    axes = dict(mesh.shape)
+    dp = int(np.prod([axes[a] for a in ba]))
+
+    def constrain(leaf):
+        if leaf.ndim < 2 or leaf.shape[1] % dp:
+            return leaf
+        spec = P(None, ba, *([None] * (leaf.ndim - 2)))
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return lambda mb: jax.tree.map(constrain, mb)
+
+
 def batch_specs(batch_shape, mesh: Mesh):
     """Shard the leading (batch) dim of every input over pod+data (skipped
     when the batch doesn't divide — e.g. long_500k's global_batch=1)."""

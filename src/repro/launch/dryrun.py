@@ -71,14 +71,15 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     model = zoo.build(arch)
-    dp = int(np.prod([dict(mesh.shape)[a]
-                      for a in sharding.batch_axes(mesh)]))
-
     fsdp_layout = layout in ("fsdp", "ep")
-    if fsdp_layout:
-        ba_fn = sharding.ep_batch_axes if layout == "ep" \
-            else sharding.fsdp_batch_axes
-        dp = int(np.prod([dict(mesh.shape)[a] for a in ba_fn(mesh)]))
+    if layout == "ep":
+        ba_fn = sharding.ep_batch_axes
+    elif layout == "fsdp":
+        ba_fn = sharding.fsdp_batch_axes
+    else:
+        ba_fn = sharding.batch_axes
+    mb_axes = ba_fn(mesh)
+    dp = int(np.prod([dict(mesh.shape)[a] for a in mb_axes]))
 
     params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     dequant = None
@@ -144,7 +145,9 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
         tc = train_loop.TrainConfig(
             opt=opt_mod.OptConfig(total_steps=10_000),
             n_microbatches=n_micro, act_sharding=act_sharding,
-            remat=opts.get("remat") or "full")
+            remat=opts.get("remat") or "full",
+            microbatch_constraint=sharding.microbatch_constraint(
+                mesh, mb_axes) if n_micro > 1 else None)
         batch_sds = zoo.batch_inputs(arch, shape.global_batch, shape.seq_len,
                                      concrete=False)
         if not fsdp_layout:
@@ -246,7 +249,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled.cost_analysis())
     try:
         mem = compiled.memory_analysis()
         mem_d = {

@@ -67,7 +67,8 @@ def run_cell(name: str, multi_pod: bool, k: int = 4, out_dir=RESULTS_DIR,
     compiled = lowered.compile()
     dt = time.perf_counter() - t0
 
-    cost = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     colls = analysis.parse_collectives(hlo)
 

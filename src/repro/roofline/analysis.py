@@ -189,8 +189,10 @@ def stencil_model_flops(spec, shape, steps: int) -> float:
     return float(model_flops(spec, shape, steps))
 
 
-def summarize(cost: dict, hlo_text: str, n_devices: int,
+def summarize(cost, hlo_text: str, n_devices: int,
               model_flops: float) -> Roofline:
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(cost)
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(hlo_text)

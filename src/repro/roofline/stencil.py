@@ -1,0 +1,75 @@
+"""Analytic roofline for stencil plan candidates.
+
+Used by :mod:`repro.core.autotune` to rank the legal ``StencilPlan``
+candidates for a problem *before* measuring any of them — the measured
+search then only pays for the most promising few.
+
+The model follows the paper's §3 operation accounting.  Per grid point per
+step a plan costs:
+
+  arithmetic    2·taps − 1 vector-ALU flops (shared by every scheme)
+  reorg ops     scheme-dependent data-reorganization work on the same
+                vector units (§2 Table / §3.2):
+                  multiload   2r extra unaligned loads per vector
+                  reorg       one permute per non-center tap
+                  dlt         ~0 per step (layout resident), but the global
+                              transpose destroys spatial locality
+                  transpose   4r ops per vector set of m vectors → 4r/m
+                  fused       0 (the perfect-compiler oracle)
+  memory        one read + one write of the grid per k_eff steps, where
+                k_eff is the unroll-and-jam factor k (§3.3) or the
+                tessellation height (§3.4) — the flops/byte × k claim.
+
+Absolute peak numbers are the TPU-v5e constants from
+:mod:`repro.roofline.analysis`; only the *ranking* matters for pruning, so
+the same model serves CPU runs unchanged.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+# DLT keeps per-step reorg near zero but gathers each vector from
+# N/vl-strided addresses — charge the memory term for defeated prefetch.
+_DLT_BW_PENALTY = 1.5
+
+
+def reorg_ops_per_point(spec, scheme: str, vl: int, m: int | None) -> float:
+    """Data-reorganization ops per grid point per step (paper §2–§3)."""
+    r = spec.r
+    if scheme == "fused":
+        return 0.0
+    if scheme == "multiload":
+        return 2.0 * r
+    if scheme == "reorg":
+        return float(spec.npoints - 1)
+    if scheme == "dlt":
+        return 0.0
+    if scheme == "transpose":
+        return 4.0 * r / float(m or vl)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
+                       plan) -> float:
+    """Roofline lower bound (seconds) for ONE step of ``plan``.
+
+    plan: StencilPlan (duck-typed: scheme/k/tiling/height/vl/m)."""
+    pts = float(np.prod(list(shape)))
+    if plan.tiling == "tessellate":
+        k_eff = plan.height or plan.k
+        scheme = plan.scheme
+    else:
+        k_eff = plan.k
+        # the k>1 jnp path runs fused multisteps; scheme is inert there
+        scheme = plan.scheme if plan.k == 1 else "fused"
+    arith = float(spec.flops_per_point)
+    reorg = reorg_ops_per_point(spec, scheme, plan.vl, plan.m)
+    t_compute = pts * (arith + reorg) / PEAK_FLOPS
+    t_memory = 2.0 * pts * itemsize / (max(k_eff, 1) * HBM_BW)
+    if scheme == "dlt":
+        t_memory *= _DLT_BW_PENALTY
+    return max(t_compute, t_memory)

@@ -1,4 +1,5 @@
-"""Serving engine: prefill + batched decode with continuous batching.
+"""Serving engine: prefill + batched decode with continuous batching,
+plus the stencil sweep service.
 
 ``serve_step`` (one new token for every sequence in the batch against the
 KV/SSM cache) is the program the decode_32k / long_500k dry-run cells lower.
@@ -10,6 +11,12 @@ The engine adds the scheduling shell a real deployment needs:
   * greedy / temperature sampling;
   * per-slot position counters (ragged progress across the batch is handled
     by masking, not by shape changes).
+
+``StencilService`` is the serving shell for stencil sweeps: execution plans
+come from the persistent autotuner plan cache (tuned offline / on first
+traffic by ``plan="auto"``), and the serving path itself NEVER measures — a
+cold cache falls back to the static default instead of blocking a request
+on a tuning run.
 """
 from __future__ import annotations
 
@@ -115,6 +122,61 @@ class ContinuousBatcher:
                     self.active[slot] = None
             self._admit()
         return finished
+
+
+class StencilService:
+    """Serve stencil sweep requests with cached autotuned plans.
+
+    One ``StencilProblem`` per (stencil, shape, dtype) signature is kept
+    hot; its plan is resolved once per signature from the plan cache
+    (:func:`repro.core.autotune.cached_plan`).  ``warm=True`` requests may
+    tune on a cache miss (filling the cache for everyone else); the default
+    cold path degrades to ``default_plan()`` so latency stays bounded.
+    """
+
+    MAX_SIGNATURES = 256      # LRU bound on memoized problems/plans
+
+    def __init__(self, cache_path: str | None = None):
+        import collections
+        self.cache_path = cache_path
+        self._problems: dict[tuple, Any] = collections.OrderedDict()
+        self._plans: dict[tuple, Any] = {}
+
+    def _problem(self, name: str, shape: tuple, dtype):
+        from repro.core.api import StencilProblem
+        key = (name, tuple(shape), jnp.dtype(dtype).name)
+        if key in self._problems:
+            self._problems.move_to_end(key)
+        else:
+            self._problems[key] = StencilProblem(name, shape, dtype)
+            while len(self._problems) > self.MAX_SIGNATURES:
+                old, _ = self._problems.popitem(last=False)
+                self._plans.pop(old, None)
+        return key, self._problems[key]
+
+    def plan_for(self, name: str, shape: tuple, dtype=jnp.float32,
+                 warm: bool = False):
+        from repro.core import autotune
+        key, prob = self._problem(name, shape, dtype)
+        plan = self._plans.get(key)
+        if plan is None:
+            # only tuned plans are memoized: a cold-cache default fallback
+            # must not pin the signature to the default forever — a later
+            # warm request (or an offline tuner filling the cache) upgrades
+            plan = autotune.cached_plan(prob, cache_path=self.cache_path)
+            if plan is None and warm:
+                plan = autotune.best_plan(prob, cache_path=self.cache_path)
+            if plan is not None:
+                self._plans[key] = plan
+        return plan or prob.default_plan()
+
+    def sweep(self, name: str, x, steps: int, warm: bool = False):
+        """Advance ``x`` by ``steps`` using the cached plan for its
+        signature."""
+        x = jnp.asarray(x)
+        key, prob = self._problem(name, x.shape, x.dtype)
+        plan = self.plan_for(name, x.shape, x.dtype, warm=warm)
+        return prob.run(x, steps, plan)
 
 
 def _write_slot(cache, cache1, slot: int):

@@ -38,10 +38,15 @@ class TrainConfig:
     # models/transformer.forward and EXPERIMENTS.md §Perf.
     act_sharding: Any = None
     remat: str = "full"              # full | dots | none
+    # (n_micro, b, ...) → (n_micro, b, ...) sharding re-pin applied after
+    # the microbatch reshape (sharding.microbatch_constraint(mesh)); None
+    # on a single device.
+    microbatch_constraint: Any = None
 
 
 def loss_and_grads(model, params, batch, aux_weight, n_micro: int,
-                   act_sharding=None, remat: str = "full"):
+                   act_sharding=None, remat: str = "full",
+                   microbatch_constraint=None):
     """Microbatched value-and-grad, grads averaged in f32."""
     if n_micro == 1:
         (loss, (nll, aux)), grads = jax.value_and_grad(
@@ -55,6 +60,8 @@ def loss_and_grads(model, params, batch, aux_weight, n_micro: int,
         assert b % n_micro == 0, (b, n_micro)
         return v.reshape((n_micro, b // n_micro) + v.shape[1:])
     mb = jax.tree.map(reshape, batch)
+    if microbatch_constraint is not None:
+        mb = microbatch_constraint(mb)
 
     def body(acc, micro):
         loss_sum, nll_sum, aux_sum, gacc = acc
@@ -77,7 +84,7 @@ def loss_and_grads(model, params, batch, aux_weight, n_micro: int,
 def train_step(model, tc: TrainConfig, params, opt_state, batch):
     loss, nll, aux, grads = loss_and_grads(
         model, params, batch, tc.aux_weight, tc.n_microbatches,
-        tc.act_sharding, tc.remat)
+        tc.act_sharding, tc.remat, tc.microbatch_constraint)
     params, opt_state, om = opt_mod.apply_updates(
         tc.opt, params, grads, opt_state)
     metrics = {"loss": loss, "nll": nll, "aux": aux, **om}
@@ -88,6 +95,9 @@ def make_train_step(model, tc: TrainConfig, mesh: Mesh,
                     params_shape, batch_shape, donate: bool = True):
     """jit with explicit shardings; returns (fn, shardings dict)."""
     cfg = model.cfg
+    if tc.n_microbatches > 1 and tc.microbatch_constraint is None:
+        tc = dataclasses.replace(
+            tc, microbatch_constraint=sharding.microbatch_constraint(mesh))
     pspecs = sharding.param_specs(params_shape, mesh, cfg)
     pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
     ospecs = sharding.opt_state_specs(None, pspecs, mesh)

@@ -10,6 +10,7 @@ import pytest
 HERE = os.path.dirname(os.path.abspath(__file__))
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(600)
 def test_distributed_suite():
     env = dict(os.environ)

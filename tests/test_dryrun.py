@@ -15,6 +15,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 REPO = os.path.dirname(HERE)
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(560)
 def test_dryrun_single_cell():
     env = dict(os.environ)

@@ -11,6 +11,7 @@ import pytest
 HERE = os.path.dirname(os.path.abspath(__file__))
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(560)
 def test_elastic_rescale_roundtrip():
     env = dict(os.environ)

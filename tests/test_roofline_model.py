@@ -7,6 +7,7 @@ import functools
 import jax
 import pytest
 
+from repro.compat import cost_analysis_dict
 from repro.configs.base import ShapeConfig, get_arch
 from repro.models import zoo
 from repro.roofline import analysis, model as rmodel
@@ -32,7 +33,8 @@ def test_train_flops_close_to_hlo(arch_id):
     batch = zoo.batch_inputs(cfg, b, s, concrete=False)
     tc = train_loop.TrainConfig(opt=opt_mod.OptConfig(total_steps=10))
     fn = jax.jit(functools.partial(train_loop.train_step, model, tc))
-    hlo = fn.lower(params, opt, batch).compile().cost_analysis()
+    hlo = cost_analysis_dict(fn.lower(params, opt, batch).compile()
+                             .cost_analysis())
     flops_hlo = float(hlo["flops"])
 
     shape = ShapeConfig("unit", s, b, "train")
@@ -51,7 +53,8 @@ def test_decode_flops_close_to_hlo():
     tok = zoo.decode_inputs(cfg, b, concrete=False)
     tok.pop("labels")
     fn = jax.jit(lambda p, c, t: model.decode_step(p, c, t, 5))
-    hlo = fn.lower(params, cache, tok).compile().cost_analysis()
+    hlo = cost_analysis_dict(fn.lower(params, cache, tok).compile()
+                             .cost_analysis())
     flops_hlo = float(hlo["flops"])
     shape = ShapeConfig("unit", s, b, "decode")
     roof = rmodel.decode_cell(cfg, shape, MF1, KN1)

@@ -1,0 +1,82 @@
+"""Cross-scheme conformance matrix.
+
+All five vectorization schemes must agree with an f64 oracle (pure numpy,
+independent of jnp) on every stencil family the planner chooses between,
+across dtypes and (vl, m) layout parameters.  This is the contract that
+makes the autotuner's search *safe*: any candidate it measures computes
+the same answer.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stencils, vectorize
+
+SCHEMES = ["multiload", "reorg", "dlt", "transpose", "fused"]
+NAMES = ["1d3p", "2d5p", "3d7p"]
+SHAPES = {1: (128,), 2: (8, 64), 3: (4, 4, 64)}
+DTYPES = ["float32", "bfloat16"]
+VLMS = [(4, 4), (8, 4), (8, 8)]
+TOL = {"float32": 2e-6, "bfloat16": 4e-2}
+
+
+def _f64_oracle(spec, x64: np.ndarray, steps: int = 1) -> np.ndarray:
+    out = x64
+    for _ in range(steps):
+        out = stencils.numpy_apply_once(spec, out)
+    return out
+
+
+def _inputs(name, dtype):
+    spec = stencils.make(name)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(SHAPES[spec.ndim]),
+                    dtype=jnp.float32).astype(jnp.dtype(dtype))
+    # oracle consumes exactly the values the scheme sees (post-rounding)
+    x64 = np.asarray(x.astype(jnp.float32)).astype(np.float64)
+    return spec, x, x64
+
+
+def _run(scheme, spec, x, vl, m):
+    if scheme == "transpose":
+        return vectorize.step_transpose(spec, x, vl=vl, m=m)
+    if scheme == "dlt":
+        return vectorize.step_dlt(spec, x, vl=vl)
+    return vectorize.get_scheme(scheme)(spec, x)
+
+
+@pytest.mark.parametrize("vl,m", VLMS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_scheme_matches_f64_oracle(scheme, name, dtype, vl, m):
+    spec, x, x64 = _inputs(name, dtype)
+    got = np.asarray(_run(scheme, spec, x, vl, m).astype(jnp.float32))
+    want = _f64_oracle(spec, x64)
+    np.testing.assert_allclose(got, want.astype(np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("scheme", ["multiload", "reorg", "dlt",
+                                    "transpose"])
+def test_schemes_agree_pairwise(scheme, name, dtype):
+    """Schemes agree with each other (not only the oracle) — same dtype,
+    same inputs, tight tolerance: bit-level layout moves must not change
+    the tap-sum order's result beyond rounding."""
+    spec, x, _ = _inputs(name, dtype)
+    got = np.asarray(_run(scheme, spec, x, 8, 4).astype(jnp.float32))
+    ref = np.asarray(vectorize.step_fused(spec, x).astype(jnp.float32))
+    np.testing.assert_allclose(got, ref, rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("steps", [1, 4, 6])
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_multistep_conformance(scheme, steps):
+    """run_scheme keeps layout schemes resident across steps — the
+    round-trip must still match the step-by-step f64 oracle."""
+    spec, x, x64 = _inputs("1d3p", "float32")
+    got = np.asarray(vectorize.run_scheme(scheme, spec, x, steps, 8, 4))
+    want = _f64_oracle(spec, x64, steps).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

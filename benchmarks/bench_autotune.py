@@ -1,11 +1,12 @@
-"""Tuned-vs-default speedups from the plan autotuner.
+"""Tuned-vs-default speedups from the unified cross-backend autotuner.
 
     PYTHONPATH=src python benchmarks/bench_autotune.py [--steps 32]
 
 For each problem: measure the old fixed default plan, run the autotuner
-(first run = measured search, logged; the winner lands in the plan cache),
-measure the tuned plan, and report the speedup.  A second ``tune`` call per
-problem demonstrates the cache hit (no re-measurement).
+(first run = measured search over the pooled jnp + Pallas candidates,
+logged; the winner lands in the plan cache keyed per-steps), measure the
+tuned plan, and report the speedup.  A second ``tune`` call per problem
+demonstrates the cache hit (no re-measurement).
 
 Output rows: ``name,us_per_step,derived`` (derived = plan / speedup).
 """
@@ -46,7 +47,7 @@ def main():
         flops = prob.model_flops(args.steps)
 
         t_def = bench(lambda: prob.run(x, args.steps, prob.default_plan()))
-        res = autotune.tune(prob, cache_path=cache)
+        res = autotune.tune(prob, steps=args.steps, cache_path=cache)
         if res.cached:      # user-supplied cache already holds this key
             print(f"# {tag}: plan already cached, skipping search",
                   file=sys.stderr)
@@ -54,16 +55,17 @@ def main():
         t_tuned = t_def if res.plan == prob.default_plan() \
             else bench(lambda: prob.run(x, args.steps, res.plan))
 
-        res2 = autotune.tune(prob, cache_path=cache)
+        res2 = autotune.tune(prob, steps=args.steps, cache_path=cache)
         assert res2.cached and res2.plan == res.plan, \
             "second tune call must be a cache hit with the same plan"
 
         print(Row(f"{tag}_default", t_def,
                   f"{gflops(flops, t_def):.2f}gflops"))
         print(Row(f"{tag}_tuned", t_tuned,
-                  f"{res.plan.scheme}/k={res.plan.k}/"
+                  f"{res.plan.backend}/{res.plan.scheme}/k={res.plan.k}/"
                   f"{t_def / t_tuned:.2f}x"))
-        print(f"# {tag}: tuned {t_def / t_tuned:.2f}x vs default, "
+        print(f"# {tag}: tuned {t_def / t_tuned:.2f}x vs default "
+              f"(winner backend={res.plan.backend}), "
               f"{res.n_measured}/{res.n_candidates} candidates measured, "
               f"second run cache-hit={res2.cached}", file=sys.stderr)
         if t_tuned > t_def * 1.05:

@@ -10,6 +10,8 @@ Plans compose the paper's three pieces:
   k           — time unroll-and-jam factor (in-register / in-VMEM multistep)
   tiling      — none | tessellate (H=k·…, tile=W)
   backend     — jnp | pallas (kernels/) | distributed (shard_map halo)
+  remainder   — how steps % k leftovers run: "fused" (single steps on the
+                same backend) | "native" (one k=remainder block)
 """
 from __future__ import annotations
 
@@ -32,6 +34,8 @@ class StencilPlan:
     vl: int = 8
     m: int | None = None
     backend: str = "jnp"           # jnp | pallas | distributed
+    t0: int | None = None          # pallas n-D pipeline tile (rows/grid step)
+    remainder: str = "fused"       # fused | native — steps % k policy
 
 
 class StencilProblem:
@@ -52,29 +56,33 @@ class StencilProblem:
     # ------------------------------------------------------------------
     def run(self, x: jax.Array, steps: int,
             plan: StencilPlan | str = "auto") -> jax.Array:
-        """Advance ``x`` by ``steps`` Jacobi steps under ``plan``.
+        """Advance ``x`` by ``steps`` Jacobi steps (periodic BC) under
+        ``plan``.
 
         plan:
           * a ``StencilPlan`` — executed as given;
           * ``"default"`` — the static fallback plan (no measurement);
-          * ``"auto"`` — resolved by the measured-search autotuner
-            (:mod:`repro.core.autotune`): legal candidates are enumerated,
-            roofline-pruned, the best few are *timed on this device*, and
-            the winner is persisted to the JSON plan cache (path from the
+          * ``"auto"`` — resolved by the unified cross-backend autotuner
+            (:mod:`repro.core.autotune`): legal jnp AND Pallas candidates
+            are enumerated in one pool, roofline-pruned, the best few are
+            *timed on this device* for THIS step count, and the winner is
+            persisted to the JSON plan cache (path from the
             ``REPRO_PLAN_CACHE`` env var, default
             ``~/.cache/repro/plan_cache.json``; see the autotune module
             docstring for the file format).  Later runs of the same
-            (stencil, shape, dtype, backend, device-kind) signature hit the
-            cache and skip re-measurement.
+            (stencil, shape, dtype, backend, device-kind, steps,
+            code-fingerprint) signature hit the cache and skip
+            re-measurement.
 
         Any plan is valid for any ``steps``: when k (or the tessellation
-        height) does not divide ``steps``, the remainder runs as fused
-        single steps.
+        height) does not divide ``steps``, the remainder runs according to
+        ``plan.remainder`` — single steps ("fused") or one shorter
+        k=remainder block ("native") on the same backend.
         """
         if isinstance(plan, str):
             if plan == "auto":
                 from repro.core import autotune
-                plan = autotune.best_plan(self)
+                plan = autotune.best_plan(self, steps=steps)
             elif plan == "default":
                 plan = self.default_plan()
             else:
@@ -89,13 +97,15 @@ class StencilProblem:
             vl = plan.vl if plan.m is not None else None
             return self._chunked(
                 x, steps, plan.k,
-                lambda v, n, k: ops.stencil_run(self.spec, v, n, k=k,
-                                                vl=vl, m=plan.m))
+                lambda v, n, k: ops.stencil_run_periodic(
+                    self.spec, v, n, k=k, vl=vl, m=plan.m, t0=plan.t0),
+                remainder=plan.remainder)
         if plan.backend == "distributed":
             from repro.distributed import multistep as dms
             return self._chunked(
                 x, steps, plan.k,
-                lambda v, n, k: dms.distributed_run(self.spec, v, n, k=k))
+                lambda v, n, k: dms.distributed_run(self.spec, v, n, k=k),
+                remainder=plan.remainder)
         if plan.tiling == "tessellate":
             h = plan.height or plan.k
             tile = plan.tile or self._default_tile(h)
@@ -105,27 +115,40 @@ class StencilProblem:
                     return vectorize.run_scheme("fused", self.spec, v, n,
                                                 plan.vl, plan.m)
                 return tessellate.tessellate_run(
-                    self.spec, v, n, tile, h, inner=plan.scheme
+                    self.spec, v, n, tile, k, inner=plan.scheme
                     if plan.scheme in ("fused", "transpose", "dlt")
                     else "fused", vl=plan.vl)
-            return self._chunked(x, steps, h, step)
+            return self._chunked(x, steps, h, step,
+                                 remainder=plan.remainder)
         if plan.k > 1:
             def step(v, n, k):
                 for _ in range(n // k):
                     v = unroll_jam.multistep_fused(self.spec, v, k)
                 return v
-            return self._chunked(x, steps, plan.k, step)
+            return self._chunked(x, steps, plan.k, step,
+                                 remainder=plan.remainder)
         return vectorize.run_scheme(plan.scheme, self.spec, x, steps,
                                     plan.vl, plan.m)
 
-    def _chunked(self, x: jax.Array, steps: int, k: int, step) -> jax.Array:
-        """Run ``steps`` as k-blocked sweeps plus a single-step remainder:
-        step(x, n_steps, k) advances x by n_steps in k-step blocks."""
+    def _chunked(self, x: jax.Array, steps: int, k: int, step,
+                 remainder: str = "fused") -> jax.Array:
+        """Run ``steps`` as k-blocked sweeps plus a remainder:
+        step(x, n_steps, k) advances x by n_steps in k-step blocks.
+
+        remainder="fused"  → leftover steps run one at a time (k=1);
+        remainder="native" → leftover steps run as ONE k=remainder block
+        (one extra pipelined sweep / one shorter tessellation round)."""
         main = steps - steps % k
         if main:
             x = step(x, main, k)
-        if steps - main:
-            x = step(x, steps - main, 1)
+        rem = steps - main
+        if rem:
+            if remainder == "native":
+                x = step(x, rem, rem)
+            elif remainder == "fused":
+                x = step(x, rem, 1)
+            else:
+                raise ValueError(f"unknown remainder policy {remainder!r}")
         return x
 
     def default_plan(self) -> StencilPlan:

@@ -1,30 +1,80 @@
-"""Measured-search autotuner behind ``StencilProblem.run(plan="auto")``.
+"""Unified cross-backend measured-search autotuner behind ``plan="auto"``.
 
 The paper's performance hinges on picking the right vectorization
 parameters — scheme, vector length ``vl``, transpose block ``m``,
 unroll-and-jam factor ``k``, tessellation tile — per (stencil, shape,
-dtype, backend).  This module turns that menu into a measured search:
+dtype, backend).  This module turns that menu into a measured search
+over **every execution backend at once**:
 
   1. :func:`candidate_plans` enumerates every *legal* ``StencilPlan`` for
-     the problem (layout divisibility, halo-fits-block, backend gates);
-  2. the analytic roofline in :mod:`repro.roofline.stencil` ranks them and
-     the top ``max_measure`` survive;
-  3. survivors are timed with :func:`repro.core.timing.bench` and the
-     fastest wins;
+     the problem.  ``backend="auto"`` (the default) pools the jnp schemes
+     AND the Pallas transpose-layout kernels in one candidate list; each
+     backend has explicit legality gates (:func:`pallas_plan_legal`:
+     block-shape divisibility, halo-fits-block, pipeline-tile
+     divisibility) instead of ad-hoc per-branch filtering.  Off-TPU the
+     auto pool caps pallas enumeration at
+     :data:`INTERPRET_MAX_POINTS` grid points (interpret-mode
+     measurement latency budget; explicit ``backend="pallas"``
+     bypasses it).
+  2. the analytic roofline in :mod:`repro.roofline.stencil` ranks them
+     (with a CPU interpret-mode penalty for Pallas, see
+     :data:`INTERPRET_PENALTY`) and the top ``max_measure`` survive — the
+     pool is *backend-stratified*: at least one candidate of every
+     backend present in the pool is always measured, so the Pallas path
+     is never silently skipped.
+  3. survivors are timed with ``problem.run`` via
+     :func:`repro.core.timing.bench` and the fastest wins;
   4. the winner is written to a persistent JSON plan cache keyed by
-     problem signature + device kind, so every later run — including the
-     serving path, which never measures — reuses it.
+     problem signature + device kind + step count + code fingerprint, so
+     every later run — including the serving path, which never measures —
+     reuses it.
+
+Per-``steps`` planning
+----------------------
+
+Plans are tuned for the *actual* step count of the run.  When ``steps``
+is not divisible by the unroll factor ``k`` (or the tessellation height),
+candidates carry a ``(k, remainder)`` axis instead of a hard-coded
+fallback:
+
+  * ``remainder="fused"``  — the historical policy: leftover
+    ``steps % k`` steps run as single (k=1) steps on the same backend;
+  * ``remainder="native"`` — the leftover runs as ONE ``k=steps%k``
+    block on the same backend (one extra pipelined sweep / one shorter
+    tessellation round) — fewer memory round-trips, slightly more
+    instruction variety.
+
+Both variants are enumerated, roofline-ranked (the memory term amortizes
+differently, see ``estimate_plan_time(..., steps=...)``) and measured
+with the real remainder handling — over a window congruent to ``steps``
+mod every block size, so tuning cost never scales with the run length —
+and the cached winner is optimal for that exact ``steps``.  Step counts
+every block divides are :func:`normalize_steps`-collapsed onto the
+generic (``steps=None``) key, which also serves as the fallback for any
+per-``steps`` miss.
+
+Self-invalidating plan key
+--------------------------
+
+:func:`plan_key` embeds :func:`code_fingerprint` — a content hash of the
+stencil registry (taps/coefficients), the scheme registry
+(``vectorize.SCHEMES``, including the *source* of each registered kernel
+fn) and the kernel/runtime module sources (``core/`` + ``kernels/``).
+Editing any of that code — or monkeypatching a registered scheme —
+changes every key, so stale cached plans are never served; they simply
+stop matching and the tuner re-measures.
 
 Plan-cache file format (JSON, ``REPRO_PLAN_CACHE`` env var or
 ``~/.cache/repro/plan_cache.json``)::
 
-    {"version": 1,
+    {"version": 2,
      "entries": {
-       "2d5p|512x512|float32|jnp|cpu": {
+       "2d5p|512x512|float32|auto|cpu|s32|3f2a9c1d04be": {
          "plan": {"scheme": "transpose", "k": 2, "tiling": "none",
                   "tile": null, "height": null, "vl": 8, "m": 8,
-                  "backend": "jnp"},
+                  "backend": "jnp", "t0": null, "remainder": "fused"},
          "seconds_per_step": 1.2e-4,
+         "fingerprint": "3f2a9c1d04be",
          "n_candidates": 23, "n_measured": 8,
          "measurements": [{"plan": {...}, "seconds_per_step": ...}, ...]
        }}}
@@ -36,14 +86,18 @@ tuner re-measures and overwrites).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import inspect
 import json
 import logging
+import math
 import os
 import tempfile
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import stencils
 from repro.core.api import StencilPlan
@@ -52,13 +106,31 @@ from repro.roofline.stencil import estimate_plan_time
 
 logger = logging.getLogger("repro.autotune")
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2          # v2: keys carry steps + code fingerprint
 CACHE_ENV = "REPRO_PLAN_CACHE"
 
 # search space knobs
 _VLS = (4, 8, 16)
 _KS = (1, 2, 4)
+_HEIGHTS = (2, 4)         # tessellation heights enumerated below
 _MEASURE_STEPS = 4        # lcm-friendly with every k in _KS
+# lcm of every block size (unroll k, tessellation height) a candidate can
+# carry: step counts congruent mod this value produce identical candidate
+# pools and remainder behavior.
+_BLOCK_LCM = math.lcm(*_KS, *_HEIGHTS)
+_MAX_M_PER_VL = 4         # cap on the pallas m axis per vector length
+_MAX_T0 = 2               # cap on the pallas pipeline-tile axis
+
+# Pallas kernels execute in interpret mode off-TPU — orders of magnitude
+# slower than compiled jnp.  The roofline can't see that, so the ranking
+# applies this factor; stratification still measures >=1 pallas candidate.
+INTERPRET_PENALTY = 50.0
+# ...and measuring an interpret-mode candidate on a large grid costs real
+# minutes, so the *auto* pool only enumerates pallas up to this many grid
+# points off-TPU (one-time tuning latency budget; an explicit
+# backend="pallas" request bypasses the gate).  Env-overridable.
+INTERPRET_MAX_POINTS = int(os.environ.get(
+    "REPRO_PALLAS_INTERPRET_MAX_POINTS", 1 << 18))
 
 
 def default_cache_path() -> str:
@@ -73,11 +145,88 @@ def device_kind() -> str:
     return jax.devices()[0].device_kind.lower().replace(" ", "_")
 
 
+# ---------------------------------------------------------------------------
+# code fingerprint — the self-invalidation hash
+# ---------------------------------------------------------------------------
+
+_fp_memo: dict[tuple, str] = {}
+
+
+def _source_of(obj) -> str:
+    try:
+        return inspect.getsource(obj)
+    except (OSError, TypeError):
+        return repr(obj)
+
+
+def code_fingerprint() -> str:
+    """12-hex content hash of the scheme registry + kernel sources.
+
+    Covers: every registered :class:`StencilSpec` (name/ndim/r/kind/taps),
+    every entry of ``vectorize.SCHEMES`` (name + kernel-fn *source*, so a
+    monkeypatched scheme changes the hash), and the module sources of the
+    execution layers a plan can dispatch to (``core/vectorize``,
+    ``core/unroll_jam``, ``core/tessellate``, ``core/layouts``,
+    ``core/api``, ``kernels/stencil_kernels``, ``kernels/ops``).
+
+    Memoized per registry *identity* (object ids), so the common case is a
+    dict lookup; replacing a registry entry recomputes.
+    """
+    from repro.core import api, layouts, tessellate, unroll_jam, vectorize
+    from repro.kernels import ops as kops
+    from repro.kernels import stencil_kernels
+
+    # the memo key holds the registry objects themselves (not ids): live
+    # references cannot be garbage-collected and readdressed, so a reused
+    # address can never alias a stale hash.  Names are unique, so sorting
+    # never compares the (unorderable) second elements.
+    memo_key = (
+        tuple(sorted(vectorize.SCHEMES.items())),
+        tuple(sorted(stencils._REGISTRY.items())),
+    )
+    hit = _fp_memo.get(memo_key)
+    if hit is not None:
+        return hit
+    if len(_fp_memo) > 64:          # bound hot-reload / monkeypatch churn
+        _fp_memo.clear()
+    h = hashlib.sha256()
+    for name, spec in sorted(stencils._REGISTRY.items()):
+        h.update(repr((name, spec.ndim, spec.r, spec.kind,
+                       spec.taps)).encode())
+    for name in sorted(vectorize.SCHEMES):
+        h.update(name.encode())
+        h.update(_source_of(vectorize.SCHEMES[name]).encode())
+    for mod in (vectorize, unroll_jam, tessellate, layouts, api,
+                stencil_kernels, kops):
+        h.update(_source_of(mod).encode())
+    fp = h.hexdigest()[:12]
+    _fp_memo[memo_key] = fp
+    return fp
+
+
+def normalize_steps(steps: int | None) -> int | None:
+    """Collapse step counts every candidate block divides to the generic
+    (``steps=None``) plan: congruent-mod-``_BLOCK_LCM`` step counts have
+    identical candidate pools and remainder behavior, so keying (and
+    re-measuring) per exact value would only fragment the cache."""
+    if steps is not None and steps % _BLOCK_LCM == 0:
+        return None
+    return steps
+
+
 def plan_key(spec_name: str, shape: Sequence[int], dtype, backend: str,
-             device: str | None = None) -> str:
+             device: str | None = None, steps: int | None = None) -> str:
+    """Cache key: signature | device | step count | code fingerprint.
+
+    ``steps=None`` produces the generic (any-step-count) key ``s*``; the
+    fingerprint suffix makes every key stale the moment the scheme
+    registry or kernel code changes (see :func:`code_fingerprint`).
+    """
     device = device_kind() if device is None else device
     return "|".join([spec_name, "x".join(str(n) for n in shape),
-                     jnp.dtype(dtype).name, backend, device])
+                     jnp.dtype(dtype).name, backend, device,
+                     f"s{'*' if steps is None else steps}",
+                     code_fingerprint()])
 
 
 def plan_to_dict(plan: StencilPlan) -> dict:
@@ -166,6 +315,14 @@ class PlanCache:
             dirty = {k: self._entries[k] for k in self._dirty
                      if k in self._entries}
             merged.update(dirty)
+            # prune entries tuned against retired code: their keys can
+            # never match again (plan_key embeds the fingerprint), so
+            # keeping them only grows the file without bound across code
+            # edits.  Records without a fingerprint field are kept
+            # (hand-written / test entries).
+            fp = code_fingerprint()
+            merged = {k: v for k, v in merged.items()
+                      if v.get("fingerprint") in (None, fp)}
             self._entries = merged
             payload = {"version": CACHE_VERSION, "entries": self._entries}
             fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -202,12 +359,13 @@ def get_cache(path: str | None = None) -> PlanCache:
 
 
 # ---------------------------------------------------------------------------
-# candidate enumeration
+# candidate enumeration + backend legality gates
 # ---------------------------------------------------------------------------
 
 def _layout_pairs(n: int, r: int):
-    """Legal (vl, m) for layout schemes on a unit-stride extent n: blocks
-    of vl·m must tile n and the halo must fit inside one vector set."""
+    """Legal (vl, m) for jnp layout schemes on a unit-stride extent n:
+    blocks of vl·m must tile n and the halo must fit inside one vector
+    set."""
     out = []
     for vl in _VLS:
         for m in dict.fromkeys((vl, max(vl // 2, 1), 2 * vl)):
@@ -219,34 +377,120 @@ def _layout_pairs(n: int, r: int):
     return out
 
 
+def pallas_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
+                      vl: int, m: int, t0: int | None = None) -> bool:
+    """Backend legality gate for the Pallas transpose-layout kernels.
+
+    * block-shape divisibility: ``shape[-1] % (vl*m) == 0`` — the
+      (nb, m, vl) transposed array must tile the unit-stride extent
+      exactly (this holds for *any* vl·m, power-of-two or not; the gate
+      is what rejects non-dividing combinations);
+    * halo-fits-block: ``r <= m`` and ``r <= vl`` (the kernels assemble
+      at most r boundary rows per vector set, and carry r lanes);
+    * pipeline tile (n-D only): ``t0`` must divide ``shape[0]`` and hold
+      the halo (``t0 >= r``).
+    """
+    n = shape[-1]
+    r = spec.r
+    if n % (vl * m) or m < r or vl < r:
+        return False
+    if spec.ndim > 1:
+        if t0 is None or t0 < r or shape[0] % t0:
+            return False
+    return True
+
+
+def _pallas_pairs(n: int, r: int) -> list[tuple[int, int]]:
+    """(vl, m) pairs for the Pallas backend: m ranges over divisors of
+    n/vl (so non-power-of-two vl·m blocks are reachable when the extent
+    calls for them), capped at ``_MAX_M_PER_VL`` per vl."""
+    pairs = []
+    for vl in _VLS:
+        if vl < r or n % vl:
+            continue
+        q = n // vl
+        divisors = [m for m in range(max(r, 2), min(2 * vl, q) + 1)
+                    if q % m == 0]
+        # prefer the square-ish tiles the paper favors, then fill with the
+        # remaining (possibly non-power-of-two) divisors
+        keep = [m for m in (vl, vl // 2, 2 * vl) if m in divisors]
+        for m in divisors:
+            if len(keep) >= _MAX_M_PER_VL:
+                break
+            if m not in keep:
+                keep.append(m)
+        pairs += [(vl, m) for m in sorted(keep)]
+    return pairs
+
+
+def _with_remainder(plan: StencilPlan, steps: int | None, block: int,
+                    native_ok: bool = True) -> list[StencilPlan]:
+    """Per-``steps`` axis: when ``steps % block`` leaves a remainder, emit
+    one candidate per remainder policy; otherwise the policy is inert and
+    only the canonical (``fused``) variant is enumerated."""
+    if steps is None or block <= 1 or steps % block == 0:
+        return [plan]
+    out = [dataclasses.replace(plan, remainder="fused")]
+    if native_ok:
+        out.append(dataclasses.replace(plan, remainder="native"))
+    return out
+
+
+def _pallas_candidates(spec: stencils.StencilSpec, shape: tuple[int, ...],
+                       steps: int | None,
+                       budget_gate: bool = False) -> list[StencilPlan]:
+    if budget_gate and jax.default_backend() != "tpu" and \
+            int(np.prod(shape)) > INTERPRET_MAX_POINTS:
+        return []          # interpret-mode measurement too costly off-TPU
+    n0 = shape[0]
+    cands: list[StencilPlan] = []
+    if spec.ndim == 1:
+        t0s: list[int | None] = [None]
+    else:
+        t0s = [t for t in (8, 4, 2)
+               if t <= n0 and n0 % t == 0 and t >= spec.r][:_MAX_T0]
+    for vl, m in _pallas_pairs(shape[-1], spec.r):
+        for t0 in t0s:
+            if not pallas_plan_legal(spec, shape, vl, m, t0):
+                continue
+            for k in _KS:
+                plan = StencilPlan(scheme="transpose", k=k, vl=vl, m=m,
+                                   t0=t0, backend="pallas")
+                cands += _with_remainder(plan, steps, k)
+    return cands
+
+
 def candidate_plans(spec: stencils.StencilSpec, shape: Sequence[int],
-                    dtype=jnp.float32, backend: str = "jnp"
-                    ) -> list[StencilPlan]:
+                    dtype=jnp.float32, backend: str = "auto",
+                    steps: int | None = None) -> list[StencilPlan]:
     """Every legal StencilPlan for (spec, shape, dtype, backend).
 
-    ``StencilProblem.run`` handles steps not divisible by k/height by
-    finishing with fused single steps, so any plan here is valid for any
-    step count."""
+    ``backend="auto"`` pools the jnp and Pallas candidates into one list
+    (the unified cross-backend search).  When ``steps`` is given, k>1
+    candidates whose block size does not divide it fan out along the
+    remainder-policy axis (see :func:`_with_remainder`); without
+    ``steps`` the canonical variants cover any step count via the
+    ``fused`` fallback in ``StencilProblem.run``."""
     shape = tuple(shape)
     n = shape[-1]
-    cands: list[StencilPlan] = []
 
+    if backend == "auto":
+        return (candidate_plans(spec, shape, dtype, "jnp", steps)
+                + _pallas_candidates(spec, shape, steps, budget_gate=True))
     if backend == "pallas":
-        if spec.ndim == 1:
-            for vl, m in _layout_pairs(n, spec.r):
-                for k in _KS:
-                    if n // (vl * m) >= k + 1:      # pipeline needs blocks
-                        cands.append(StencilPlan(
-                            scheme="transpose", k=k, vl=vl, m=m,
-                            backend="pallas"))
-        return cands
+        return _pallas_candidates(spec, shape, steps)
     if backend == "distributed":
+        cands = []
         for k in _KS:
-            cands.append(StencilPlan(scheme="fused", k=k,
-                                     backend="distributed"))
+            cands += _with_remainder(
+                StencilPlan(scheme="fused", k=k, backend="distributed"),
+                steps, k)
         return cands
+    if backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}")
 
     # jnp backend -----------------------------------------------------------
+    cands = []
     # single-step schemes
     for scheme in ("fused", "reorg", "multiload"):
         cands.append(StencilPlan(scheme=scheme, k=1))
@@ -254,17 +498,20 @@ def candidate_plans(spec: stencils.StencilSpec, shape: Sequence[int],
         cands.append(StencilPlan(scheme="dlt", k=1, vl=min(_VLS)))
     for vl, m in _layout_pairs(n, spec.r):
         cands.append(StencilPlan(scheme="transpose", k=1, vl=vl, m=m))
-    # unroll-and-jam (fused multistep — scheme inert on the k>1 jnp path)
+    # unroll-and-jam (fused multistep — scheme inert on the k>1 jnp path;
+    # the remainder policies coincide there too, so no native variant)
     for k in _KS[1:]:
-        cands.append(StencilPlan(scheme="transpose", k=k))
+        cands += _with_remainder(StencilPlan(scheme="transpose", k=k),
+                                 steps, k, native_ok=False)
     # tessellation: tiles must divide the grid with room for the halo ramp
     from repro.core.tessellate import fit_tile
     for h in (2, 4):
         tile = fit_tile(spec, shape, h, strict=True)
         if tile is not None:
-            cands.append(StencilPlan(scheme="fused", k=1,
-                                     tiling="tessellate", tile=tile,
-                                     height=h))
+            cands += _with_remainder(
+                StencilPlan(scheme="fused", k=1, tiling="tessellate",
+                            tile=tile, height=h),
+                steps, h)
     return cands
 
 
@@ -287,18 +534,59 @@ def _default_timer(fn: Callable[[], jax.Array], plan: StencilPlan) -> float:
     return bench(fn, warmup=1, iters=2, min_time_s=0.05)
 
 
-def tune(problem, backend: str = "jnp", cache_path: str | None = None,
-         timer=None, max_measure: int = 8, measure_steps: int =
-         _MEASURE_STEPS, force: bool = False) -> TuneResult:
+def _rank_time(spec, shape, itemsize, plan, steps) -> float:
+    t = estimate_plan_time(spec, shape, itemsize, plan, steps=steps)
+    if plan.backend == "pallas" and jax.default_backend() != "tpu":
+        t *= INTERPRET_PENALTY
+    return t
+
+
+def _auto_measure_steps(steps: int | None) -> int:
+    """Measurement window.  Tuning cost must not scale with the run's
+    step count: a window congruent to ``steps`` mod every candidate block
+    size (``_BLOCK_LCM + steps % _BLOCK_LCM``) exercises the identical
+    remainder handling, so it ranks the same candidates at a fraction of
+    the cost of timing the full run."""
+    if steps is None:
+        return _MEASURE_STEPS
+    return min(steps, _BLOCK_LCM + steps % _BLOCK_LCM)
+
+
+def _stratify(survivors: list[StencilPlan], ranked: list[StencilPlan]):
+    """Ensure every backend present in the ranked pool keeps at least one
+    measured candidate (its best-ranked one)."""
+    have = {p.backend for p in survivors}
+    for p in ranked:
+        if p.backend not in have:
+            survivors.append(p)
+            have.add(p.backend)
+    return survivors
+
+
+def tune(problem, backend: str = "auto", steps: int | None = None,
+         cache_path: str | None = None, timer=None, max_measure: int = 8,
+         measure_steps: int | None = None, force: bool = False
+         ) -> TuneResult:
     """Resolve the best plan for ``problem`` (a StencilProblem).
 
+    ``backend="auto"`` searches the jnp and Pallas pools together (the
+    cross-backend search); a concrete backend restricts the pool.
+    ``steps`` makes the plan (and its cache key) specific to that step
+    count — remainder policies are enumerated and measured with the real
+    remainder handling (see the module docstring).
+
     Cache hit → returns immediately without measuring.  Miss (or
-    ``force=True``) → enumerate, roofline-prune to ``max_measure``, measure
-    each survivor with ``timer(fn, plan)`` (seconds per ``measure_steps``
-    steps), persist the winner.
+    ``force=True``) → enumerate, roofline-prune to ``max_measure``
+    (backend-stratified: >=1 candidate of each backend in the pool is
+    always measured), measure each survivor with ``timer(fn, plan)``
+    (seconds per ``measure_steps`` steps), persist the winner under a
+    key carrying the code fingerprint (stale-proof, see
+    :func:`plan_key`).
     """
     spec = problem.spec
-    key = plan_key(spec.name, problem.shape, problem.dtype, backend)
+    steps = normalize_steps(steps)
+    key = plan_key(spec.name, problem.shape, problem.dtype, backend,
+                   steps=steps)
     cache = get_cache(cache_path)
     if not force:
         cache.refresh()
@@ -311,19 +599,21 @@ def tune(problem, backend: str = "jnp", cache_path: str | None = None,
                               cached=True)
 
     timer = timer or _default_timer
-    cands = candidate_plans(spec, problem.shape, problem.dtype, backend)
+    cands = candidate_plans(spec, problem.shape, problem.dtype, backend,
+                            steps=steps)
     if not cands:
         raise ValueError(f"no legal plans for {key}")
     itemsize = jnp.dtype(problem.dtype).itemsize
-    ranked = sorted(cands, key=lambda p: estimate_plan_time(
-        spec, problem.shape, itemsize, p))
-    survivors = ranked[:max_measure]
+    ranked = sorted(cands, key=lambda p: _rank_time(
+        spec, problem.shape, itemsize, p, steps))
+    survivors = _stratify(ranked[:max_measure], ranked)
     # the historical fixed default must stay in the pool so the tuned plan
     # can never lose to it
     default = problem.default_plan()
-    if backend == "jnp" and default not in survivors:
+    if backend in ("jnp", "auto") and default not in survivors:
         survivors.append(default)
 
+    measure_steps = measure_steps or _auto_measure_steps(steps)
     x = problem.init(seed=0)
     measurements = []
     best_plan, best_t = None, float("inf")
@@ -343,6 +633,7 @@ def tune(problem, backend: str = "jnp", cache_path: str | None = None,
         raise RuntimeError(f"every candidate failed for {key}")
 
     record = {"plan": plan_to_dict(best_plan), "seconds_per_step": best_t,
+              "fingerprint": code_fingerprint(),
               "n_candidates": len(cands), "n_measured": len(measurements),
               "measurements": measurements}
     cache.put(key, record)
@@ -355,18 +646,30 @@ def tune(problem, backend: str = "jnp", cache_path: str | None = None,
                       measurements=measurements)
 
 
-def best_plan(problem, backend: str = "jnp",
+def best_plan(problem, backend: str = "auto", steps: int | None = None,
               cache_path: str | None = None, **kw) -> StencilPlan:
-    return tune(problem, backend=backend, cache_path=cache_path, **kw).plan
+    return tune(problem, backend=backend, steps=steps,
+                cache_path=cache_path, **kw).plan
 
 
-def cached_plan(problem, backend: str = "jnp",
-                cache_path: str | None = None) -> StencilPlan | None:
+def cached_plan(problem, backend: str = "auto", steps: int | None = None,
+                cache_path: str | None = None,
+                generic_fallback: bool = True) -> StencilPlan | None:
     """Cache lookup only — never measures.  The serving path uses this so a
     cold cache falls back to the static default instead of blocking a
-    request on a tuning run."""
-    key = plan_key(problem.spec.name, problem.shape, problem.dtype, backend)
+    request on a tuning run.  A per-``steps`` key is tried first, then
+    (unless ``generic_fallback=False``) the generic (``steps=None``) key
+    tuned for any step count."""
     cache = get_cache(cache_path)
     cache.refresh()
-    hit = cache.get(key)
-    return plan_from_dict(hit["plan"]) if hit is not None else None
+    steps = normalize_steps(steps)
+    keys = [plan_key(problem.spec.name, problem.shape, problem.dtype,
+                     backend, steps=steps)]
+    if steps is not None and generic_fallback:
+        keys.append(plan_key(problem.spec.name, problem.shape,
+                             problem.dtype, backend, steps=None))
+    for key in keys:
+        hit = cache.get(key)
+        if hit is not None:
+            return plan_from_dict(hit["plan"])
+    return None

@@ -132,11 +132,28 @@ def fit_tile(spec: StencilSpec, shape, height: int,
 
 def tessellate_run(spec: StencilSpec, x: jax.Array, steps: int,
                    tile: tuple[int, ...], height: int,
-                   inner: str = "fused", vl: int = 8) -> jax.Array:
-    """steps must be a multiple of height; runs steps/height rounds."""
-    assert steps % height == 0, (steps, height)
+                   inner: str = "fused", vl: int = 8,
+                   remainder: str = "error") -> jax.Array:
+    """Run ``steps // height`` full-height rounds, then the remainder:
+
+    remainder="error"  — steps must be a multiple of height (historical);
+    remainder="native" — one extra round of height ``steps % height``
+                         (legal: a shorter round only weakens the margin
+                         constraint the tile was fitted for);
+    remainder="fused"  — leftover steps as plain fused single steps.
+    """
+    rem = steps % height
+    if rem and remainder == "error":
+        raise AssertionError(f"steps={steps} not a multiple of "
+                             f"height={height} (pass remainder=)")
     for _ in range(steps // height):
         x = tessellate_round(spec, x, tuple(tile), height, inner, vl)
+    if rem:
+        if remainder == "native":
+            x = tessellate_round(spec, x, tuple(tile), rem, inner, vl)
+        else:
+            for _ in range(rem):
+                x = apply_once(spec, x, bc="periodic")
     return x
 
 

@@ -20,6 +20,12 @@ TPU rendering of the paper (see DESIGN.md §2):
     step, so their halos are internal (rolls on major axes); the
     unit-stride dim uses the transpose layout.  BC: dirichlet along the
     pipelined axis, periodic elsewhere (kernels' oracle in kernels/ref.py).
+    Fully-periodic semantics — what ``StencilProblem.run`` and the
+    autotuner's unified pool require — are layered on top by
+    ``kernels/ops.stencil_{multistep,run}_periodic``: wrap-pad the
+    pipelined axis by >= k*r (whole blocks / pipeline tiles), run the
+    kernel, crop.  The raw kernels stay dirichlet so the distributed halo
+    runtime (edge_mask=False + halo-block exchange) keeps its contract.
 
 Grid-step uniform formulation (boot folded into the steady loop): at grid
 step j, window position i holds block ``j-k+i`` at time ``k-1-i``; blocks

@@ -53,23 +53,53 @@ def reorg_ops_per_point(spec, scheme: str, vl: int, m: int | None) -> float:
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
+def _sweeps_per_step(k_eff: int, steps: int | None, remainder: str) -> float:
+    """Memory round-trips per time step for a k_eff-blocked sweep schedule.
+
+    Without a step count (or when k_eff divides it) every step amortizes
+    to 1/k_eff of a round-trip.  A remainder of ``rem = steps % k_eff``
+    costs one extra round-trip under the "native" policy (one k=rem
+    block) or ``rem`` round-trips under "fused" (single steps) — the
+    per-``steps`` axis the autotuner ranks on."""
+    k_eff = max(k_eff, 1)
+    if steps is None or steps % k_eff == 0 or k_eff == 1:
+        return 1.0 / k_eff
+    main, rem = steps - steps % k_eff, steps % k_eff
+    tail = 1.0 if remainder == "native" else float(rem)
+    return (main / k_eff + tail) / steps
+
+
 def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
-                       plan) -> float:
+                       plan, steps: int | None = None) -> float:
     """Roofline lower bound (seconds) for ONE step of ``plan``.
 
-    plan: StencilPlan (duck-typed: scheme/k/tiling/height/vl/m)."""
+    plan: StencilPlan (duck-typed: scheme/k/tiling/height/vl/m/backend/
+    remainder).  ``steps`` amortizes the remainder policy into the memory
+    term (see :func:`_sweeps_per_step`).  Pallas plans keep the transpose
+    reorg cost for any k (the kernel stays layout-resident) and pay for
+    the wrap-pad halo ring (2·k·r extra rows of traffic per sweep along
+    the pipelined axis) that makes them periodic."""
     pts = float(np.prod(list(shape)))
+    backend = getattr(plan, "backend", "jnp")
+    remainder = getattr(plan, "remainder", "fused")
     if plan.tiling == "tessellate":
         k_eff = plan.height or plan.k
         scheme = plan.scheme
     else:
         k_eff = plan.k
-        # the k>1 jnp path runs fused multisteps; scheme is inert there
-        scheme = plan.scheme if plan.k == 1 else "fused"
+        if backend == "pallas":
+            scheme = "transpose"      # layout-resident at every k
+        else:
+            # the k>1 jnp path runs fused multisteps; scheme is inert there
+            scheme = plan.scheme if plan.k == 1 else "fused"
     arith = float(spec.flops_per_point)
     reorg = reorg_ops_per_point(spec, scheme, plan.vl, plan.m)
     t_compute = pts * (arith + reorg) / PEAK_FLOPS
-    t_memory = 2.0 * pts * itemsize / (max(k_eff, 1) * HBM_BW)
+    t_memory = 2.0 * pts * itemsize * \
+        _sweeps_per_step(k_eff, steps, remainder) / HBM_BW
     if scheme == "dlt":
         t_memory *= _DLT_BW_PENALTY
+    if backend == "pallas":
+        n0 = shape[0] if spec.ndim > 1 else shape[-1]
+        t_memory *= 1.0 + 2.0 * plan.k * spec.r / max(n0, 1)
     return max(t_compute, t_memory)

@@ -140,7 +140,7 @@ class StencilService:
         import collections
         self.cache_path = cache_path
         self._problems: dict[tuple, Any] = collections.OrderedDict()
-        self._plans: dict[tuple, Any] = {}
+        self._plans: dict[tuple, Any] = {}      # (sig, steps) -> StencilPlan
 
     def _problem(self, name: str, shape: tuple, dtype):
         from repro.core.api import StencilProblem
@@ -151,31 +151,51 @@ class StencilService:
             self._problems[key] = StencilProblem(name, shape, dtype)
             while len(self._problems) > self.MAX_SIGNATURES:
                 old, _ = self._problems.popitem(last=False)
-                self._plans.pop(old, None)
+                for pk in [pk for pk in self._plans if pk[0] == old]:
+                    del self._plans[pk]
         return key, self._problems[key]
 
     def plan_for(self, name: str, shape: tuple, dtype=jnp.float32,
-                 warm: bool = False):
+                 steps: int | None = None, warm: bool = False):
+        """Resolve the plan for a signature (and, when given, a step
+        count).  The winning plan's ``backend`` field is what dispatches
+        the sweep — a Pallas winner tuned offline flows straight to
+        ``kernels/stencil_kernels`` with no caller changes.  Lookup
+        order: per-``steps`` cache key, generic key, static default.
+
+        Only *exact* hits are memoized, and under their own key: a
+        per-``steps`` request served by the generic plan (or a cold-cache
+        default) must not pin that step count — a later warm request or
+        an offline tuner filling the per-``steps`` entry upgrades it on
+        the next request."""
         from repro.core import autotune
         key, prob = self._problem(name, shape, dtype)
-        plan = self._plans.get(key)
-        if plan is None:
-            # only tuned plans are memoized: a cold-cache default fallback
-            # must not pin the signature to the default forever — a later
-            # warm request (or an offline tuner filling the cache) upgrades
-            plan = autotune.cached_plan(prob, cache_path=self.cache_path)
+        plan = self._plans.get((key, steps))
+        if plan is None and steps is not None:
+            plan = autotune.cached_plan(prob, steps=steps,
+                                        cache_path=self.cache_path,
+                                        generic_fallback=False)
             if plan is None and warm:
+                plan = autotune.best_plan(prob, steps=steps,
+                                          cache_path=self.cache_path)
+            if plan is not None:
+                self._plans[(key, steps)] = plan
+            else:
+                plan = self._plans.get((key, None))
+        if plan is None:
+            plan = autotune.cached_plan(prob, cache_path=self.cache_path)
+            if plan is None and warm and steps is None:
                 plan = autotune.best_plan(prob, cache_path=self.cache_path)
             if plan is not None:
-                self._plans[key] = plan
+                self._plans[(key, None)] = plan
         return plan or prob.default_plan()
 
     def sweep(self, name: str, x, steps: int, warm: bool = False):
         """Advance ``x`` by ``steps`` using the cached plan for its
-        signature."""
+        (signature, steps)."""
         x = jnp.asarray(x)
         key, prob = self._problem(name, x.shape, x.dtype)
-        plan = self.plan_for(name, x.shape, x.dtype, warm=warm)
+        plan = self.plan_for(name, x.shape, x.dtype, steps=steps, warm=warm)
         return prob.run(x, steps, plan)
 
 

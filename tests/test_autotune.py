@@ -1,5 +1,6 @@
-"""Planner unit tests: candidate legality, cache round-trip, deterministic
-pick with a stubbed timer, and the plan="auto" / serving wiring."""
+"""Planner unit tests: cross-backend candidate legality, per-steps
+remainder axis, cache round-trip, deterministic pick with a stubbed timer,
+and the plan="auto" / serving wiring."""
 import json
 
 import jax.numpy as jnp
@@ -19,7 +20,7 @@ def cache_path(tmp_path, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# candidate legality
+# candidate legality — the unified (jnp + pallas) pool
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("name,shape", [
@@ -28,11 +29,16 @@ def cache_path(tmp_path, monkeypatch):
 ])
 def test_candidates_are_legal(name, shape):
     spec = stencils.make(name)
-    cands = autotune.candidate_plans(spec, shape)
+    cands = autotune.candidate_plans(spec, shape)      # backend="auto"
     assert cands, "search space must not be empty"
     n = shape[-1]
+    backends = {p.backend for p in cands}
+    assert backends == {"jnp", "pallas"}, backends
     for p in cands:
-        assert p.backend == "jnp"
+        if p.backend == "pallas":
+            assert autotune.pallas_plan_legal(spec, shape, p.vl, p.m,
+                                              p.t0), p
+            continue
         if p.scheme in ("transpose", "dlt") and p.k == 1 \
                 and p.tiling == "none":
             m = p.m or (n // p.vl if p.scheme == "dlt" else p.vl)
@@ -49,22 +55,96 @@ def test_candidates_are_legal(name, shape):
         == StencilProblem(name, shape).default_plan()
 
 
-def test_candidates_every_plan_runs_and_is_correct():
+def test_candidates_every_jnp_plan_runs_and_is_correct():
     prob = StencilProblem("2d5p", (16, 32))
     x = prob.init(0)
     want = np.asarray(prob.reference(x, 3))     # 3: not divisible by k=2,4
-    for p in autotune.candidate_plans(prob.spec, prob.shape):
+    for p in autotune.candidate_plans(prob.spec, prob.shape, backend="jnp",
+                                      steps=3):
         got = np.asarray(prob.run(x, 3, p))
         np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
                                    err_msg=str(p))
 
 
-def test_pallas_candidates_gated_to_1d():
-    assert autotune.candidate_plans(stencils.make("2d5p"), (32, 64),
-                                    backend="pallas") == []
-    cands = autotune.candidate_plans(stencils.make("1d3p"), (1024,),
+def test_pallas_candidates_run_and_are_correct():
+    """A sample of the Pallas pool (interpret mode) — both remainder
+    policies, 1-D and n-D — must reproduce the periodic reference."""
+    for name, shape in [("1d3p", (32,)), ("2d5p", (8, 64))]:
+        prob = StencilProblem(name, shape)
+        x = prob.init(0)
+        want = np.asarray(prob.reference(x, 3))
+        cands = autotune.candidate_plans(prob.spec, shape,
+                                         backend="pallas", steps=3)
+        assert cands
+        assert {p.remainder for p in cands if p.k > 1} \
+            == {"fused", "native"}
+        for p in cands[::5] + cands[-1:]:
+            got = np.asarray(prob.run(x, 3, p))
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
+                                       err_msg=str(p))
+
+
+def test_pallas_pool_covers_nd_and_non_power_of_two_blocks():
+    """Regression: the pallas pool used to stop at 1-D and could only
+    reach power-of-two vl*m blocks; now n-D candidates exist and a
+    non-power-of-two extent gets non-power-of-two (legal) blocks."""
+    cands = autotune.candidate_plans(stencils.make("2d5p"), (32, 64),
                                      backend="pallas")
     assert cands and all(p.backend == "pallas" for p in cands)
+    assert all(p.t0 is not None and 32 % p.t0 == 0 for p in cands)
+    # n=160: vl=8 pairs include m=5 (vl*m=40, 160 % 40 == 0)
+    spec = stencils.make("1d3p")
+    cands = autotune.candidate_plans(spec, (160,), backend="pallas")
+    assert any((p.vl * (p.m or 0)) & (p.vl * (p.m or 0) - 1) for p in cands), \
+        "expected a non-power-of-two vl*m candidate for n=160"
+    for p in cands:
+        assert 160 % (p.vl * p.m) == 0, p
+
+
+def test_pallas_legality_gate_rejects_bad_blocks():
+    """The explicit gate rejects block shapes that don't divide the
+    (transposed) array, halos that don't fit, and bad pipeline tiles —
+    and everything the enumerator emits passes it."""
+    spec1, spec2 = stencils.make("1d5p"), stencils.make("2d5p")
+    assert not autotune.pallas_plan_legal(spec1, (160,), 8, 6)   # 48 ∤ 160
+    assert not autotune.pallas_plan_legal(spec1, (160,), 8, 1)   # m < r
+    assert not autotune.pallas_plan_legal(spec2, (30, 64), 8, 4, t0=4)  # 4∤30
+    assert not autotune.pallas_plan_legal(spec2, (32, 64), 8, 4, t0=None)
+    assert autotune.pallas_plan_legal(spec1, (160,), 8, 5)       # 40 | 160
+    assert autotune.pallas_plan_legal(spec2, (32, 64), 8, 4, t0=4)
+    for name, shape in [("1d3p", (96,)), ("1d5p", (160,)),
+                        ("2d9p", (24, 96)), ("3d7p", (8, 4, 64))]:
+        spec = stencils.make(name)
+        for p in autotune.candidate_plans(spec, shape, backend="pallas"):
+            assert autotune.pallas_plan_legal(spec, shape, p.vl, p.m,
+                                              p.t0), p
+
+
+def test_interpret_budget_gate_off_tpu():
+    """Off-TPU the auto pool skips pallas above the interpret-mode
+    measurement budget (tuning a huge grid must not take minutes), but an
+    explicit backend="pallas" request still enumerates."""
+    spec = stencils.make("1d3p")
+    big = (autotune.INTERPRET_MAX_POINTS * 2,)
+    auto = autotune.candidate_plans(spec, big)
+    assert auto and all(p.backend == "jnp" for p in auto)
+    assert autotune.candidate_plans(spec, big, backend="pallas")
+
+
+def test_per_steps_remainder_axis():
+    """steps divisible by every k → no remainder variants; a remainder
+    fans k>1 candidates out along the (k, remainder) axis."""
+    spec = stencils.make("1d3p")
+    flat = autotune.candidate_plans(spec, (128,), steps=8)
+    assert all(p.remainder == "fused" for p in flat)
+    ragged = autotune.candidate_plans(spec, (128,), steps=5)
+    pallas_k2 = [p for p in ragged
+                 if p.backend == "pallas" and p.k == 2]
+    assert {p.remainder for p in pallas_k2} == {"fused", "native"}
+    # jnp unroll: both policies coincide (fused multisteps) → no fan-out
+    jnp_k2 = [p for p in ragged if p.backend == "jnp" and p.k == 2
+              and p.tiling == "none"]
+    assert {p.remainder for p in jnp_k2} == {"fused"}
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +153,8 @@ def test_pallas_candidates_gated_to_1d():
 
 def test_cache_roundtrip(cache_path):
     plan = StencilPlan(scheme="transpose", k=4, vl=8, m=4,
-                       tiling="tessellate", tile=(16, 16), height=4)
+                       tiling="tessellate", tile=(16, 16), height=4,
+                       remainder="native")
     rec = {"plan": autotune.plan_to_dict(plan), "seconds_per_step": 1e-5,
            "n_candidates": 9, "n_measured": 3, "measurements": []}
     c = autotune.PlanCache(cache_path)
@@ -111,7 +192,7 @@ def test_cached_plan_sees_external_writer(cache_path):
     # simulate an offline tuner in another process: fresh PlanCache object
     writer = autotune.PlanCache(cache_path)
     plan = StencilPlan(scheme="reorg", k=1)
-    key = autotune.plan_key("1d3p", (128,), prob.dtype, "jnp")
+    key = autotune.plan_key("1d3p", (128,), prob.dtype, "auto")
     writer.put(key, {"plan": autotune.plan_to_dict(plan),
                      "seconds_per_step": 1e-5})
     writer.save()
@@ -124,6 +205,25 @@ def test_cached_plan_sees_external_writer(cache_path):
                       "seconds_per_step": 1e-6})
     writer2.save()
     assert autotune.cached_plan(prob, cache_path=cache_path) == better
+
+
+def test_cached_plan_per_steps_falls_back_to_generic(cache_path):
+    """Lookup order: the per-steps key wins over the generic key; a
+    per-steps miss degrades to the generic plan, never to None."""
+    prob = StencilProblem("1d3p", (128,))
+    generic = StencilPlan(scheme="reorg", k=1)
+    specific = StencilPlan(scheme="multiload", k=1)
+    w = autotune.PlanCache(cache_path)
+    w.put(autotune.plan_key("1d3p", (128,), prob.dtype, "auto"),
+          {"plan": autotune.plan_to_dict(generic), "seconds_per_step": 1.0})
+    w.put(autotune.plan_key("1d3p", (128,), prob.dtype, "auto", steps=7),
+          {"plan": autotune.plan_to_dict(specific), "seconds_per_step": 1.0})
+    w.save()
+    assert autotune.cached_plan(prob, steps=7,
+                                cache_path=cache_path) == specific
+    assert autotune.cached_plan(prob, steps=9,
+                                cache_path=cache_path) == generic
+    assert autotune.cached_plan(prob, cache_path=cache_path) == generic
 
 
 def test_cache_tolerates_corrupt_file(cache_path):
@@ -164,6 +264,36 @@ def test_deterministic_pick_and_cache_hit(cache_path):
     assert not res3.cached and len(calls) > n
 
 
+def test_unified_pool_measures_both_backends(cache_path):
+    """The cross-backend search must put >=1 Pallas candidate in front of
+    the timer even when the roofline ranks them last (stratification) —
+    and a Pallas winner is returned when it measures fastest."""
+    prob = StencilProblem("1d3p", (128,))
+    seen = []
+
+    def pallas_wins(fn, plan):
+        seen.append(plan)
+        return 0.001 if plan.backend == "pallas" else 1.0
+
+    res = autotune.tune(prob, cache_path=cache_path, timer=pallas_wins)
+    assert any(p.backend == "pallas" for p in seen)
+    assert any(p.backend == "jnp" for p in seen)
+    assert res.plan.backend == "pallas"
+    # the winner round-trips through the cache with its backend intact
+    res2 = autotune.tune(prob, cache_path=cache_path, timer=pallas_wins)
+    assert res2.cached and res2.plan.backend == "pallas"
+
+
+def test_backend_restriction_is_honored(cache_path):
+    prob = StencilProblem("1d3p", (128,))
+    res = autotune.tune(prob, backend="jnp", cache_path=cache_path,
+                        timer=lambda fn, p: 1.0)
+    assert all(m["plan"]["backend"] == "jnp" for m in res.measurements)
+    res = autotune.tune(prob, backend="pallas", cache_path=cache_path,
+                        timer=lambda fn, p: 1.0)
+    assert all(m["plan"]["backend"] == "pallas" for m in res.measurements)
+
+
 def test_default_plan_always_in_measured_pool(cache_path):
     prob = StencilProblem("2d5p", (32, 64))
     seen = []
@@ -171,6 +301,50 @@ def test_default_plan_always_in_measured_pool(cache_path):
                   timer=lambda fn, p: (seen.append(p), 1.0)[1],
                   max_measure=3)
     assert prob.default_plan() in seen
+
+
+def test_per_steps_key_separates_tunings(cache_path):
+    """Tuning for steps=5 and steps=None lands in distinct cache entries;
+    each later lookup hits its own."""
+    prob = StencilProblem("1d3p", (128,))
+    timer = lambda fn, p: 1.0
+    r5 = autotune.tune(prob, steps=5, cache_path=cache_path, timer=timer)
+    rg = autotune.tune(prob, cache_path=cache_path, timer=timer)
+    assert r5.key != rg.key
+    assert autotune.tune(prob, steps=5, cache_path=cache_path,
+                         timer=timer).cached
+    assert autotune.tune(prob, cache_path=cache_path, timer=timer).cached
+
+
+def test_measure_window_does_not_scale_with_steps(cache_path):
+    """Tuning cost must not grow with the run length: divisible steps
+    measure the default 4-step window; ragged steps measure a short
+    window congruent mod every block size (lcm + steps % lcm), never the
+    full run."""
+    prob = StencilProblem("1d3p", (128,))
+    timer = lambda fn, p: 100.0
+    res = autotune.tune(prob, steps=100, cache_path=cache_path, timer=timer)
+    assert res.seconds_per_step == pytest.approx(100.0 / 4)
+    res = autotune.tune(prob, steps=5, cache_path=cache_path, timer=timer)
+    assert res.seconds_per_step == pytest.approx(100.0 / 5)
+    res = autotune.tune(prob, steps=10001, cache_path=cache_path,
+                        timer=timer)
+    assert res.seconds_per_step == pytest.approx(100.0 / 5)  # 4 + 10001%4
+
+
+def test_divisible_steps_collapse_to_generic_key(cache_path):
+    """Step counts every candidate block divides share one cache entry:
+    tuning for steps=8 then asking for steps=12, 16 or None are all
+    cache hits (no per-value fragmentation / re-measuring)."""
+    prob = StencilProblem("1d3p", (128,))
+    timer = lambda fn, p: 1.0
+    r8 = autotune.tune(prob, steps=8, cache_path=cache_path, timer=timer)
+    assert not r8.cached and "|s*|" in r8.key
+    for steps in (12, 16, None):
+        assert autotune.tune(prob, steps=steps, cache_path=cache_path,
+                             timer=timer).cached, steps
+    assert autotune.cached_plan(prob, steps=12,
+                                cache_path=cache_path) is not None
 
 
 def test_failing_candidates_are_skipped(cache_path):
@@ -198,11 +372,17 @@ def test_run_auto_measures_writes_cache_and_is_correct(
     want = prob.reference(x, 5)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
-    # observable tuning artifact: the cache file records the search
+    # observable tuning artifact: the cache file records the search,
+    # keyed per-steps and stamped with the code fingerprint
     raw = json.load(open(cache_path))
     (key, rec), = raw["entries"].items()
-    assert key.startswith("1d3p|128|float32|jnp|")
+    assert key.startswith("1d3p|128|float32|auto|")
+    assert f"|s5|{autotune.code_fingerprint()}" in key
+    assert rec["fingerprint"] == autotune.code_fingerprint()
     assert rec["n_measured"] >= 1 and rec["measurements"]
+    # the unified pool put a pallas candidate in front of the timer
+    assert any(m["plan"]["backend"] == "pallas"
+               for m in rec["measurements"])
 
 
 def test_stencil_service_uses_cached_plan_never_measures(
@@ -228,3 +408,50 @@ def test_stencil_service_uses_cached_plan_never_measures(
     # cold signature (not in cache) falls back to the static default
     assert svc.plan_for("1d3p", (256,)) \
         == StencilProblem("1d3p", (256,)).default_plan()
+
+
+def test_stencil_service_picks_up_later_per_steps_tuning(cache_path):
+    """A per-steps request served by the generic fallback must not pin
+    that step count: once an offline tuner writes the per-steps entry,
+    the next request serves it."""
+    from repro.serve.engine import StencilService
+
+    prob = StencilProblem("1d3p", (128,))
+    generic = StencilPlan(scheme="reorg", k=1)
+    w = autotune.PlanCache(cache_path)
+    w.put(autotune.plan_key("1d3p", (128,), prob.dtype, "auto"),
+          {"plan": autotune.plan_to_dict(generic), "seconds_per_step": 1.0})
+    w.save()
+    svc = StencilService(cache_path=cache_path)
+    assert svc.plan_for("1d3p", (128,), steps=7) == generic
+    # offline tuner fills the per-steps entry afterwards
+    specific = StencilPlan(scheme="multiload", k=1)
+    w2 = autotune.PlanCache(cache_path)
+    w2.put(autotune.plan_key("1d3p", (128,), prob.dtype, "auto", steps=7),
+           {"plan": autotune.plan_to_dict(specific),
+            "seconds_per_step": 1.0})
+    w2.save()
+    assert svc.plan_for("1d3p", (128,), steps=7) == specific
+    assert svc.plan_for("1d3p", (128,), steps=9) == generic
+
+
+def test_stencil_service_dispatches_pallas_backend(cache_path, monkeypatch):
+    """A Pallas winner tuned offline flows through the serving path to the
+    kernels with no caller changes — and serving still never measures."""
+    from repro.serve.engine import StencilService
+
+    prob = StencilProblem("1d3p", (128,))
+    autotune.tune(prob, cache_path=cache_path,
+                  timer=lambda fn, p: 0.001 if p.backend == "pallas"
+                  else 1.0)
+    svc = StencilService(cache_path=cache_path)
+    plan = svc.plan_for("1d3p", (128,))
+    assert plan.backend == "pallas"
+
+    monkeypatch.setattr(autotune, "tune", lambda *a, **kw: (_ for _ in ())
+                        .throw(AssertionError("no measuring")))
+    x = prob.init(0)
+    got = svc.sweep("1d3p", x, 4)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(prob.reference(x, 4)),
+                               rtol=2e-5, atol=2e-5)

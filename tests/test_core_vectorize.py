@@ -137,3 +137,21 @@ def test_tessellate_multi_round_with_transpose_inner():
     want = stencils.apply_steps(spec, x, 8)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
                                atol=1e-4)
+
+
+def test_tessellate_run_remainder_policies():
+    """steps % height != 0: 'error' raises (historical contract); 'native'
+    finishes with one shorter round, 'fused' with single steps — both
+    match the oracle."""
+    import pytest
+    spec = stencils.make("1d3p")
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(128), dtype=jnp.float32)
+    want = stencils.apply_steps(spec, x, 7)
+    with pytest.raises(AssertionError):
+        tessellate.tessellate_run(spec, x, steps=7, tile=(32,), height=4)
+    for policy in ("native", "fused"):
+        got = tessellate.tessellate_run(spec, x, steps=7, tile=(32,),
+                                        height=4, remainder=policy)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=policy)

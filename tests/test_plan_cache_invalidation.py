@@ -1,0 +1,177 @@
+"""Plan-cache self-invalidation: the plan key embeds a fingerprint of the
+scheme registry + kernel sources, so editing (or monkeypatching) any
+registered kernel silently retires every cached plan — a stale plan is
+never served.  Also covers concurrent multi-writer save() merging."""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import autotune, vectorize
+from repro.core.api import StencilPlan, StencilProblem
+
+
+@pytest.fixture()
+def cache_path(tmp_path, monkeypatch):
+    path = str(tmp_path / "plans.json")
+    monkeypatch.setattr(autotune, "_caches", {})
+    return path
+
+
+def _mutate_scheme(monkeypatch):
+    """Replace a registered scheme's kernel fn — the smallest 'code
+    change' the fingerprint must notice."""
+    orig = vectorize.SCHEMES["reorg"]
+
+    def patched_reorg(spec, x):
+        return orig(spec, x)
+
+    monkeypatch.setitem(vectorize.SCHEMES, "reorg", patched_reorg)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint / key behavior
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_is_stable_within_a_process():
+    assert autotune.code_fingerprint() == autotune.code_fingerprint()
+    assert len(autotune.code_fingerprint()) == 12
+
+
+def test_plan_key_changes_when_scheme_kernel_changes(monkeypatch):
+    k1 = autotune.plan_key("1d3p", (128,), jnp.float32, "auto")
+    _mutate_scheme(monkeypatch)
+    k2 = autotune.plan_key("1d3p", (128,), jnp.float32, "auto")
+    assert k1 != k2
+    # only the fingerprint segment moved
+    assert k1.rsplit("|", 1)[0] == k2.rsplit("|", 1)[0]
+
+
+def test_plan_key_restored_when_mutation_reverted(monkeypatch):
+    k1 = autotune.plan_key("1d3p", (128,), jnp.float32, "auto")
+    with monkeypatch.context() as mp:
+        _mutate_scheme(mp)
+        assert autotune.plan_key("1d3p", (128,), jnp.float32,
+                                 "auto") != k1
+    assert autotune.plan_key("1d3p", (128,), jnp.float32, "auto") == k1
+
+
+# ---------------------------------------------------------------------------
+# stale-plan refusal end to end
+# ---------------------------------------------------------------------------
+
+def test_stale_plan_refused_after_kernel_change(cache_path, monkeypatch):
+    """Tune → mutate a registered kernel → the cached record must not be
+    served (cached_plan misses; tune re-measures under the new key) while
+    the old record stays on disk under the old key."""
+    prob = StencilProblem("1d3p", (128,))
+    calls = []
+    timer = lambda fn, p: (calls.append(p), 1.0)[1]
+
+    res = autotune.tune(prob, cache_path=cache_path, timer=timer)
+    assert not res.cached and calls
+    assert autotune.cached_plan(prob, cache_path=cache_path) is not None
+
+    _mutate_scheme(monkeypatch)
+    # the PlanCache object itself refuses the stale record: lookups go
+    # through the new key, which cannot match any pre-mutation entry
+    assert autotune.cached_plan(prob, cache_path=cache_path) is None
+    n = len(calls)
+    res2 = autotune.tune(prob, cache_path=cache_path, timer=timer)
+    assert not res2.cached and len(calls) > n, "stale plan was served"
+    assert res2.key != res.key
+
+    # the re-tune's save() garbage-collects the retired-fingerprint entry
+    # (its key can never match again), so the file stays bounded
+    raw = json.load(open(cache_path))
+    assert res2.key in raw["entries"]
+    assert res.key not in raw["entries"]
+
+
+def test_save_prunes_retired_fingerprints_keeps_fingerprintless(cache_path):
+    """save() drops entries stamped with a fingerprint that is no longer
+    current (unreachable keys), but keeps hand-written records that carry
+    no fingerprint at all."""
+    w = autotune.PlanCache(cache_path)
+    w.put("stale", {"plan": autotune.plan_to_dict(StencilPlan()),
+                    "seconds_per_step": 1.0, "fingerprint": "deadbeefdead"})
+    w.put("current", {"plan": autotune.plan_to_dict(StencilPlan()),
+                      "seconds_per_step": 1.0,
+                      "fingerprint": autotune.code_fingerprint()})
+    w.put("nofp", {"plan": autotune.plan_to_dict(StencilPlan()),
+                   "seconds_per_step": 1.0})
+    w.save()
+    fresh = autotune.PlanCache(cache_path)
+    assert fresh.get("stale") is None
+    assert fresh.get("current") is not None
+    assert fresh.get("nofp") is not None
+
+
+def test_fingerprint_memo_holds_live_references():
+    """The fingerprint memo keys on the registry objects themselves, so a
+    garbage-collected function's reused address can never alias a stale
+    hash (ids are only unique among live objects)."""
+    from repro.core import vectorize
+    base = autotune.code_fingerprint()
+    for i in range(3):
+        src = f"def _tmp_scheme(spec, x):\n    return x * {i}\n"
+        ns = {}
+        exec(src, ns)
+        vectorize.SCHEMES["_tmp"] = ns["_tmp_scheme"]
+        try:
+            fp = autotune.code_fingerprint()
+            assert fp != base
+        finally:
+            del vectorize.SCHEMES["_tmp"]
+    assert autotune.code_fingerprint() == base
+
+
+def test_cache_version_bump_discards_old_files(cache_path):
+    with open(cache_path, "w") as f:
+        json.dump({"version": autotune.CACHE_VERSION - 1,
+                   "entries": {"k": {"plan": {}}}}, f)
+    assert autotune.PlanCache(cache_path).get("k") is None
+
+
+# ---------------------------------------------------------------------------
+# concurrent save() merging
+# ---------------------------------------------------------------------------
+
+def _rec(scheme, t=1.0):
+    return {"plan": autotune.plan_to_dict(StencilPlan(scheme=scheme)),
+            "seconds_per_step": t}
+
+
+def test_concurrent_save_merge_interleaved_writers(cache_path):
+    """Three writers interleaving put/save: every key survives, and on a
+    key collision the writer's own unsaved entry wins over the file."""
+    a = autotune.PlanCache(cache_path)
+    b = autotune.PlanCache(cache_path)
+    c = autotune.PlanCache(cache_path)
+    a.put("shared", _rec("reorg"))
+    a.put("ka", _rec("fused"))
+    a.save()
+    b.put("shared", _rec("multiload"))      # collides with a's entry
+    b.put("kb", _rec("fused"))
+    b.save()                                # b's unsaved entries win
+    c.put("kc", _rec("dlt"))
+    c.save()
+    fresh = autotune.PlanCache(cache_path)
+    assert len(fresh) == 4
+    for k in ("ka", "kb", "kc", "shared"):
+        assert fresh.get(k) is not None, k
+    assert fresh.get("shared")["plan"]["scheme"] == "multiload"
+
+
+def test_save_is_idempotent_for_clean_entries(cache_path):
+    """A second save() without new put()s must not resurrect entries that
+    another writer has since superseded (dirty-set semantics)."""
+    a = autotune.PlanCache(cache_path)
+    a.put("k", _rec("reorg"))
+    a.save()
+    b = autotune.PlanCache(cache_path)
+    b.put("k", _rec("multiload"))
+    b.save()
+    a.save()        # a has no dirty entries left — must not clobber b's
+    fresh = autotune.PlanCache(cache_path)
+    assert fresh.get("k")["plan"]["scheme"] == "multiload"

@@ -1,0 +1,64 @@
+"""Hypothesis property tests for per-``steps`` planning: for arbitrary
+steps, unroll factors, shapes and remainder policies, ``StencilProblem.run``
+must equal the naive step-by-step reference — the invariant that makes the
+autotuner's (k, remainder) axis safe to search."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.api import StencilPlan, StencilProblem  # noqa: E402
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _check(prob, plan, steps):
+    x = prob.init(seed=0)
+    got = np.asarray(prob.run(x, steps, plan))
+    want = np.asarray(prob.reference(x, steps))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4,
+                               err_msg=f"{plan} steps={steps}")
+
+
+@given(steps=st.integers(1, 9), k=st.sampled_from([2, 3, 4]),
+       name=st.sampled_from(["1d3p", "1d5p", "2d5p"]),
+       remainder=st.sampled_from(["fused", "native"]))
+@settings(**SETTINGS)
+def test_unroll_plan_matches_reference_any_steps(steps, k, name, remainder):
+    shape = (64,) if name.startswith("1d") else (8, 32)
+    prob = StencilProblem(name, shape)
+    plan = StencilPlan(scheme="transpose", k=k, remainder=remainder)
+    _check(prob, plan, steps)
+
+
+@given(steps=st.integers(1, 7), height=st.sampled_from([2, 3, 4]),
+       remainder=st.sampled_from(["fused", "native"]),
+       seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_tessellate_plan_matches_reference_any_steps(steps, height,
+                                                     remainder, seed):
+    prob = StencilProblem("2d5p", (32, 32))
+    plan = StencilPlan(scheme="fused", k=1, tiling="tessellate",
+                       tile=(16, 16), height=height, remainder=remainder)
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((32, 32)),
+                    dtype=jnp.float32)
+    got = np.asarray(prob.run(x, steps, plan))
+    want = np.asarray(prob.reference(x, steps))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(steps=st.integers(1, 5), k=st.sampled_from([1, 2, 3]),
+       nb=st.sampled_from([2, 3]), m=st.sampled_from([4, 5]),
+       remainder=st.sampled_from(["fused", "native"]))
+@settings(max_examples=10, deadline=None)
+def test_pallas_plan_matches_reference_any_steps(steps, k, nb, m,
+                                                 remainder):
+    """The Pallas (interpret) path over arbitrary (steps, k, block shape,
+    remainder policy) — including non-power-of-two vl*m blocks."""
+    vl = 4
+    prob = StencilProblem("1d3p", (vl * m * nb,))
+    plan = StencilPlan(scheme="transpose", k=k, vl=vl, m=m,
+                       backend="pallas", remainder=remainder)
+    _check(prob, plan, steps)

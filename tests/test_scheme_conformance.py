@@ -1,16 +1,21 @@
-"""Cross-scheme conformance matrix.
+"""Cross-scheme AND cross-backend conformance matrix.
 
 All five vectorization schemes must agree with an f64 oracle (pure numpy,
 independent of jnp) on every stencil family the planner chooses between,
-across dtypes and (vl, m) layout parameters.  This is the contract that
-makes the autotuner's search *safe*: any candidate it measures computes
-the same answer.
+across dtypes and (vl, m) layout parameters.  The backend-parity matrix
+extends every (scheme × stencil family × dtype) case with the Pallas
+multistep kernel (interpret mode, periodic wrapper) against the same
+oracle at the same tolerances — jnp and Pallas plans in the autotuner's
+unified pool are therefore interchangeable answers.  This is the contract
+that makes the cross-backend search *safe*: any candidate it measures
+computes the same answer.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import stencils, vectorize
+from repro.kernels import ops
 
 SCHEMES = ["multiload", "reorg", "dlt", "transpose", "fused"]
 NAMES = ["1d3p", "2d5p", "3d7p"]
@@ -80,3 +85,46 @@ def test_multistep_conformance(scheme, steps):
     got = np.asarray(vectorize.run_scheme(scheme, spec, x, steps, 8, 4))
     want = _f64_oracle(spec, x64, steps).astype(np.float32)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# backend-parity matrix: jnp scheme AND Pallas kernel vs the f64 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_backend_parity_matrix(scheme, name, dtype):
+    """Every (scheme × stencil family × dtype) cell also runs the Pallas
+    multistep kernel (interpret mode, periodic wrapper): jnp, Pallas and
+    the f64 oracle must agree to the same tolerances — so a plan's
+    backend never changes the answer, only the speed."""
+    spec, x, x64 = _inputs(name, dtype)
+    tol = TOL[dtype]
+    want = _f64_oracle(spec, x64).astype(np.float32)
+    got_jnp = np.asarray(_run(scheme, spec, x, 8, 4).astype(jnp.float32))
+    got_pal = np.asarray(ops.stencil_multistep_periodic(
+        spec, x, 1, vl=8, m=4, interpret=True).astype(jnp.float32))
+    np.testing.assert_allclose(got_jnp, want, rtol=tol, atol=tol)
+    np.testing.assert_allclose(got_pal, want, rtol=tol, atol=tol)
+    np.testing.assert_allclose(got_pal, got_jnp, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("steps,k", [(4, 2), (5, 2), (3, 4)])
+@pytest.mark.parametrize("name", NAMES)
+def test_backend_parity_multistep(name, steps, k):
+    """Multistep parity, including step counts the unroll factor does not
+    divide: both remainder policies of the Pallas path match the
+    step-by-step f64 oracle."""
+    from repro.core.api import StencilPlan, StencilProblem
+
+    spec, x, x64 = _inputs(name, "float32")
+    want = _f64_oracle(spec, x64, steps).astype(np.float32)
+    prob = StencilProblem(name, x.shape)
+    for remainder in ("fused", "native"):
+        plan = StencilPlan(scheme="transpose", k=k, vl=8, m=4,
+                           backend="pallas", remainder=remainder,
+                           t0=None if spec.ndim == 1 else x.shape[0])
+        got = np.asarray(prob.run(x, steps, plan))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name} {remainder}")

@@ -10,8 +10,19 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
     per tap for the naive layout (counted analytically per kernel config —
     the Mosaic lane-permute distinction only materializes on real TPU; the
     analytic census is printed alongside the HLO reorg-op count).
+
+(c) ``--smoke`` — resident-vs-roundtrip sweep-engine micro-benchmark: times
+    ``ops.stencil_sweep_periodic`` (one layout round-trip per run) against
+    ``ops.stencil_run_periodic`` (pad/transpose/crop per sweep) at growing
+    step counts and writes the JSON artifact CI uploads
+    (``benchmarks/results/bench_kernels_smoke.json``) — the perf
+    trajectory record for the layout-resident engine.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +30,7 @@ import numpy as np
 
 from repro.core import layouts, stencils
 from repro.kernels import stencil_kernels as sk
-from benchmarks.timing import Row
+from benchmarks.timing import Row, bench
 
 N = 8 * 8 * 64
 VL, M = 8, 8
@@ -67,3 +78,70 @@ def run(full: bool = False) -> list[Row]:
             f"transpose_layout={ours}; naive_lane_rolls={naive}; "
             f"reduction={naive / ours:.1f}x"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --smoke: resident vs per-sweep-roundtrip sweep engines (CI artifact)
+# ---------------------------------------------------------------------------
+
+SMOKE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "results", "bench_kernels_smoke.json")
+
+
+def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
+    """Micro-benchmark the layout-resident sweep engine against the
+    per-sweep pad/transpose/crop path, at CPU-interpret-friendly scale,
+    and write the JSON artifact.  The resident win grows with ``steps``
+    (the round-trip amortizes over the run)."""
+    from repro.kernels import ops
+
+    cases = [("1d3p", (8 * 8 * 8,), dict(k=2, vl=8, m=8)),
+             ("2d5p", (16, 8 * 8 * 2), dict(k=2, vl=8, m=8, t0=4))]
+    results = []
+    for name, shape, kw in cases:
+        spec = stencils.make(name)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                        jnp.float32)
+        for steps in steps_list:
+            rt = bench(lambda: ops.stencil_run_periodic(
+                spec, x, steps, interpret=True, **kw),
+                warmup=1, iters=3, min_time_s=0.05)
+            res = bench(lambda: ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True, **kw),
+                warmup=1, iters=3, min_time_s=0.05)
+            row = {"name": f"{name}/{'x'.join(map(str, shape))}/steps{steps}",
+                   "steps": steps, "roundtrip_us": rt * 1e6,
+                   "resident_us": res * 1e6, "speedup": rt / res}
+            print(f"{row['name']}: roundtrip={rt * 1e6:.0f}us "
+                  f"resident={res * 1e6:.0f}us speedup={rt / res:.2f}x")
+            results.append(row)
+    payload = {"bench": "resident_vs_roundtrip_sweep",
+               "backend": jax.default_backend(),
+               "device": jax.devices()[0].device_kind,
+               # both timed paths pin interpret=True above — comparable
+               # CPU-interpret-scale numbers on every host, incl. TPU
+               "mode": "interpret",
+               "results": results}
+    out_path = out_path or SMOKE_PATH
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="resident-vs-roundtrip sweep engine bench → JSON")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    for row in run(full=args.full):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,10 @@ Plans compose the paper's three pieces:
   backend     — jnp | pallas (kernels/) | distributed (shard_map halo)
   remainder   — how steps % k leftovers run: "fused" (single steps on the
                 same backend) | "native" (one k=remainder block)
+  sweep       — Pallas sweep engine: "resident" (one program for the whole
+                run, transpose-layout held across every sweep, zero
+                wrap-pad copies) | "roundtrip" (legacy per-sweep
+                pad/transpose/crop)
 """
 from __future__ import annotations
 
@@ -36,6 +40,7 @@ class StencilPlan:
     backend: str = "jnp"           # jnp | pallas | distributed
     t0: int | None = None          # pallas n-D pipeline tile (rows/grid step)
     remainder: str = "fused"       # fused | native — steps % k policy
+    sweep: str = "resident"        # resident | roundtrip — pallas engine
 
 
 class StencilProblem:
@@ -95,6 +100,15 @@ class StencilProblem:
             # TPU); tuner-built pallas plans always carry an explicit
             # (vl, m) pair and those are honored.
             vl = plan.vl if plan.m is not None else None
+            if plan.sweep == "resident":
+                # layout-resident engine: ONE program for all steps — the
+                # k-blocked sweeps AND the steps % k remainder are fused
+                # inside (no _chunked round-trips between sweeps).
+                return ops.stencil_sweep_periodic(
+                    self.spec, x, steps, k=plan.k, vl=vl, m=plan.m,
+                    t0=plan.t0, remainder=plan.remainder)
+            if plan.sweep != "roundtrip":
+                raise ValueError(f"unknown sweep engine {plan.sweep!r}")
             return self._chunked(
                 x, steps, plan.k,
                 lambda v, n, k: ops.stencil_run_periodic(

@@ -11,7 +11,12 @@ over **every execution backend at once**:
      AND the Pallas transpose-layout kernels in one candidate list; each
      backend has explicit legality gates (:func:`pallas_plan_legal`:
      block-shape divisibility, halo-fits-block, pipeline-tile
-     divisibility) instead of ad-hoc per-branch filtering.  Off-TPU the
+     divisibility, sweep-engine validity) instead of ad-hoc per-branch
+     filtering.  Pallas candidates fan out along a ``sweep`` axis —
+     ``resident`` (the layout-resident engine: one program per run, no
+     per-sweep pad/transpose round-trips) vs ``roundtrip`` (legacy
+     per-sweep wrap-pad/crop) — and the roofline ranks resident ahead
+     because it amortizes the layout traffic over the run.  Off-TPU the
      auto pool caps pallas enumeration at
      :data:`INTERPRET_MAX_POINTS` grid points (interpret-mode
      measurement latency budget; explicit ``backend="pallas"``
@@ -72,7 +77,8 @@ Plan-cache file format (JSON, ``REPRO_PLAN_CACHE`` env var or
        "2d5p|512x512|float32|auto|cpu|s32|3f2a9c1d04be": {
          "plan": {"scheme": "transpose", "k": 2, "tiling": "none",
                   "tile": null, "height": null, "vl": 8, "m": 8,
-                  "backend": "jnp", "t0": null, "remainder": "fused"},
+                  "backend": "jnp", "t0": null, "remainder": "fused",
+                  "sweep": "resident"},
          "seconds_per_step": 1.2e-4,
          "fingerprint": "3f2a9c1d04be",
          "n_candidates": 23, "n_measured": 8,
@@ -378,7 +384,8 @@ def _layout_pairs(n: int, r: int):
 
 
 def pallas_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
-                      vl: int, m: int, t0: int | None = None) -> bool:
+                      vl: int, m: int, t0: int | None = None,
+                      sweep: str = "resident") -> bool:
     """Backend legality gate for the Pallas transpose-layout kernels.
 
     * block-shape divisibility: ``shape[-1] % (vl*m) == 0`` — the
@@ -388,8 +395,15 @@ def pallas_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
     * halo-fits-block: ``r <= m`` and ``r <= vl`` (the kernels assemble
       at most r boundary rows per vector set, and carry r lanes);
     * pipeline tile (n-D only): ``t0`` must divide ``shape[0]`` and hold
-      the halo (``t0 >= r``).
+      the halo (``t0 >= r``);
+    * sweep engine: ``resident`` (layout-resident wrapped-grid sweeps) or
+      ``roundtrip`` (per-sweep wrap-pad/crop).  The resident engine wraps
+      its halo reads through the grid index maps, which is legal for any
+      block count — it adds NO constraint beyond the shared gates above,
+      so the two engines are interchangeable wherever pallas is legal.
     """
+    if sweep not in ("resident", "roundtrip"):
+        return False
     n = shape[-1]
     r = spec.r
     if n % (vl * m) or m < r or vl < r:
@@ -451,12 +465,13 @@ def _pallas_candidates(spec: stencils.StencilSpec, shape: tuple[int, ...],
                if t <= n0 and n0 % t == 0 and t >= spec.r][:_MAX_T0]
     for vl, m in _pallas_pairs(shape[-1], spec.r):
         for t0 in t0s:
-            if not pallas_plan_legal(spec, shape, vl, m, t0):
-                continue
-            for k in _KS:
-                plan = StencilPlan(scheme="transpose", k=k, vl=vl, m=m,
-                                   t0=t0, backend="pallas")
-                cands += _with_remainder(plan, steps, k)
+            for sweep in ("resident", "roundtrip"):
+                if not pallas_plan_legal(spec, shape, vl, m, t0, sweep):
+                    continue
+                for k in _KS:
+                    plan = StencilPlan(scheme="transpose", k=k, vl=vl, m=m,
+                                       t0=t0, backend="pallas", sweep=sweep)
+                    cands += _with_remainder(plan, steps, k)
     return cands
 
 

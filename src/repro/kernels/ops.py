@@ -4,6 +4,17 @@ Natural-layout in/out: the wrappers perform the local transpose-layout
 round-trip (itself a Pallas kernel on the 1-D path — §3.5), pick TPU-native
 tile parameters, and run sweeps of k-step pipelined updates.
 
+Two periodic execution engines:
+
+  * ``stencil_run_periodic`` — legacy per-sweep round-trip: every k-step
+    sweep wrap-pads the pipelined axis, transposes, runs the kernel,
+    untransposes and crops (4 full-domain copies per sweep);
+  * ``stencil_sweep_periodic`` — layout-RESIDENT engine: one jitted
+    program transposes in once, runs ALL steps (k-blocks + remainder)
+    with the wrapped-periodic kernels, and untransposes once.  Bit-
+    identical to the former, with the layout/pad traffic amortized over
+    the whole run.
+
 On CPU hosts the kernels execute in interpret mode (validation); on TPU they
 compile via Mosaic.  ``interpret=None`` auto-detects.
 """
@@ -25,24 +36,51 @@ def _auto_interpret(interpret):
     return interpret
 
 
+def _fit_m(n_minor: int, vl: int, r: int, m: int | None) -> int | None:
+    """Largest legal m <= the requested/default m for this vl, or None."""
+    m = m or (sk.DEFAULT_M if n_minor % (vl * sk.DEFAULT_M) == 0 else
+              max(r, n_minor // vl // 2 or 1))
+    while m >= r and n_minor % (vl * m):
+        m -= 1
+    return m if m >= r else None
+
+
 def pick_tile(spec: StencilSpec, shape, vl: int | None = None,
               m: int | None = None, t0: int | None = None):
     """TPU-native defaults: vl=128 lanes, m=8 sublanes, pipeline tile t0=8;
-    shrink for small/test shapes while keeping divisibility."""
+    shrink for small/test shapes while keeping divisibility.
+
+    When no legal ``m >= spec.r`` exists for the (default) vl — e.g. a
+    1d5p stencil on shape (8,), where vl=8 only leaves m=1 < r — the vl is
+    halved until a legal (vl, m) appears (a caller-pinned vl is honored,
+    never silently changed); if no vl >= spec.r admits one — or no n-D
+    pipeline tile t0 >= r divides shape[0] — a ValueError names the shape
+    instead of tripping an assert."""
     n_minor = shape[-1]
+    r = spec.r
+    vl_req = vl
     vl = vl or (sk.DEFAULT_VL if n_minor % (sk.DEFAULT_VL * 2) == 0 else 8)
-    m = m or (sk.DEFAULT_M if n_minor % (vl * sk.DEFAULT_M) == 0 else
-              max(spec.r, n_minor // vl // 2 or 1))
-    while n_minor % (vl * m):
-        m -= 1
-    assert m >= spec.r, (m, spec.r, shape)
+    fit = _fit_m(n_minor, vl, r, m)
+    while fit is None and vl_req is None and vl // 2 >= max(r, 1):
+        vl //= 2                      # auto-picked vl: fall back to smaller
+        fit = _fit_m(n_minor, vl, r, m)
+    if fit is None:
+        raise ValueError(
+            f"no legal Pallas tile for stencil {spec.name!r} on shape "
+            f"{tuple(shape)}: need m >= r={r} with vl*m dividing "
+            f"n_minor={n_minor}"
+            + (f" at the requested vl={vl_req}" if vl_req else ""))
+    m = fit
     if len(shape) == 1:
         return vl, m, None
     n0 = shape[0]
     t0 = t0 or min(8, n0)
     while n0 % t0:
         t0 -= 1
-    assert t0 >= spec.r
+    if t0 < r:
+        raise ValueError(
+            f"no legal pipeline tile for stencil {spec.name!r} on shape "
+            f"{tuple(shape)}: need t0 >= r={r} dividing n0={n0}")
     return vl, m, t0
 
 
@@ -125,6 +163,86 @@ def stencil_run_periodic(spec: StencilSpec, x: jax.Array, steps: int,
     for _ in range(steps // k):
         x = stencil_multistep_periodic(spec, x, k, vl, m, t0, interpret)
     return x
+
+
+# ---------------------------------------------------------------------------
+# Layout-resident sweep engine — the fast path `StencilProblem.run`
+# dispatches for plans with sweep="resident".
+#
+# One jitted program for the WHOLE run: transpose into layout once, advance
+# all `steps` (main k-blocks and the steps % k remainder, under either
+# remainder policy) with the wrapped-periodic sweep kernels — which read
+# their halo blocks straight out of the resident array through the grid
+# index maps, so no wrap-pad / crop copy ever materializes — and
+# untranspose once.  The layout round-trip is paid once per run (§3.2/§3.5
+# amortization), not once per sweep.
+# ---------------------------------------------------------------------------
+
+def _sweep_periodic_impl(spec: StencilSpec, x: jax.Array, steps: int,
+                         k: int, vl: int | None, m: int | None,
+                         t0: int | None, remainder: str,
+                         interpret: bool | None) -> jax.Array:
+    if remainder not in ("fused", "native"):
+        raise ValueError(f"unknown remainder policy {remainder!r}")
+    interpret = _auto_interpret(interpret)
+    vl, m, t0 = pick_tile(spec, x.shape, vl, m, t0)
+    if steps <= 0:
+        return x
+    n_main, rem = divmod(steps, k)
+    if spec.ndim == 1:
+        t = sk.block_transpose(x, vl, m, interpret=interpret)
+        sweep = lambda v, kk: sk.stencil1d_sweep_periodic(
+            spec, v, kk, interpret=interpret)
+    else:
+        t = layouts.to_transpose_layout(x, vl, m)
+        sweep = lambda v, kk: sk.stencil_nd_sweep_periodic(
+            spec, v, kk, t0, interpret=interpret)
+
+    def sweeps(v, kk, n):
+        if n == 1:
+            return sweep(v, kk)
+        return jax.lax.fori_loop(0, n, lambda _, u: sweep(u, kk), v)
+
+    if n_main:
+        t = sweeps(t, k, n_main)
+    if rem:
+        # remainder fused INTO the same program: "native" runs one shorter
+        # k=rem pipelined sweep, "fused" runs rem single-step sweeps —
+        # either way the array never leaves the transpose layout.
+        t = sweep(t, rem) if remainder == "native" else sweeps(t, 1, rem)
+    if spec.ndim == 1:
+        return sk.block_untranspose(t, vl, m, interpret=interpret)
+    return layouts.from_transpose_layout(t, vl, m)
+
+
+_sweep_jit = jax.jit(_sweep_periodic_impl,
+                     static_argnums=(0, 2, 3, 4, 5, 6, 7, 8))
+# donated twin: XLA reuses x's buffer for the result (no double-buffering
+# at the jit boundary).  The caller's x is INVALIDATED on donation-capable
+# backends (TPU) — opt in only when the input is dead after the call
+# (steady-state sweep loops, benchmarks); CPU ignores donation.
+_sweep_jit_donated = jax.jit(_sweep_periodic_impl,
+                             static_argnums=(0, 2, 3, 4, 5, 6, 7, 8),
+                             donate_argnums=(1,))
+
+
+def stencil_sweep_periodic(spec: StencilSpec, x: jax.Array, steps: int,
+                           k: int = 2, vl: int | None = None,
+                           m: int | None = None, t0: int | None = None,
+                           remainder: str = "fused",
+                           interpret: bool | None = None,
+                           donate: bool = False) -> jax.Array:
+    """Advance ``x`` by ``steps`` periodic steps, layout-resident.
+
+    Equivalent to ``stencil_run_periodic`` over the main k-blocks plus the
+    ``steps % k`` remainder under ``remainder`` — bit-identical output —
+    but as ONE program: one transpose in, one transpose out, zero
+    wrap-pad/crop copies (the sweep kernels wrap their reads through the
+    grid index maps instead).  ``donate=True`` additionally donates ``x``
+    to the program (in-place update on TPU; the caller must not reuse x).
+    """
+    impl = _sweep_jit_donated if donate else _sweep_jit
+    return impl(spec, x, steps, k, vl, m, t0, remainder, interpret)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))

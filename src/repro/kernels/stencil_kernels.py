@@ -21,11 +21,34 @@ TPU rendering of the paper (see DESIGN.md §2):
     unit-stride dim uses the transpose layout.  BC: dirichlet along the
     pipelined axis, periodic elsewhere (kernels' oracle in kernels/ref.py).
     Fully-periodic semantics — what ``StencilProblem.run`` and the
-    autotuner's unified pool require — are layered on top by
-    ``kernels/ops.stencil_{multistep,run}_periodic``: wrap-pad the
-    pipelined axis by >= k*r (whole blocks / pipeline tiles), run the
-    kernel, crop.  The raw kernels stay dirichlet so the distributed halo
-    runtime (edge_mask=False + halo-block exchange) keeps its contract.
+    autotuner's unified pool require — come in two renderings:
+
+      - legacy round-trip (``kernels/ops.stencil_{multistep,run}_periodic``):
+        wrap-pad the pipelined axis by >= k*r (whole blocks / pipeline
+        tiles) in the natural layout, transpose, run the kernel, untranspose,
+        crop — one full-domain pad copy and one layout round-trip per sweep;
+      - layout-RESIDENT sweep (``stencil{1d,_nd}_sweep_periodic`` below, the
+        fast path): the pallas grid itself runs over a *virtual* padded
+        domain of ``nbp = nb + 2p`` blocks (``p = ceil(k*r / block)``); the
+        input BlockSpec index map wraps ``(j - p) mod nb`` — the same
+        periodic-carry trick ``extend_vs`` plays on the lane axis, lifted to
+        the block/tile axis — so the halo blocks are *read* straight out of
+        the resident (nb, m, vl) array and no padded copy ever materializes.
+        Output writes land at ``(bp - p) mod nb``: the p corrupted head
+        blocks (garbage within k·r of the virtual dirichlet edge) are
+        overwritten by their correct versions later in the same grid, and
+        the p corrupted tail writes are suppressed in-kernel (the out index
+        freezes on the last correct block, whose buffer revisits untouched
+        until the final flush).  One kernel launch per sweep, zero copies —
+        fully periodic on every axis, bit-identical to the pad/crop path.
+
+    ``kernels/ops.stencil_sweep_periodic`` chains these sweeps (main
+    k-blocks AND the steps % k remainder policy) inside ONE jitted program
+    that transposes in once and untransposes once per *run* — the paper's
+    §3.2/§3.5 claim that the layout cost is paid once per tile lifetime,
+    honored across the whole time loop.  The raw multistep kernels stay
+    dirichlet so the distributed halo runtime (edge_mask=False +
+    halo-block exchange) keeps its contract.
 
 Grid-step uniform formulation (boot folded into the steady loop): at grid
 step j, window position i holds block ``j-k+i`` at time ``k-1-i``; blocks
@@ -33,6 +56,11 @@ outside [0, nb) are masked; output block ``max(j-k, 0)`` is (re)written
 every step — the final (j = b+k) write is the completed block, and on TPU
 the out buffer only flushes when its block index changes, so intermediate
 writes never touch HBM.
+
+The dirichlet ring masks are hoisted: the resident/periodic path builds
+no masks at all, and the dirichlet path builds each iota comparison once
+per kernel invocation (outside the k-unroll loop), not once per unroll
+position.
 """
 from __future__ import annotations
 
@@ -79,7 +107,8 @@ def _tap_sum_1d(spec: StencilSpec, ext: jax.Array, m: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _kernel_1d(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
-               nb: int, m: int, vl: int, k: int, edge_mask: bool = True):
+               nb: int, m: int, vl: int, k: int, edge_mask: bool = True,
+               write_stop: int | None = None):
     r = spec.r
     j = pl.program_id(0)
 
@@ -88,14 +117,19 @@ def _kernel_1d(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
         win_ref[...] = jnp.zeros_like(win_ref)
         vrl_ref[...] = jnp.zeros_like(vrl_ref)
 
-    # ring masks built in-kernel (pallas kernels may not capture consts):
-    # element e of a block sits at (row e % m, lane e // m); with r <= m the
-    # first r elements are lane 0 / rows < r, the last r lane vl-1 / rows
-    # >= m-r (cf. _ring_masks_np, property-tested against this closed form).
-    rows = lax.broadcasted_iota(jnp.int32, (m, vl), 0)
-    lanes = lax.broadcasted_iota(jnp.int32, (m, vl), 1)
-    first_mask = (lanes == 0) & (rows < r)
-    last_mask = (lanes == vl - 1) & (rows >= m - r)
+    if edge_mask:
+        # ring masks built in-kernel (pallas cannot capture array consts;
+        # jax raises "consts not supported in pallas_call"), hoisted here —
+        # once per kernel invocation, outside the k-unroll loop, and not
+        # built at all on the periodic/resident path (edge_mask=False):
+        # element e of a block sits at (row e % m, lane e // m); with
+        # r <= m the first r elements are lane 0 / rows < r, the last r
+        # lane vl-1 / rows >= m-r (cf. _ring_masks_np, property-tested
+        # against this closed form).
+        rows = lax.broadcasted_iota(jnp.int32, (m, vl), 0)
+        lanes = lax.broadcasted_iota(jnp.int32, (m, vl), 1)
+        first_mask = (lanes == 0) & (rows < r)
+        last_mask = (lanes == vl - 1) & (rows >= m - r)
 
     incoming = t_ref[0]                           # (m, vl)
     ws = [win_ref[i] for i in range(k)] + [incoming]
@@ -118,7 +152,15 @@ def _kernel_1d(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
             keep = keep | ((b == 0) & first_mask) | \
                 ((b == nb - 1) & last_mask)
         ws[i] = jnp.where(keep, vs, new)
-    o_ref[0] = ws[0]
+    if write_stop is None:
+        o_ref[0] = ws[0]
+    else:
+        # wrapped-periodic mode: past write_stop the out index is frozen on
+        # the last correct block — leave its buffer untouched so the final
+        # flush rewrites correct data (see stencil1d_sweep_periodic).
+        @pl.when(j < write_stop)
+        def _write():
+            o_ref[0] = ws[0]
     for i in range(k):
         win_ref[i] = ws[i + 1]
         vrl_ref[i] = new_vr[i]
@@ -151,12 +193,56 @@ def stencil1d_multistep(spec: StencilSpec, t: jax.Array, k: int,
     )(t)
 
 
+def sweep_halo_blocks(r: int, k: int, block: int) -> int:
+    """Blocks (or pipeline tiles) of the virtual halo: the smallest whole
+    number of ``block``-sized units covering the k·r-element corruption a
+    k-step sweep admits at a dirichlet edge."""
+    return -(-(k * r) // block)
+
+
+def stencil1d_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
+                             *, interpret: bool = True) -> jax.Array:
+    """One fully-periodic k-step sweep on the layout-RESIDENT (nb, m, vl)
+    array — no pad copy, no layout round-trip.
+
+    The grid runs over a virtual padded domain of ``nbp = nb + 2p`` blocks
+    (p halo blocks per side).  Reads wrap through the input index map
+    (``(j - p) mod nb``), so halo blocks come straight from the resident
+    array; writes land at ``(bp - p) mod nb`` where the p corrupted head
+    blocks are re-written correctly later in the same grid and the p
+    corrupted tail writes are suppressed (out index frozen on the last
+    correct block, kernel skips o_ref past ``write_stop``).  Bit-identical
+    to wrap-pad + ``stencil1d_multistep(edge_mask=False)`` + crop."""
+    nb, m, vl = t.shape
+    r = spec.r
+    assert r <= m and r <= vl
+    p = sweep_halo_blocks(r, k, vl * m)
+    nbp = nb + 2 * p
+    kern = functools.partial(_kernel_1d, spec=spec, nb=nbp, m=m, vl=vl, k=k,
+                             edge_mask=False, write_stop=nb + p + k)
+    return pl.pallas_call(
+        kern,
+        grid=(nbp + k,),
+        in_specs=[pl.BlockSpec(
+            (1, m, vl),
+            lambda j: ((jnp.minimum(j, nbp - 1) - p) % nb, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, m, vl),
+            lambda j: ((jnp.clip(j - k, 0, nb + p - 1) - p) % nb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, vl), t.dtype),
+        scratch_shapes=[pltpu.VMEM((k, m, vl), t.dtype),
+                        pltpu.VMEM((k, r, vl), t.dtype)],
+        interpret=interpret,
+    )(t)
+
+
 # ---------------------------------------------------------------------------
 # n-D (n = 2, 3): pipeline along axis 0; inner dims VMEM-resident.
 # ---------------------------------------------------------------------------
 
 def _kernel_nd(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
-               n0t: int, t0: int, k: int):
+               n0t: int, t0: int, k: int, edge_mask: bool = True,
+               write_stop: int | None = None):
     """t_ref block: (t0, *mid, nb, m, vl); pipeline along axis 0."""
     r = spec.r
     j = pl.program_id(0)
@@ -171,8 +257,13 @@ def _kernel_nd(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
     ndim_mid = incoming.ndim - 4                  # spatial dims between 0 & x
     ws = [win_ref[i] for i in range(k)] + [incoming]
     new_vr = [None] * k
-    row_idx = lax.broadcasted_iota(
-        jnp.int32, (t0,) + (1,) * (incoming.ndim - 1), 0)
+    if edge_mask:
+        # dirichlet ring comparisons, hoisted out of the k-unroll loop and
+        # skipped entirely on the periodic/resident path
+        row_idx = lax.broadcasted_iota(
+            jnp.int32, (t0,) + (1,) * (incoming.ndim - 1), 0)
+        top_ring = row_idx < r
+        bot_ring = row_idx >= t0 - r
     for i in range(k - 1, -1, -1):
         b = j - (k - i)
         tile = ws[i]
@@ -191,12 +282,18 @@ def _kernel_nd(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
             sl = lax.slice_in_dim(sl, r + ox, r + ox + m, axis=sl.ndim - 2)
             term = sl * jnp.asarray(c, tile.dtype)
             acc = term if acc is None else acc + term
-        # dirichlet ring along axis 0 on the global first/last tiles
-        ring = ((b == 0) & (row_idx < r)) | \
-               ((b == n0t - 1) & (row_idx >= t0 - r))
-        keep = ring | (b < 0) | (b >= n0t)
+        keep = (b < 0) | (b >= n0t)
+        if edge_mask:
+            # dirichlet ring along axis 0 on the global first/last tiles
+            keep = keep | ((b == 0) & top_ring) | \
+                ((b == n0t - 1) & bot_ring)
         ws[i] = jnp.where(keep, tile, acc)
-    o_ref[...] = ws[0]
+    if write_stop is None:
+        o_ref[...] = ws[0]
+    else:
+        @pl.when(j < write_stop)
+        def _write():
+            o_ref[...] = ws[0]
     for i in range(k):
         win_ref[i] = ws[i + 1]
         vrl_ref[i] = new_vr[i]
@@ -224,6 +321,44 @@ def stencil_nd_multistep(spec: StencilSpec, t: jax.Array, k: int, t0: int,
                                lambda j: (jnp.minimum(j, n0t - 1),) + zeros_tail)],
         out_specs=pl.BlockSpec(block,
                                lambda j: (jnp.maximum(j - k, 0),) + zeros_tail),
+        out_shape=jax.ShapeDtypeStruct(t.shape, t.dtype),
+        scratch_shapes=[pltpu.VMEM((k,) + block, t.dtype),
+                        pltpu.VMEM((k, r) + block[1:], t.dtype)],
+        interpret=interpret,
+    )(t)
+
+
+def stencil_nd_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
+                              t0: int, *, interpret: bool = True
+                              ) -> jax.Array:
+    """One fully-periodic k-step sweep on the layout-RESIDENT
+    (n0, *mid, nb, m, vl) array — the n-D analogue of
+    :func:`stencil1d_sweep_periodic`, wrapping the pipeline-tile axis
+    (axis 0) through the index maps instead of a wrap-pad copy.  Mid dims
+    and the unit-stride dim are periodic in-kernel already (rolls +
+    ``extend_vs`` lane carry)."""
+    n0 = t.shape[0]
+    r = spec.r
+    assert n0 % t0 == 0 and t0 >= r, (n0, t0, r)
+    assert r <= t.shape[-2]
+    n0t = n0 // t0
+    p = sweep_halo_blocks(r, k, t0)
+    n0tp = n0t + 2 * p
+    block = (t0,) + t.shape[1:]
+    nd = t.ndim
+    kern = functools.partial(_kernel_nd, spec=spec, n0t=n0tp, t0=t0, k=k,
+                             edge_mask=False, write_stop=n0t + p + k)
+    zeros_tail = (0,) * (nd - 1)
+    return pl.pallas_call(
+        kern,
+        grid=(n0tp + k,),
+        in_specs=[pl.BlockSpec(
+            block,
+            lambda j: ((jnp.minimum(j, n0tp - 1) - p) % n0t,) + zeros_tail)],
+        out_specs=pl.BlockSpec(
+            block,
+            lambda j: ((jnp.clip(j - k, 0, n0t + p - 1) - p) % n0t,)
+            + zeros_tail),
         out_shape=jax.ShapeDtypeStruct(t.shape, t.dtype),
         scratch_shapes=[pltpu.VMEM((k,) + block, t.dtype),
                         pltpu.VMEM((k, r) + block[1:], t.dtype)],

@@ -19,6 +19,10 @@ step a plan costs:
   memory        one read + one write of the grid per k_eff steps, where
                 k_eff is the unroll-and-jam factor k (§3.3) or the
                 tessellation height (§3.4) — the flops/byte × k claim.
+                Pallas plans add the periodic halo ring plus the layout
+                round-trip / pad-crop traffic of their sweep engine:
+                per-sweep for "roundtrip", once per run for "resident"
+                (:func:`pallas_extra_bytes_per_step`).
 
 Absolute peak numbers are the TPU-v5e constants from
 :mod:`repro.roofline.analysis`; only the *ranking* matters for pruning, so
@@ -35,6 +39,10 @@ from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 # DLT keeps per-step reorg near zero but gathers each vector from
 # N/vl-strided addresses — charge the memory term for defeated prefetch.
 _DLT_BW_PENALTY = 1.5
+
+# Amortization horizon for once-per-RUN costs (the resident engine's single
+# layout round-trip) when the plan is ranked without a concrete step count.
+RESIDENT_AMORT_STEPS = 16
 
 
 def reorg_ops_per_point(spec, scheme: str, vl: int, m: int | None) -> float:
@@ -69,16 +77,37 @@ def _sweeps_per_step(k_eff: int, steps: int | None, remainder: str) -> float:
     return (main / k_eff + tail) / steps
 
 
+def pallas_extra_bytes_per_step(pts: float, itemsize: int, sweep: str,
+                                sweeps_per_step: float,
+                                steps: int | None) -> float:
+    """Layout/pad traffic per grid step beyond the kernel sweep itself.
+
+    The transpose round-trip moves 2 full copies of the grid (in + out =
+    ``4·pts·itemsize`` bytes).  The legacy ``roundtrip`` engine pays it —
+    plus a wrap-pad copy and a crop copy of the same size — on EVERY
+    sweep; the ``resident`` engine pays the round-trip alone, once per
+    RUN, amortized over ``steps`` (or :data:`RESIDENT_AMORT_STEPS` when
+    ranking without a concrete step count)."""
+    roundtrip = 4.0 * pts * itemsize          # transpose in + transpose out
+    if sweep == "resident":
+        return roundtrip / float(steps if steps else RESIDENT_AMORT_STEPS)
+    # per sweep: pad copy + crop copy (another 2 full copies) + round-trip
+    return 2.0 * roundtrip * sweeps_per_step
+
+
 def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
                        plan, steps: int | None = None) -> float:
     """Roofline lower bound (seconds) for ONE step of ``plan``.
 
     plan: StencilPlan (duck-typed: scheme/k/tiling/height/vl/m/backend/
-    remainder).  ``steps`` amortizes the remainder policy into the memory
-    term (see :func:`_sweeps_per_step`).  Pallas plans keep the transpose
-    reorg cost for any k (the kernel stays layout-resident) and pay for
-    the wrap-pad halo ring (2·k·r extra rows of traffic per sweep along
-    the pipelined axis) that makes them periodic."""
+    remainder/sweep).  ``steps`` amortizes the remainder policy into the
+    memory term (see :func:`_sweeps_per_step`).  Pallas plans keep the
+    transpose reorg cost for any k (the kernel stays layout-resident
+    within a sweep) and pay for the periodic halo ring (2·k·r extra rows
+    of traffic per sweep along the pipelined axis) plus the
+    engine-dependent layout/pad traffic of
+    :func:`pallas_extra_bytes_per_step` — once per sweep for
+    ``sweep="roundtrip"``, once per run for ``sweep="resident"``."""
     pts = float(np.prod(list(shape)))
     backend = getattr(plan, "backend", "jnp")
     remainder = getattr(plan, "remainder", "fused")
@@ -95,11 +124,14 @@ def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
     arith = float(spec.flops_per_point)
     reorg = reorg_ops_per_point(spec, scheme, plan.vl, plan.m)
     t_compute = pts * (arith + reorg) / PEAK_FLOPS
-    t_memory = 2.0 * pts * itemsize * \
-        _sweeps_per_step(k_eff, steps, remainder) / HBM_BW
+    sweeps = _sweeps_per_step(k_eff, steps, remainder)
+    mem_bytes = 2.0 * pts * itemsize * sweeps
     if scheme == "dlt":
-        t_memory *= _DLT_BW_PENALTY
+        mem_bytes *= _DLT_BW_PENALTY
     if backend == "pallas":
         n0 = shape[0] if spec.ndim > 1 else shape[-1]
-        t_memory *= 1.0 + 2.0 * plan.k * spec.r / max(n0, 1)
-    return max(t_compute, t_memory)
+        mem_bytes *= 1.0 + 2.0 * plan.k * spec.r / max(n0, 1)
+        mem_bytes += pallas_extra_bytes_per_step(
+            pts, itemsize, getattr(plan, "sweep", "roundtrip"), sweeps,
+            steps)
+    return max(t_compute, mem_bytes / HBM_BW)

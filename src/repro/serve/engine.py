@@ -132,28 +132,118 @@ class StencilService:
     (:func:`repro.core.autotune.cached_plan`).  ``warm=True`` requests may
     tune on a cache miss (filling the cache for everyone else); the default
     cold path degrades to ``default_plan()`` so latency stays bounded.
+
+    :meth:`warm_async` tunes cold signatures OFF the request path on a
+    background worker thread and publishes the winner into the persistent
+    plan cache + the in-process memo — the serving path itself still never
+    measures and never blocks: requests arriving mid-tune are served with
+    whatever plan is already resolvable (cached or default) and pick up
+    the tuned plan on the first request after it lands.
     """
 
     MAX_SIGNATURES = 256      # LRU bound on memoized problems/plans
 
     def __init__(self, cache_path: str | None = None):
         import collections
+        import threading
         self.cache_path = cache_path
         self._problems: dict[tuple, Any] = collections.OrderedDict()
         self._plans: dict[tuple, Any] = {}      # (sig, steps) -> StencilPlan
+        self._lock = threading.Lock()   # guards _problems/_plans/_warming
+        self._warming: dict[tuple, Any] = {}    # (sig, steps) -> Future
+        self._executor = None                   # lazy single warm worker
+        self._closed = False
 
     def _problem(self, name: str, shape: tuple, dtype):
         from repro.core.api import StencilProblem
         key = (name, tuple(shape), jnp.dtype(dtype).name)
-        if key in self._problems:
-            self._problems.move_to_end(key)
-        else:
-            self._problems[key] = StencilProblem(name, shape, dtype)
-            while len(self._problems) > self.MAX_SIGNATURES:
-                old, _ = self._problems.popitem(last=False)
-                for pk in [pk for pk in self._plans if pk[0] == old]:
-                    del self._plans[pk]
-        return key, self._problems[key]
+        with self._lock:
+            if key in self._problems:
+                self._problems.move_to_end(key)
+            else:
+                self._problems[key] = StencilProblem(name, shape, dtype)
+                while len(self._problems) > self.MAX_SIGNATURES:
+                    old, _ = self._problems.popitem(last=False)
+                    for pk in [pk for pk in self._plans if pk[0] == old]:
+                        del self._plans[pk]
+            return key, self._problems[key]
+
+    def warm_async(self, name: str, shape: tuple, dtype=jnp.float32,
+                   steps: int | None = None, **tune_kw):
+        """Tune a (possibly cold) signature on a background worker thread.
+
+        Returns a ``concurrent.futures.Future`` resolving to the tuned
+        ``StencilPlan``.  The tuning run measures candidates off the
+        request path; the winner is persisted to the plan cache (visible
+        to every process sharing it) and published into this service's
+        plan memo, so the next ``sweep``/``plan_for`` for the signature
+        serves it without measuring.  Duplicate in-flight warms of the
+        same (signature, steps) coalesce onto one future; distinct warms
+        queue on ONE worker thread (serialized measurements, no timing
+        contention).  The worker is deliberately non-daemonic — tearing a
+        thread out of an active XLA compile aborts the process — so call
+        :meth:`close` (or use the service as a context manager) before a
+        prompt exit: it cancels every queued warm and only the one
+        in-flight tune, bounded by the measurement window, is awaited.
+        ``tune_kw`` is forwarded to :func:`repro.core.autotune.tune`
+        (tests pass a stub ``timer``)."""
+        import concurrent.futures
+        sig = (name, tuple(shape), jnp.dtype(dtype).name)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StencilService is closed")
+            fut = self._warming.get((sig, steps))
+            if fut is not None:
+                return fut
+            if self._executor is None:
+                self._executor = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="stencil-warm")
+            fut = self._executor.submit(self._warm_one, name, tuple(shape),
+                                        dtype, steps, tune_kw)
+            self._warming[(sig, steps)] = fut
+        # drop the in-flight marker once done (a re-warm after completion
+        # is a cheap cache hit inside tune()); fires immediately for
+        # already-settled/cancelled futures
+        fut.add_done_callback(
+            lambda f: self._warming.pop((sig, steps), None))
+        return fut
+
+    def close(self, wait: bool = True):
+        """Shut the warm worker down: queued warms are cancelled (their
+        futures resolve as cancelled); the in-flight tune — if any — is
+        awaited when ``wait=True`` (it finishes within its measurement
+        window and still publishes).  Serving (``sweep``/``plan_for``)
+        keeps working after close; only ``warm_async`` refuses.
+        Idempotent."""
+        with self._lock:
+            self._closed = True
+            ex, self._executor = self._executor, None
+        if ex is not None:
+            ex.shutdown(wait=wait, cancel_futures=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _warm_one(self, name, shape, dtype, steps, tune_kw):
+        from repro.core import autotune
+        sig, prob = self._problem(name, shape, dtype)
+        result = autotune.tune(prob, steps=steps,
+                               cache_path=self.cache_path, **tune_kw)
+        # publish for exact-hit lookups; plan_for's cache read would find
+        # it anyway (tune() saved it), this skips the file re-read.  Under
+        # the lock (plan_for/_problem mutate _plans concurrently), and only
+        # while the signature is still memoized — a warm finishing after
+        # its problem was LRU-evicted must not leave an orphan plan entry.
+        with self._lock:
+            if sig in self._problems:
+                self._plans[(sig, steps)] = result.plan
+                if steps is not None and \
+                        autotune.normalize_steps(steps) is None:
+                    self._plans[(sig, None)] = result.plan
+        return result.plan
 
     def plan_for(self, name: str, shape: tuple, dtype=jnp.float32,
                  steps: int | None = None, warm: bool = False):
@@ -179,7 +269,8 @@ class StencilService:
                 plan = autotune.best_plan(prob, steps=steps,
                                           cache_path=self.cache_path)
             if plan is not None:
-                self._plans[(key, steps)] = plan
+                with self._lock:
+                    self._plans[(key, steps)] = plan
             else:
                 plan = self._plans.get((key, None))
         if plan is None:
@@ -187,7 +278,8 @@ class StencilService:
             if plan is None and warm and steps is None:
                 plan = autotune.best_plan(prob, cache_path=self.cache_path)
             if plan is not None:
-                self._plans[(key, None)] = plan
+                with self._lock:
+                    self._plans[(key, None)] = plan
         return plan or prob.default_plan()
 
     def sweep(self, name: str, x, steps: int, warm: bool = False):

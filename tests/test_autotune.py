@@ -120,6 +120,53 @@ def test_pallas_legality_gate_rejects_bad_blocks():
                                               p.t0), p
 
 
+def test_pallas_pool_fans_out_along_sweep_axis():
+    """Every pallas (vl, m, t0, k) point exists in BOTH sweep engines, the
+    legality gate validates the engine name, and the roofline ranks the
+    resident twin ahead of its roundtrip sibling (it amortizes the layout
+    round-trip over the run)."""
+    import dataclasses
+
+    from repro.roofline.stencil import estimate_plan_time
+
+    for name, shape in [("1d3p", (128,)), ("2d5p", (32, 64))]:
+        spec = stencils.make(name)
+        cands = autotune.candidate_plans(spec, shape, backend="pallas",
+                                         steps=16)
+        assert {p.sweep for p in cands} == {"resident", "roundtrip"}
+        by_key = {(p.vl, p.m, p.t0, p.k, p.remainder, p.sweep)
+                  for p in cands}
+        for p in cands:
+            twin = ("roundtrip" if p.sweep == "resident" else "resident")
+            assert (p.vl, p.m, p.t0, p.k, p.remainder, twin) in by_key, p
+            if p.sweep == "resident":
+                rt = dataclasses.replace(p, sweep="roundtrip")
+                assert estimate_plan_time(spec, shape, 4, p, steps=16) < \
+                    estimate_plan_time(spec, shape, 4, rt, steps=16), p
+    assert not autotune.pallas_plan_legal(stencils.make("1d3p"), (128,),
+                                          8, 8, sweep="bogus")
+
+
+def test_resident_winner_round_trips_and_dispatches(cache_path):
+    """A resident-sweep winner survives the cache round-trip and runs
+    correctly through StencilProblem.run / plan='auto'."""
+    prob = StencilProblem("1d3p", (128,))
+
+    def resident_wins(fn, plan):
+        return 0.001 if (plan.backend, plan.sweep) == \
+            ("pallas", "resident") else 1.0
+
+    res = autotune.tune(prob, cache_path=cache_path, timer=resident_wins)
+    assert (res.plan.backend, res.plan.sweep) == ("pallas", "resident")
+    res2 = autotune.tune(prob, cache_path=cache_path, timer=resident_wins)
+    assert res2.cached and res2.plan.sweep == "resident"
+    x = prob.init(0)
+    got = prob.run(x, 5, res2.plan)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(prob.reference(x, 5)),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_interpret_budget_gate_off_tpu():
     """Off-TPU the auto pool skips pallas above the interpret-mode
     measurement budget (tuning a huge grid must not take minutes), but an
@@ -455,3 +502,109 @@ def test_stencil_service_dispatches_pallas_backend(cache_path, monkeypatch):
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(prob.reference(x, 4)),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# background warm tuning (StencilService.warm_async)
+# ---------------------------------------------------------------------------
+
+def test_warm_async_tunes_off_request_path(cache_path, monkeypatch):
+    """warm_async fills the plan cache from a worker thread; afterwards
+    the serving path gets the tuned plan WITHOUT ever measuring."""
+    import threading
+
+    from repro.serve.engine import StencilService
+
+    svc = StencilService(cache_path=cache_path)
+    main_thread = threading.current_thread()
+    tuned = StencilPlan(scheme="reorg", k=1)
+    measured_on = []
+
+    def stub_timer(fn, plan):
+        measured_on.append(threading.current_thread())
+        return 0.001 if plan == tuned else 1.0
+
+    # cold signature: the request path degrades to the default — never
+    # blocks on the in-flight warm
+    assert svc.plan_for("1d3p", (128,)) \
+        == StencilProblem("1d3p", (128,)).default_plan()
+
+    fut = svc.warm_async("1d3p", (128,), timer=stub_timer)
+    assert fut.result(timeout=60) == tuned
+    assert measured_on and all(t is not main_thread for t in measured_on)
+
+    # serving path now sees the tuned plan, with measuring forbidden
+    monkeypatch.setattr(autotune, "tune", lambda *a, **kw: (_ for _ in ())
+                        .throw(AssertionError("serving must not measure")))
+    assert svc.plan_for("1d3p", (128,)) == tuned
+    x = StencilProblem("1d3p", (128,)).init(0)
+    got = svc.sweep("1d3p", x, 4)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(StencilProblem("1d3p", (128,)).reference(x, 4)),
+        rtol=2e-5, atol=2e-5)
+    # ...and the cache file itself was populated (visible cross-process)
+    assert autotune.cached_plan(StencilProblem("1d3p", (128,)),
+                                cache_path=cache_path) == tuned
+
+
+def test_warm_async_coalesces_inflight_duplicates(cache_path):
+    import threading
+
+    from repro.serve.engine import StencilService
+
+    svc = StencilService(cache_path=cache_path)
+    release = threading.Event()
+    calls = []
+
+    def slow_timer(fn, plan):
+        calls.append(plan)
+        release.wait(timeout=30)
+        return 1.0
+
+    f1 = svc.warm_async("1d3p", (128,), steps=5, timer=slow_timer)
+    f2 = svc.warm_async("1d3p", (128,), steps=5, timer=slow_timer)
+    assert f1 is f2                       # same in-flight future
+    release.set()
+    f1.result(timeout=60)
+    n = len(calls)
+    # a re-warm after completion is a cheap cache hit (no new measuring)
+    f3 = svc.warm_async("1d3p", (128,), steps=5, timer=slow_timer)
+    assert f3.result(timeout=60) is not None
+    assert len(calls) == n
+
+
+def test_warm_async_close_cancels_queued_warms(cache_path):
+    """close() bounds shutdown: queued warms are cancelled, the in-flight
+    tune completes (and still publishes), warm_async then refuses; the
+    serving path keeps working after close."""
+    import threading
+
+    from repro.serve.engine import StencilService
+
+    svc = StencilService(cache_path=cache_path)
+    started = threading.Event()
+    release = threading.Event()
+
+    def slow_timer(fn, plan):
+        started.set()
+        release.wait(timeout=30)
+        return 1.0
+
+    inflight = svc.warm_async("1d3p", (128,), timer=slow_timer)
+    assert started.wait(timeout=30)
+    queued = svc.warm_async("1d3p", (256,), timer=slow_timer)
+    svc.close(wait=False)                 # cancel queued, don't block...
+    assert queued.cancelled()
+    release.set()                         # ...then let the in-flight land
+    assert inflight.result(timeout=60) is not None
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.warm_async("1d3p", (128,))
+    # serving still answers (cache filled by the in-flight warm)
+    x = StencilProblem("1d3p", (128,)).init(0)
+    got = svc.sweep("1d3p", x, 4)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(StencilProblem("1d3p", (128,)).reference(x, 4)),
+        rtol=2e-5, atol=2e-5)
+    svc.close()                           # idempotent

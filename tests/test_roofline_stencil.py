@@ -1,0 +1,96 @@
+"""Pin the stencil roofline byte model — in particular the sweep-engine
+accounting: the legacy roundtrip path pays the layout round-trip + pad/crop
+on every sweep, the resident engine pays one round-trip per RUN."""
+import dataclasses
+
+import pytest
+
+from repro.core import stencils
+from repro.core.api import StencilPlan
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+from repro.roofline import stencil as rs
+
+
+def _pallas_plan(sweep, k=2, remainder="fused"):
+    return StencilPlan(scheme="transpose", k=k, vl=8, m=8, backend="pallas",
+                       sweep=sweep, remainder=remainder)
+
+
+def _expected(spec, shape, itemsize, plan, steps):
+    """The documented byte model, written out longhand."""
+    pts = 1.0
+    for n in shape:
+        pts *= n
+    sweeps = rs._sweeps_per_step(plan.k, steps, plan.remainder)
+    n0 = shape[0] if spec.ndim > 1 else shape[-1]
+    ring = 1.0 + 2.0 * plan.k * spec.r / n0
+    kernel_bytes = 2.0 * pts * itemsize * sweeps * ring
+    roundtrip = 4.0 * pts * itemsize          # transpose in + out
+    if plan.sweep == "resident":
+        extra = roundtrip / (steps if steps else rs.RESIDENT_AMORT_STEPS)
+    else:
+        extra = 2.0 * roundtrip * sweeps      # + pad copy + crop, per sweep
+    reorg = 4.0 * spec.r / plan.m
+    t_compute = pts * (spec.flops_per_point + reorg) / PEAK_FLOPS
+    return max(t_compute, (kernel_bytes + extra) / HBM_BW)
+
+
+@pytest.mark.parametrize("sweep", ["resident", "roundtrip"])
+@pytest.mark.parametrize("steps", [None, 16, 7])
+@pytest.mark.parametrize("name,shape", [("1d3p", (4096,)),
+                                        ("2d5p", (64, 256))])
+def test_pallas_byte_model_pinned(name, shape, steps, sweep):
+    spec = stencils.make(name)
+    plan = _pallas_plan(sweep, remainder="native")
+    got = rs.estimate_plan_time(spec, shape, 4, plan, steps=steps)
+    assert got == pytest.approx(_expected(spec, shape, 4, plan, steps))
+
+
+def test_resident_beats_roundtrip_and_gap_grows_with_steps():
+    """Ranking: resident < roundtrip at any step count, and the resident
+    advantage grows as the single round-trip amortizes over more steps."""
+    spec = stencils.make("1d3p")
+    shape = (4096,)
+    ratios = []
+    for steps in (4, 16, 64):
+        res = rs.estimate_plan_time(spec, shape, 4,
+                                    _pallas_plan("resident"), steps=steps)
+        rt = rs.estimate_plan_time(spec, shape, 4,
+                                   _pallas_plan("roundtrip"), steps=steps)
+        assert res < rt, steps
+        ratios.append(rt / res)
+    assert ratios == sorted(ratios), ratios
+
+
+def test_resident_per_run_cost_scales_inverse_with_steps():
+    """The once-per-run term: doubling steps halves the amortized layout
+    bytes (memory-bound regime), while the roundtrip estimate is
+    steps-invariant for divisible step counts."""
+    spec = stencils.make("1d3p")
+    shape = (1 << 20,)                        # firmly memory-bound
+    plan = _pallas_plan("resident")
+    t16 = rs.estimate_plan_time(spec, shape, 4, plan, steps=16)
+    t32 = rs.estimate_plan_time(spec, shape, 4, plan, steps=32)
+    base = rs.estimate_plan_time(spec, shape, 4,
+                                 dataclasses.replace(plan, sweep="roundtrip"),
+                                 steps=16)
+    pts = float(shape[0])
+    drop = (t16 - t32) * HBM_BW               # bytes saved per step
+    assert drop == pytest.approx(4.0 * pts * 4 / 32, rel=1e-6)
+    assert base == pytest.approx(
+        rs.estimate_plan_time(spec, shape, 4,
+                              dataclasses.replace(plan, sweep="roundtrip"),
+                              steps=32))
+
+
+def test_jnp_plans_unaffected_by_sweep_accounting():
+    """The jnp backend never pays pallas layout traffic — its estimates
+    must be identical to the pre-engine model."""
+    spec = stencils.make("2d5p")
+    plan = StencilPlan(scheme="transpose", k=2, vl=8, m=8)
+    t = rs.estimate_plan_time(spec, (64, 256), 4, plan, steps=16)
+    pts = 64.0 * 256.0
+    t_mem = 2.0 * pts * 4 * (1.0 / 2) / HBM_BW
+    reorg = 4.0 * spec.r / 8
+    t_cmp = pts * (spec.flops_per_point + reorg) / PEAK_FLOPS
+    assert t == pytest.approx(max(t_mem, t_cmp))

@@ -16,7 +16,11 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
     ``ops.stencil_run_periodic`` (pad/transpose/crop per sweep) at growing
     step counts and writes the JSON artifact CI uploads
     (``benchmarks/results/bench_kernels_smoke.json``) — the perf
-    trajectory record for the layout-resident engine.
+    trajectory record for the layout-resident engine.  On a multi-device
+    host (CI forces 8 via ``--xla_force_host_platform_device_count``) the
+    artifact gains a ``distributed`` section timing the SHARD-resident
+    engine (one transpose per run, halos exchanged in layout) against the
+    per-exchange round-trip engine on the same mesh.
 """
 from __future__ import annotations
 
@@ -88,6 +92,36 @@ SMOKE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "results", "bench_kernels_smoke.json")
 
 
+def _smoke_distributed(steps_list) -> dict:
+    """Shard-resident vs per-exchange-roundtrip distributed engines on the
+    default mesh; skipped (with a reason) on single-device hosts."""
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        return {"skipped": f"needs >=2 devices, have {n_dev}",
+                "n_devices": n_dev, "results": []}
+    from repro.distributed import multistep as dms
+    spec = stencils.make("1d3p")
+    shape = (n_dev * 4 * 4 * 8,)       # 8 layout blocks per shard
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                    jnp.float32)
+    kw = dict(k=2, engine="pallas", shards=(n_dev,), vl=4, m=4)
+    rows = []
+    for steps in steps_list:
+        rt = bench(lambda: dms.distributed_run(
+            spec, x, steps, sweep="roundtrip", **kw),
+            warmup=1, iters=3, min_time_s=0.05)
+        res = bench(lambda: dms.distributed_run(
+            spec, x, steps, sweep="resident", **kw),
+            warmup=1, iters=3, min_time_s=0.05)
+        row = {"name": f"dist/1d3p/{shape[0]}x{n_dev}dev/steps{steps}",
+               "steps": steps, "roundtrip_us": rt * 1e6,
+               "resident_us": res * 1e6, "speedup": rt / res}
+        print(f"{row['name']}: shard_roundtrip={rt * 1e6:.0f}us "
+              f"shard_resident={res * 1e6:.0f}us speedup={rt / res:.2f}x")
+        rows.append(row)
+    return {"n_devices": n_dev, "shards": [n_dev], "results": rows}
+
+
 def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
     """Micro-benchmark the layout-resident sweep engine against the
     per-sweep pad/transpose/crop path, at CPU-interpret-friendly scale,
@@ -121,7 +155,8 @@ def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
                # both timed paths pin interpret=True above — comparable
                # CPU-interpret-scale numbers on every host, incl. TPU
                "mode": "interpret",
-               "results": results}
+               "results": results,
+               "distributed": _smoke_distributed(steps_list)}
     out_path = out_path or SMOKE_PATH
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:

@@ -12,10 +12,16 @@ Plans compose the paper's three pieces:
   backend     — jnp | pallas (kernels/) | distributed (shard_map halo)
   remainder   — how steps % k leftovers run: "fused" (single steps on the
                 same backend) | "native" (one k=remainder block)
-  sweep       — Pallas sweep engine: "resident" (one program for the whole
-                run, transpose-layout held across every sweep, zero
-                wrap-pad copies) | "roundtrip" (legacy per-sweep
-                pad/transpose/crop)
+  sweep       — sweep engine (pallas + distributed-pallas): "resident"
+                (one program for the whole run, transpose-layout held
+                across every sweep/exchange, zero wrap-pad copies) |
+                "roundtrip" (legacy per-sweep pad/transpose/crop)
+  decomp      — distributed plans: per-spatial-axis shard counts, e.g.
+                (8,) or (4, 2); the mesh decomposition axis the unified
+                autotuner searches jointly with k and the engine.  On the
+                distributed backend ``scheme`` picks the local engine:
+                "transpose" → the shard-resident Pallas kernels, anything
+                else → fused jnp steps on the halo-extended shard.
 """
 from __future__ import annotations
 
@@ -26,6 +32,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import stencils, vectorize, unroll_jam, tessellate
+
+
+def sweep_schedule(k: int, steps: int | None,
+                   remainder: str = "fused"
+                   ) -> tuple[list[tuple[int, int]], int]:
+    """The (kk, n_sweeps) blocks a ``steps``-long k-blocked run executes:
+    main k-blocks, then the remainder policy ("native": one k=rem sweep;
+    "fused": rem single-step sweeps).  ``steps=None`` (ranking without a
+    step count) yields one canonical k-block.  Returns (chunks, total
+    steps to amortize over).
+
+    Single source of truth for the sweep decomposition — shared by the
+    distributed runtime (``distributed/multistep.make_run`` builds its
+    program from these chunks) and the roofline's per-chunk accounting
+    (``roofline/stencil._distributed_terms``), so the model can never
+    silently charge a schedule the runtime stopped executing.
+    ``StencilProblem._chunked`` below realizes the same decomposition in
+    aggregated (n_steps, k) form for the single-device backends."""
+    k = max(k, 1)
+    if steps is None:
+        return [(k, 1)], k
+    n_main, rem = divmod(steps, k)
+    chunks = [(k, n_main)] if n_main else []
+    if rem:
+        chunks.append((rem, 1) if remainder == "native" else (1, rem))
+    return chunks, steps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +73,7 @@ class StencilPlan:
     t0: int | None = None          # pallas n-D pipeline tile (rows/grid step)
     remainder: str = "fused"       # fused | native — steps % k policy
     sweep: str = "resident"        # resident | roundtrip — pallas engine
+    decomp: tuple[int, ...] | None = None   # distributed: shards per axis
 
 
 class StencilProblem:
@@ -116,10 +149,15 @@ class StencilProblem:
                 remainder=plan.remainder)
         if plan.backend == "distributed":
             from repro.distributed import multistep as dms
-            return self._chunked(
-                x, steps, plan.k,
-                lambda v, n, k: dms.distributed_run(self.spec, v, n, k=k),
-                remainder=plan.remainder)
+            # scheme picks the local engine; the remainder policy is fused
+            # into the single shard_map program (no _chunked round-trips —
+            # a shard-resident plan transposes exactly once per run).
+            engine = "pallas" if plan.scheme == "transpose" else "jnp"
+            vl = plan.vl if plan.m is not None else None
+            return dms.distributed_run(
+                self.spec, x, steps, k=plan.k, engine=engine,
+                shards=plan.decomp, sweep=plan.sweep,
+                remainder=plan.remainder, vl=vl, m=plan.m, t0=plan.t0)
         if plan.tiling == "tessellate":
             h = plan.height or plan.k
             tile = plan.tile or self._default_tile(h)

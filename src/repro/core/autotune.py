@@ -7,32 +7,43 @@ dtype, backend).  This module turns that menu into a measured search
 over **every execution backend at once**:
 
   1. :func:`candidate_plans` enumerates every *legal* ``StencilPlan`` for
-     the problem.  ``backend="auto"`` (the default) pools the jnp schemes
-     AND the Pallas transpose-layout kernels in one candidate list; each
-     backend has explicit legality gates (:func:`pallas_plan_legal`:
+     the problem.  ``backend="auto"`` (the default) pools the jnp
+     schemes, the Pallas transpose-layout kernels AND — on a ≥2-device
+     host — the distributed shard_map backend in one candidate list;
+     each backend has explicit legality gates (:func:`pallas_plan_legal`:
      block-shape divisibility, halo-fits-block, pipeline-tile
-     divisibility, sweep-engine validity) instead of ad-hoc per-branch
-     filtering.  Pallas candidates fan out along a ``sweep`` axis —
-     ``resident`` (the layout-resident engine: one program per run, no
-     per-sweep pad/transpose round-trips) vs ``roundtrip`` (legacy
-     per-sweep wrap-pad/crop) — and the roofline ranks resident ahead
-     because it amortizes the layout traffic over the run.  Off-TPU the
+     divisibility, sweep-engine validity; :func:`distributed_plan_legal`:
+     shard divisibility, halo-fits-shard, ≥2 devices, axis-0-only
+     decomposition for the shard-resident Pallas engine) instead of
+     ad-hoc per-branch filtering.  Pallas candidates fan out along a
+     ``sweep`` axis — ``resident`` (the layout-resident engine: one
+     program per run, no per-sweep pad/transpose round-trips) vs
+     ``roundtrip`` (legacy per-sweep wrap-pad/crop) — and the roofline
+     ranks resident ahead because it amortizes the layout traffic over
+     the run.  Distributed candidates fan out over (mesh decomposition ×
+     k × local engine × sweep): the ``decomp`` plan axis carries the
+     per-spatial-axis shard counts, so the mesh mapping and the
+     time-block depth are chosen *jointly* by measurement.  Off-TPU the
      auto pool caps pallas enumeration at
      :data:`INTERPRET_MAX_POINTS` grid points (interpret-mode
-     measurement latency budget; explicit ``backend="pallas"``
-     bypasses it).
+     measurement latency budget; explicit ``backend="pallas"`` /
+     ``backend="distributed"`` bypasses it).
   2. the analytic roofline in :mod:`repro.roofline.stencil` ranks them
-     (with a CPU interpret-mode penalty for Pallas, see
-     :data:`INTERPRET_PENALTY`) and the top ``max_measure`` survive — the
-     pool is *backend-stratified*: at least one candidate of every
-     backend present in the pool is always measured, so the Pallas path
-     is never silently skipped.
+     (with a CPU interpret-mode penalty for Pallas kernels, see
+     :data:`INTERPRET_PENALTY`), using per-device-kind constants fitted
+     from earlier measured runs (:mod:`repro.roofline.calibrate`,
+     persisted beside the plan cache — pruning sharpens as runs
+     accumulate), and the top ``max_measure`` survive — the pool is
+     *backend-stratified*: at least one candidate of every backend
+     present in the pool is always measured, so no backend is ever
+     silently skipped.
   3. survivors are timed with ``problem.run`` via
-     :func:`repro.core.timing.bench` and the fastest wins;
+     :func:`repro.core.timing.bench` and the fastest wins; every timed
+     sample also feeds the roofline calibrator.
   4. the winner is written to a persistent JSON plan cache keyed by
-     problem signature + device kind + step count + code fingerprint, so
-     every later run — including the serving path, which never measures —
-     reuses it.
+     problem signature + device signature (kind × count) + step count +
+     code fingerprint, so every later run — including the serving path,
+     which never measures — reuses it.
 
 Per-``steps`` planning
 ----------------------
@@ -74,11 +85,11 @@ Plan-cache file format (JSON, ``REPRO_PLAN_CACHE`` env var or
 
     {"version": 2,
      "entries": {
-       "2d5p|512x512|float32|auto|cpu|s32|3f2a9c1d04be": {
+       "2d5p|512x512|float32|auto|cpux8|s32|3f2a9c1d04be": {
          "plan": {"scheme": "transpose", "k": 2, "tiling": "none",
                   "tile": null, "height": null, "vl": 8, "m": 8,
                   "backend": "jnp", "t0": null, "remainder": "fused",
-                  "sweep": "resident"},
+                  "sweep": "resident", "decomp": null},
          "seconds_per_step": 1.2e-4,
          "fingerprint": "3f2a9c1d04be",
          "n_candidates": 23, "n_measured": 8,
@@ -108,7 +119,8 @@ import numpy as np
 from repro.core import stencils
 from repro.core.api import StencilPlan
 from repro.core.timing import bench
-from repro.roofline.stencil import estimate_plan_time
+from repro.roofline import calibrate
+from repro.roofline.stencil import estimate_plan_time, plan_terms
 
 logger = logging.getLogger("repro.autotune")
 
@@ -147,8 +159,19 @@ def default_cache_path() -> str:
                         "plan_cache.json")
 
 
-def device_kind() -> str:
-    return jax.devices()[0].device_kind.lower().replace(" ", "_")
+# shared with roofline.calibrate so the plan-cache device component and
+# the calibration-file device keys can never diverge per chip kind
+device_kind = calibrate.device_kind
+
+
+def device_signature() -> str:
+    """Device component of the plan key: kind × visible device count.
+
+    The count matters now that the pool holds distributed candidates — a
+    plan tuned on an 8-device host (whose winner may carry a ``decomp``
+    needing all 8) must not be served on a 1-device host of the same
+    chip kind."""
+    return f"{device_kind()}x{jax.device_count()}"
 
 
 # ---------------------------------------------------------------------------
@@ -173,12 +196,15 @@ def code_fingerprint() -> str:
     monkeypatched scheme changes the hash), and the module sources of the
     execution layers a plan can dispatch to (``core/vectorize``,
     ``core/unroll_jam``, ``core/tessellate``, ``core/layouts``,
-    ``core/api``, ``kernels/stencil_kernels``, ``kernels/ops``).
+    ``core/api``, ``kernels/stencil_kernels``, ``kernels/ops``,
+    ``distributed/halo``, ``distributed/multistep``).
 
     Memoized per registry *identity* (object ids), so the common case is a
     dict lookup; replacing a registry entry recomputes.
     """
     from repro.core import api, layouts, tessellate, unroll_jam, vectorize
+    from repro.distributed import halo as dhalo
+    from repro.distributed import multistep as dmultistep
     from repro.kernels import ops as kops
     from repro.kernels import stencil_kernels
 
@@ -203,7 +229,7 @@ def code_fingerprint() -> str:
         h.update(name.encode())
         h.update(_source_of(vectorize.SCHEMES[name]).encode())
     for mod in (vectorize, unroll_jam, tessellate, layouts, api,
-                stencil_kernels, kops):
+                stencil_kernels, kops, dhalo, dmultistep):
         h.update(_source_of(mod).encode())
     fp = h.hexdigest()[:12]
     _fp_memo[memo_key] = fp
@@ -222,13 +248,16 @@ def normalize_steps(steps: int | None) -> int | None:
 
 def plan_key(spec_name: str, shape: Sequence[int], dtype, backend: str,
              device: str | None = None, steps: int | None = None) -> str:
-    """Cache key: signature | device | step count | code fingerprint.
+    """Cache key: signature | device signature | step count | fingerprint.
 
-    ``steps=None`` produces the generic (any-step-count) key ``s*``; the
-    fingerprint suffix makes every key stale the moment the scheme
-    registry or kernel code changes (see :func:`code_fingerprint`).
+    The device component is kind × device count (``cpux8``) — distributed
+    winners carry a mesh decomposition, so plans tuned at one device
+    count never leak to another.  ``steps=None`` produces the generic
+    (any-step-count) key ``s*``; the fingerprint suffix makes every key
+    stale the moment the scheme registry or kernel code changes (see
+    :func:`code_fingerprint`).
     """
-    device = device_kind() if device is None else device
+    device = device_signature() if device is None else device
     return "|".join([spec_name, "x".join(str(n) for n in shape),
                      jnp.dtype(dtype).name, backend, device,
                      f"s{'*' if steps is None else steps}",
@@ -238,6 +267,7 @@ def plan_key(spec_name: str, shape: Sequence[int], dtype, backend: str,
 def plan_to_dict(plan: StencilPlan) -> dict:
     d = dataclasses.asdict(plan)
     d["tile"] = list(plan.tile) if plan.tile is not None else None
+    d["decomp"] = list(plan.decomp) if plan.decomp is not None else None
     return d
 
 
@@ -245,6 +275,8 @@ def plan_from_dict(d: dict) -> StencilPlan:
     d = dict(d)
     if d.get("tile") is not None:
         d["tile"] = tuple(d["tile"])
+    if d.get("decomp") is not None:
+        d["decomp"] = tuple(d["decomp"])
     return StencilPlan(**d)
 
 
@@ -450,6 +482,131 @@ def _with_remainder(plan: StencilPlan, steps: int | None, block: int,
     return out
 
 
+def distributed_plan_legal(spec: stencils.StencilSpec,
+                           shape: Sequence[int], decomp: Sequence[int],
+                           k: int, engine: str = "jnp",
+                           sweep: str = "resident", vl: int = 8,
+                           m: int = 8, t0: int | None = None,
+                           n_devices: int | None = None) -> bool:
+    """Backend legality gate for distributed (shard_map halo) plans.
+
+    * device availability: ``prod(decomp) == n_devices >= 2`` — the
+      decomposition uses every visible device (partial meshes fragment
+      the measurement pool without a matching serving story);
+    * shard divisibility: every decomposed extent splits evenly;
+    * halo-fits-shard: the k·r ghost ring is sliced from the *neighbor's*
+      local block, so ``k·r <= local extent`` along every decomposed
+      axis;
+    * ``engine="pallas"`` additionally requires an axis-0-only
+      decomposition (mid/minor axes stay shard-local so the kernels'
+      periodic rolls and lane carries remain globally correct), a local
+      minor extent tiling into (vl, m) blocks with the halo inside one
+      block row, and — n-D — a pipeline tile ``t0`` dividing the local
+      leading extent with the whole-tile halo inside the shard.  The
+      ``sweep`` axis (resident | roundtrip) is validated here and
+      interchangeable wherever the engine is legal (both exchange the
+      same whole-block ghost rings).
+    """
+    if n_devices is None:
+        n_devices = jax.device_count()
+    decomp = tuple(int(s) for s in decomp)
+    if len(decomp) != spec.ndim or any(s < 1 for s in decomp):
+        return False
+    ndev = int(np.prod(decomp))
+    if ndev < 2 or ndev != n_devices:
+        return False
+    if any(n % s for n, s in zip(shape, decomp)):
+        return False
+    r = spec.r
+    local = [n // s for n, s in zip(shape, decomp)]
+    if any(s > 1 and k * r > nl for nl, s in zip(local, decomp)):
+        return False
+    if engine == "jnp":
+        return True
+    if engine != "pallas" or sweep not in ("resident", "roundtrip"):
+        return False
+    if decomp[0] < 2 or any(s > 1 for s in decomp[1:]):
+        return False
+    n_minor = local[-1]
+    if vl < r or m < r or n_minor % (vl * m):
+        return False
+    if spec.ndim == 1:
+        blk = vl * m
+        if -(-(k * r) // blk) > local[0] // blk:   # halo blocks fit shard
+            return False
+    else:
+        if t0 is None or t0 < r or local[0] % t0:
+            return False
+        if -(-(k * r) // t0) * t0 > local[0]:      # halo tiles fit shard
+            return False
+    return True
+
+
+def _decomps_for(ndim: int, n_devices: int) -> list[tuple[int, ...]]:
+    """Candidate mesh decompositions: every factorization of the device
+    count over the first two spatial axes (1-D: the single axis)."""
+    if n_devices < 2:
+        return []
+    if ndim == 1:
+        return [(n_devices,)]
+    out = []
+    for a in range(1, n_devices + 1):
+        if n_devices % a:
+            continue
+        out.append((a, n_devices // a) + (1,) * (ndim - 2))
+    return out
+
+
+def _distributed_candidates(spec: stencils.StencilSpec,
+                            shape: tuple[int, ...], steps: int | None,
+                            n_devices: int | None = None,
+                            budget_gate: bool = False) -> list[StencilPlan]:
+    """The (mesh decomposition × k × engine × sweep) distributed axis of
+    the unified pool.  Local engines: "jnp" (any decomposition) and the
+    shard-resident/roundtrip Pallas pair (axis-0 decompositions)."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    if n_devices < 2:
+        return []
+    shape = tuple(shape)
+    pallas_ok = not (budget_gate and jax.default_backend() != "tpu"
+                     and int(np.prod(shape)) > INTERPRET_MAX_POINTS)
+    cands: list[StencilPlan] = []
+    for decomp in _decomps_for(spec.ndim, n_devices):
+        for k in _KS:
+            if distributed_plan_legal(spec, shape, decomp, k, "jnp",
+                                      n_devices=n_devices):
+                cands += _with_remainder(
+                    StencilPlan(scheme="fused", k=k, backend="distributed",
+                                decomp=decomp), steps, k)
+            if not pallas_ok:
+                continue
+            # pallas engines need an axis-0-only decomposition — skip the
+            # (vl, m) × t0 × sweep fan-out for meshes the gate rejects
+            if decomp[0] < 2 or any(s > 1 for s in decomp[1:]):
+                continue
+            n_minor = shape[-1] // decomp[-1]
+            if spec.ndim == 1:
+                t0s: list[int | None] = [None]
+            else:
+                nl0 = shape[0] // decomp[0]
+                t0s = [t for t in (8, 4, 2)
+                       if t <= nl0 and nl0 % t == 0 and t >= spec.r][:1]
+            for vl, m in _pallas_pairs(n_minor, spec.r)[:2]:
+                for t0 in t0s:
+                    for swp in ("resident", "roundtrip"):
+                        if not distributed_plan_legal(
+                                spec, shape, decomp, k, "pallas", swp,
+                                vl, m, t0, n_devices):
+                            continue
+                        cands += _with_remainder(
+                            StencilPlan(scheme="transpose", k=k, vl=vl,
+                                        m=m, t0=t0, backend="distributed",
+                                        decomp=decomp, sweep=swp),
+                            steps, k)
+    return cands
+
+
 def _pallas_candidates(spec: stencils.StencilSpec, shape: tuple[int, ...],
                        steps: int | None,
                        budget_gate: bool = False) -> list[StencilPlan]:
@@ -477,25 +634,36 @@ def _pallas_candidates(spec: stencils.StencilSpec, shape: tuple[int, ...],
 
 def candidate_plans(spec: stencils.StencilSpec, shape: Sequence[int],
                     dtype=jnp.float32, backend: str = "auto",
-                    steps: int | None = None) -> list[StencilPlan]:
+                    steps: int | None = None,
+                    n_devices: int | None = None) -> list[StencilPlan]:
     """Every legal StencilPlan for (spec, shape, dtype, backend).
 
-    ``backend="auto"`` pools the jnp and Pallas candidates into one list
-    (the unified cross-backend search).  When ``steps`` is given, k>1
-    candidates whose block size does not divide it fan out along the
-    remainder-policy axis (see :func:`_with_remainder`); without
-    ``steps`` the canonical variants cover any step count via the
-    ``fused`` fallback in ``StencilProblem.run``."""
+    ``backend="auto"`` pools the jnp, Pallas and — on a ≥2-device host —
+    distributed candidates into one list (the unified cross-backend
+    search; ``n_devices`` overrides the visible device count, mostly for
+    tests).  When ``steps`` is given, k>1 candidates whose block size
+    does not divide it fan out along the remainder-policy axis (see
+    :func:`_with_remainder`); without ``steps`` the canonical variants
+    cover any step count via the ``fused`` fallback in
+    ``StencilProblem.run``."""
     shape = tuple(shape)
     n = shape[-1]
 
     if backend == "auto":
         return (candidate_plans(spec, shape, dtype, "jnp", steps)
-                + _pallas_candidates(spec, shape, steps, budget_gate=True))
+                + _pallas_candidates(spec, shape, steps, budget_gate=True)
+                + _distributed_candidates(spec, shape, steps,
+                                          n_devices=n_devices,
+                                          budget_gate=True))
     if backend == "pallas":
         return _pallas_candidates(spec, shape, steps)
     if backend == "distributed":
-        cands = []
+        cands = _distributed_candidates(spec, shape, steps,
+                                        n_devices=n_devices)
+        if cands:
+            return cands
+        # single-device fallback (explicit request only): the legacy
+        # no-decomp plans, run on a 1-device mesh (ring wraps locally)
         for k in _KS:
             cands += _with_remainder(
                 StencilPlan(scheme="fused", k=k, backend="distributed"),
@@ -549,9 +717,15 @@ def _default_timer(fn: Callable[[], jax.Array], plan: StencilPlan) -> float:
     return bench(fn, warmup=1, iters=2, min_time_s=0.05)
 
 
-def _rank_time(spec, shape, itemsize, plan, steps) -> float:
-    t = estimate_plan_time(spec, shape, itemsize, plan, steps=steps)
-    if plan.backend == "pallas" and jax.default_backend() != "tpu":
+def _uses_pallas_kernels(plan: StencilPlan) -> bool:
+    return plan.backend == "pallas" or (plan.backend == "distributed"
+                                        and plan.scheme == "transpose")
+
+
+def _rank_time(spec, shape, itemsize, plan, steps, constants=None) -> float:
+    t = estimate_plan_time(spec, shape, itemsize, plan, steps=steps,
+                           constants=constants)
+    if _uses_pallas_kernels(plan) and jax.default_backend() != "tpu":
         t *= INTERPRET_PENALTY
     return t
 
@@ -580,8 +754,8 @@ def _stratify(survivors: list[StencilPlan], ranked: list[StencilPlan]):
 
 def tune(problem, backend: str = "auto", steps: int | None = None,
          cache_path: str | None = None, timer=None, max_measure: int = 8,
-         measure_steps: int | None = None, force: bool = False
-         ) -> TuneResult:
+         measure_steps: int | None = None, force: bool = False,
+         calibrate_samples: bool | None = None) -> TuneResult:
     """Resolve the best plan for ``problem`` (a StencilProblem).
 
     ``backend="auto"`` searches the jnp and Pallas pools together (the
@@ -597,8 +771,16 @@ def tune(problem, backend: str = "auto", steps: int | None = None,
     (seconds per ``measure_steps`` steps), persist the winner under a
     key carrying the code fingerprint (stale-proof, see
     :func:`plan_key`).
+
+    ``calibrate_samples`` controls whether the measured samples feed the
+    persistent roofline calibration (:mod:`repro.roofline.calibrate`).
+    Default: only when the REAL wall-clock timer runs — an injected
+    ``timer`` (stubs, simulators) would poison the monotone-ratchet
+    constants with fake throughputs that can never be un-learned.
     """
     spec = problem.spec
+    if calibrate_samples is None:
+        calibrate_samples = timer is None
     steps = normalize_steps(steps)
     key = plan_key(spec.name, problem.shape, problem.dtype, backend,
                    steps=steps)
@@ -619,8 +801,12 @@ def tune(problem, backend: str = "auto", steps: int | None = None,
     if not cands:
         raise ValueError(f"no legal plans for {key}")
     itemsize = jnp.dtype(problem.dtype).itemsize
+    # ranking constants: per-device-kind peaks fitted from earlier
+    # measured runs (static TPU-v5e numbers until samples exist)
+    constants = calibrate.load_constants(device=device_kind(),
+                                         cache_path=cache.path)
     ranked = sorted(cands, key=lambda p: _rank_time(
-        spec, problem.shape, itemsize, p, steps))
+        spec, problem.shape, itemsize, p, steps, constants))
     survivors = _stratify(ranked[:max_measure], ranked)
     # the historical fixed default must stay in the pool so the tuned plan
     # can never lose to it
@@ -646,6 +832,33 @@ def tune(problem, backend: str = "auto", steps: int | None = None,
             best_plan, best_t = plan, t
     if best_plan is None:
         raise RuntimeError(f"every candidate failed for {key}")
+
+    # feed the roofline calibrator: every measured (modeled-terms, wall
+    # time) pair tightens the per-device-kind throughput peaks — the max
+    # ratchet ignores slow (e.g. interpret-mode) samples, so pruning
+    # sharpens monotonically as tuning runs accumulate.  Only real
+    # wall-clock measurements qualify (see the docstring).
+    if calibrate_samples:
+        # small grids may be cache-resident: their apparent bandwidth is
+        # cache, not HBM — exclude them from the hbm_bw fit (bytes=0).
+        # The terms are PER DEVICE, so the gate is on the per-shard
+        # working set: a 128 MB global grid split 8 ways is 16 MB/shard.
+        working_set = 2.0 * float(np.prod(problem.shape)) * itemsize
+        samples = []
+        for row in measurements:
+            p = plan_from_dict(row["plan"])
+            f, b, c = plan_terms(spec, problem.shape, itemsize, p, steps)
+            shards = float(np.prod(p.decomp)) if p.decomp else 1.0
+            fit_bw = working_set / shards \
+                >= calibrate.MIN_BANDWIDTH_WORKING_SET
+            samples.append({"flops": f, "bytes": b if fit_bw else 0.0,
+                            "coll_bytes": c,
+                            "seconds": row["seconds_per_step"]})
+        try:
+            calibrate.record_samples(samples, device=device_kind(),
+                                     cache_path=cache.path)
+        except OSError as e:                  # calibration is best-effort
+            logger.warning("roofline calibration not persisted: %s", e)
 
     record = {"plan": plan_to_dict(best_plan), "seconds_per_step": best_t,
               "fingerprint": code_fingerprint(),

@@ -7,6 +7,13 @@ ring of width w to both neighbors along every decomposed axis via
 already-extended array so corner/edge ghosts are captured without extra
 diagonal messages — the standard two-phase trick).
 
+The same primitive serves the shard-RESIDENT layout path: a transpose-layout
+array (nb, m, vl) keeps the decomposed 1-D axis as its *block* axis (axis 0),
+and an n-D layout (n0, *mid, nb, m, vl) keeps the pipelined axis as axis 0 —
+so :func:`exchange_blocks` exchanges ghost rings as whole (vl·m)-element
+blocks / whole pipeline tiles without ever leaving the layout (the blocks a
+``ppermute`` ships are bit-identical to the natural-layout ring, permuted).
+
 Global BC is periodic (the process ring wraps), matching the core oracle.
 """
 from __future__ import annotations
@@ -39,6 +46,20 @@ def exchange_axis(xl: jax.Array, width: int, axis: int, axis_name: str,
     left_ghost = lax.ppermute(tail, axis_name, fwd)    # from left neighbor
     right_ghost = lax.ppermute(head, axis_name, bwd)   # from right neighbor
     return jnp.concatenate([left_ghost, xl, right_ghost], axis=axis)
+
+
+def exchange_blocks(t: jax.Array, nblocks: int, axis_name: str,
+                    n_shards: int) -> jax.Array:
+    """Halo-extend a layout-RESIDENT shard along its leading (block / tile)
+    axis by ``nblocks`` whole units per side, via ring ``ppermute``.
+
+    For a 1-D transpose layout (nb, m, vl) one unit is a whole
+    (vl·m)-element block; for an n-D layout (n0, *mid, nb, m, vl) the
+    caller passes ``nblocks`` in *rows* (whole pipeline tiles).  Because
+    the layout transform acts per block, exchanging layout blocks is
+    bit-identical to exchanging the natural-layout ghost ring and
+    re-laying it out — with zero transposes."""
+    return exchange_axis(t, nblocks, 0, axis_name, n_shards)
 
 
 def exchange(xl: jax.Array, width: int, decomp: Sequence[str | None],

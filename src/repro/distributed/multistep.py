@@ -1,4 +1,4 @@
-"""Communication-avoiding distributed stencil sweeps.
+"""Communication-avoiding distributed stencil sweeps — shard-resident.
 
 The distributed rendering of the paper's unroll-and-jam: each device
 advances its subdomain **k steps per halo exchange** with a ghost ring of
@@ -8,142 +8,290 @@ O(perimeter · k²·r/2) cells — on TPU the redundant flops are far cheaper
 than the latency of k-1 extra collectives (napkin math in EXPERIMENTS.md
 §Perf).
 
-Two local engines:
-  * engine='jnp'    — fused jnp steps on the halo-extended block (any ndim)
-  * engine='pallas' — the 1-D transpose-layout pipelined kernel with
-    edge_mask=False; halos are exchanged as whole (vl·m)-element blocks so
-    the kernel's block structure is preserved (no re-layout at the seam).
+Local engines (engine= below):
 
-``distributed_run`` builds a mesh over all visible devices; ``make_step``
-returns the jit'd shard_map program for an existing mesh (used by the
-dry-run and benchmarks).
+  * ``jnp``    — fused jnp steps on the halo-extended block (any ndim,
+    any decomposition);
+  * ``pallas`` — the transpose-layout pipelined kernels, in two sweep
+    renderings selected by ``sweep=``:
+
+      - ``resident`` (the fast path): each shard transposes into the
+        (nb, m, vl) layout ONCE per run.  Halos are exchanged *in
+        layout* — the ghost ring ships as whole (vl·m)-element blocks
+        (1-D: block-axis slices; n-D: whole pipeline tiles along axis 0)
+        via ``lax.ppermute`` — and each k-step sweep runs the
+        wrapped-grid periodic kernels ``stencil{1d,_nd}_sweep_periodic``
+        straight on the halo-extended resident array (their BlockSpec
+        index maps wrap the halo *reads*, so no pad copy materializes;
+        the wrap corruption lies inside the exchanged ghost blocks,
+        which are cropped).  One transpose in + one transpose out per
+        RUN — zero per-exchange transpose/pad round-trips (jaxpr-pinned
+        in tests/_distributed_check.py).
+      - ``roundtrip`` (legacy): every sweep exchanges the halo in the
+        natural layout, transposes, runs the dirichlet multistep kernel
+        with ``edge_mask=False``, untransposes and crops — one layout
+        round-trip per exchange.  Kept as the bit-parity oracle: both
+        renderings feed identical block contents to identical kernel
+        arithmetic, so their outputs are bit-identical.
+
+Whole runs execute as ONE jitted shard_map program (transpose once →
+``lax.fori_loop`` over k-step sweeps → remainder policy fused in →
+untranspose once); programs and meshes are cached per configuration
+(:data:`_programs`), so repeated ``distributed_run`` calls with the same
+(spec, mesh, decomp, steps, k, engine, …) never rebuild the Mesh or
+re-jit — the distributed analogue of the twin-jit cache in
+``kernels/ops.stencil_sweep_periodic``.
+
+``distributed_run`` resolves the mesh from an explicit ``shards``
+decomposition (the planner's ``StencilPlan.decomp`` axis) or defaults to
+all visible devices; ``make_step`` returns the jit'd one-k-block program
+for an existing mesh (used by the dry-run and benchmarks).
 """
 from __future__ import annotations
 
-from functools import partial
+import threading
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.compat import shard_map
+from repro.core import layouts
+from repro.core.api import sweep_schedule
 from repro.core.stencils import StencilSpec, apply_once
 from repro.distributed import halo
+from repro.kernels.ops import _auto_interpret
+
+# guards the module-level mesh/program caches: serving hosts dispatch
+# distributed plans from request threads while warm_async tunes on a
+# background worker
+_lock = threading.Lock()
 
 
-def make_step(spec: StencilSpec, mesh: Mesh,
-              decomp: Sequence[str | None], k: int,
-              engine: str = "jnp", vl: int = 8, m: int | None = None,
-              interpret: bool = True):
-    """Returns step(x) advancing the global array k steps (periodic BC)."""
-    r = spec.r
-    width = k * r
-    pspec = halo.partition_spec(decomp, spec.ndim)
+# ---------------------------------------------------------------------------
+# mesh resolution + caching
+# ---------------------------------------------------------------------------
 
-    if engine == "jnp":
-        def local_fn(xl):
-            ext = halo.exchange(xl, width, decomp, mesh)
-            for _ in range(k):
-                ext = apply_once(spec, ext, bc="periodic")
-            return halo.crop(ext, width, decomp)
-    elif engine == "pallas":
-        assert spec.ndim == 1, "pallas engine wired for 1-D decomposition"
-        from repro.core import layouts
-        from repro.kernels import stencil_kernels as sk
-        mm = m or vl
-        blk = vl * mm
-        assert width <= blk, (width, blk)
-
-        def local_fn(xl):
-            ext = halo.exchange(xl, blk, decomp, mesh)  # one block per side
-            t = layouts.to_transpose_layout(ext, vl, mm)
-            out = sk.stencil1d_multistep(spec, t, k, interpret=interpret,
-                                         edge_mask=False)
-            flat = layouts.from_transpose_layout(out, vl, mm)
-            return lax.slice_in_dim(flat, blk, flat.shape[0] - blk, axis=0)
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
-
-    shmapped = shard_map(local_fn, mesh=mesh, in_specs=pspec,
-                         out_specs=pspec)
-    return jax.jit(shmapped)
-
-
-def make_stepper(spec: StencilSpec, mesh: Mesh,
-                 decomp: Sequence[str | None], steps: int, k: int,
-                 engine: str = "jnp", **kw):
-    """Whole-run program: steps/k sweeps inside one jit (collectives and
-    compute scheduled/overlapped by XLA across sweeps)."""
-    assert steps % k == 0
-    step = _make_step_fn(spec, mesh, decomp, k, engine, **kw)
-    pspec = halo.partition_spec(decomp, spec.ndim)
-
-    def run(x):
-        def body(_, v):
-            return step(v)
-        return lax.fori_loop(0, steps // k, body, x)
-
-    return jax.jit(shard_map(run, mesh=mesh, in_specs=pspec,
-                             out_specs=pspec))
-
-
-def _make_step_fn(spec, mesh, decomp, k, engine, vl: int = 8,
-                  m: int | None = None, interpret: bool = True):
-    """Local (per-shard) k-step function, for composition inside shard_map."""
-    width = k * spec.r
-    if engine == "jnp":
-        def local_fn(xl):
-            ext = halo.exchange(xl, width, decomp, mesh)
-            for _ in range(k):
-                ext = apply_once(spec, ext, bc="periodic")
-            return halo.crop(ext, width, decomp)
-        return local_fn
-    if engine == "pallas":
-        from repro.core import layouts
-        from repro.kernels import stencil_kernels as sk
-        mm = m or vl
-        blk = vl * mm
-
-        def local_fn(xl):
-            ext = halo.exchange(xl, blk, decomp, mesh)
-            t = layouts.to_transpose_layout(ext, vl, mm)
-            out = sk.stencil1d_multistep(spec, t, k, interpret=interpret,
-                                         edge_mask=False)
-            flat = layouts.from_transpose_layout(out, vl, mm)
-            return lax.slice_in_dim(flat, blk, flat.shape[0] - blk, axis=0)
-        return local_fn
-    raise ValueError(engine)
+_meshes: dict[tuple, tuple[Mesh, tuple]] = {}
 
 
 def default_mesh(ndim: int, devices=None) -> tuple[Mesh, list[str | None]]:
     """Flat mesh over all devices for 1-D decomposition; a 2-D process grid
-    for 2-D/3-D stencils when the device count factors."""
-    devices = devices if devices is not None else jax.devices()
-    n = len(devices)
-    if ndim == 1 or n < 4:
-        mesh = jax.make_mesh((n,), ("dx",), devices=np.asarray(devices))
-        return mesh, ["dx"] + [None] * (ndim - 1)
-    a = int(np.sqrt(n))
-    while n % a:
-        a -= 1
-    mesh = jax.make_mesh((a, n // a), ("dx", "dy"),
-                         devices=np.asarray(devices))
-    return mesh, ["dx", "dy"] + [None] * (ndim - 2)
+    for 2-D/3-D stencils when the device count factors.  Cached per
+    (ndim, devices) — repeated calls return the same Mesh object."""
+    devices = tuple(jax.devices() if devices is None else devices)
+    key = ("default", ndim, devices)
+    with _lock:
+        if key not in _meshes:
+            n = len(devices)
+            if ndim == 1 or n < 4:
+                mesh = jax.make_mesh((n,), ("dx",),
+                                     devices=np.asarray(devices))
+                _meshes[key] = (mesh, ("dx",) + (None,) * (ndim - 1))
+            else:
+                a = int(np.sqrt(n))
+                while n % a:
+                    a -= 1
+                mesh = jax.make_mesh((a, n // a), ("dx", "dy"),
+                                     devices=np.asarray(devices))
+                _meshes[key] = (mesh, ("dx", "dy") + (None,) * (ndim - 2))
+        mesh, decomp = _meshes[key]
+    return mesh, list(decomp)
+
+
+def mesh_for_shards(shards: Sequence[int],
+                    devices=None) -> tuple[Mesh, list[str | None]]:
+    """Mesh realizing a per-axis shard-count decomposition (the plan's
+    ``decomp`` axis): spatial axis i with ``shards[i] > 1`` is decomposed
+    over a mesh axis ``d{i}`` of that size.  Cached per (shards, devices)."""
+    shards = tuple(int(s) for s in shards)
+    devices = tuple(jax.devices() if devices is None else devices)
+    need = int(np.prod(shards))
+    if need < 2:
+        raise ValueError(f"decomp {shards} is not distributed (needs >= 2 "
+                         "shards)")
+    if need > len(devices):
+        raise ValueError(f"decomp {shards} needs {need} devices, "
+                         f"only {len(devices)} visible")
+    key = ("shards", shards, devices[:need])
+    with _lock:
+        if key not in _meshes:
+            sizes = tuple(s for s in shards if s > 1)
+            names = tuple(f"d{i}" for i, s in enumerate(shards) if s > 1)
+            mesh = jax.make_mesh(sizes, names,
+                                 devices=np.asarray(devices[:need]))
+            decomp = tuple(f"d{i}" if s > 1 else None
+                           for i, s in enumerate(shards))
+            _meshes[key] = (mesh, decomp)
+        mesh, decomp = _meshes[key]
+    return mesh, list(decomp)
+
+
+def _axis_shards(mesh: Mesh, aname) -> int:
+    return int(np.prod([mesh.shape[a] for a in halo._names(aname)]))
+
+
+# ---------------------------------------------------------------------------
+# whole-run program builder + cache
+# ---------------------------------------------------------------------------
+
+_programs: dict[tuple, object] = {}
+# distinct (schedule, config) programs retained; a long-lived service
+# cycling many step counts must not grow jitted executables without bound
+_PROGRAMS_MAX = 64
+
+
+def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
+             steps: int, k: int = 2, engine: str = "jnp",
+             sweep: str = "resident", remainder: str = "fused",
+             vl: int | None = None, m: int | None = None,
+             t0: int | None = None, interpret: bool | None = None):
+    """ONE jitted shard_map program advancing the global array ``steps``
+    periodic steps in k-step halo-exchange sweeps (plus the ``steps % k``
+    remainder under ``remainder``).  Cached (FIFO-bounded at
+    :data:`_PROGRAMS_MAX`) per effective configuration — the key is the
+    (kk, n_sweeps) *schedule*, not the raw (steps, k, remainder) triple,
+    and fields the jnp engine ignores are normalized away, so equivalent
+    requests share one program and later calls are dict hits (satellite
+    of ISSUE 4: no per-call mesh rebuild or re-jit)."""
+    interpret = _auto_interpret(interpret)
+    if remainder not in ("fused", "native"):
+        raise ValueError(f"unknown remainder policy {remainder!r}")
+    decomp = tuple(decomp)
+    r = spec.r
+    # (kk, n_sweeps) schedule: main k-blocks then the remainder policy —
+    # the shared decomposition the roofline also charges
+    chunks, _ = sweep_schedule(k, steps, remainder)
+
+    if engine == "jnp":          # tile/sweep/interpret fields are inert
+        vl = m = t0 = None
+        sweep = "resident"
+        interpret = False
+    key = (spec, mesh, decomp, engine, sweep, vl, m, t0, interpret,
+           tuple(chunks))
+    with _lock:
+        prog = _programs.get(key)
+    if prog is not None:
+        return prog
+
+    pspec = halo.partition_spec(decomp, spec.ndim)
+
+    def _loop(v, sweep_fn):
+        for kk, n in chunks:
+            v = lax.fori_loop(0, n, lambda _, u, kk=kk: sweep_fn(u, kk), v)
+        return v
+
+    if engine == "jnp":
+        def run(xl):
+            def sweep_fn(v, kk):
+                ext = halo.exchange(v, kk * r, decomp, mesh)
+                for _ in range(kk):
+                    ext = apply_once(spec, ext, bc="periodic")
+                return halo.crop(ext, kk * r, decomp)
+            return _loop(xl, sweep_fn)
+    elif engine == "pallas":
+        from repro.kernels import ops as kops
+        from repro.kernels import stencil_kernels as sk
+        if sweep not in ("resident", "roundtrip"):
+            raise ValueError(f"unknown sweep engine {sweep!r}")
+        aname = decomp[0]
+        if aname is None or any(d is not None for d in decomp[1:]):
+            raise ValueError("pallas engines require an axis-0-only "
+                             f"decomposition, got {decomp}")
+        nsh = _axis_shards(mesh, aname)
+
+        def run(xl):
+            vl_, m_, t0_ = kops.pick_tile(spec, xl.shape, vl, m, t0)
+            # halo unit along the exchanged axis: whole (vl·m) blocks in
+            # 1-D, whole t0-row pipeline tiles in n-D
+            unit = vl_ * m_ if spec.ndim == 1 else t0_
+
+            if sweep == "resident":
+                def sweep_fn(t, kk):
+                    p = sk.sweep_halo_blocks(r, kk, unit)
+                    w = p if spec.ndim == 1 else p * t0_
+                    ext = halo.exchange_blocks(t, w, aname, nsh)
+                    if spec.ndim == 1:
+                        out = sk.stencil1d_sweep_periodic(
+                            spec, ext, kk, interpret=interpret)
+                    else:
+                        out = sk.stencil_nd_sweep_periodic(
+                            spec, ext, kk, t0_, interpret=interpret)
+                    return lax.slice_in_dim(out, w, out.shape[0] - w,
+                                            axis=0)
+                t = layouts.to_transpose_layout(xl, vl_, m_)
+                t = _loop(t, sweep_fn)
+                return layouts.from_transpose_layout(t, vl_, m_)
+
+            def sweep_fn(v, kk):               # legacy per-sweep round-trip
+                w = sk.sweep_halo_blocks(r, kk, unit) * unit
+                ext = halo.exchange_axis(v, w, 0, aname, nsh)
+                t = layouts.to_transpose_layout(ext, vl_, m_)
+                if spec.ndim == 1:
+                    out = sk.stencil1d_multistep(spec, t, kk,
+                                                 interpret=interpret,
+                                                 edge_mask=False)
+                else:
+                    out = sk.stencil_nd_multistep(spec, t, kk, t0_,
+                                                  interpret=interpret,
+                                                  edge_mask=False)
+                flat = layouts.from_transpose_layout(out, vl_, m_)
+                return lax.slice_in_dim(flat, w, flat.shape[0] - w, axis=0)
+            return _loop(xl, sweep_fn)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    prog = jax.jit(shard_map(run, mesh=mesh, in_specs=pspec,
+                             out_specs=pspec))
+    with _lock:
+        racer = _programs.get(key)
+        if racer is not None:               # concurrent miss: keep first
+            return racer
+        while len(_programs) >= _PROGRAMS_MAX:    # FIFO eviction
+            _programs.pop(next(iter(_programs)))
+        _programs[key] = prog
+    return prog
+
+
+def make_step(spec: StencilSpec, mesh: Mesh,
+              decomp: Sequence[str | None], k: int,
+              engine: str = "jnp", vl: int | None = None,
+              m: int | None = None, t0: int | None = None,
+              sweep: str = "resident", interpret: bool | None = None):
+    """One k-step halo-exchange block as a jit'd shard_map program (the
+    dry-run / benchmark entry point).  Cached like :func:`make_run`."""
+    return make_run(spec, mesh, decomp, steps=k, k=k, engine=engine,
+                    sweep=sweep, vl=vl, m=m, t0=t0, interpret=interpret)
 
 
 def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
                     engine: str = "jnp", mesh: Mesh | None = None,
-                    decomp=None, **kw) -> jax.Array:
+                    decomp=None, shards: Sequence[int] | None = None,
+                    sweep: str = "resident", remainder: str = "fused",
+                    vl: int | None = None, m: int | None = None,
+                    t0: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Advance ``x`` by ``steps`` periodic steps on a device mesh.
+
+    ``shards`` (the plan's ``decomp`` axis) names the per-spatial-axis
+    shard counts; without it (and without an explicit ``mesh``/``decomp``)
+    the default mesh over all visible devices is used.  Any ``steps`` is
+    valid — the ``steps % k`` remainder runs inside the same program
+    under ``remainder`` ("fused": single steps, "native": one shorter
+    k=remainder sweep).  The program and mesh are cached, so steady-state
+    calls are a dict lookup + dispatch."""
     if mesh is None:
-        mesh, decomp = default_mesh(spec.ndim)
+        if shards is not None:
+            mesh, decomp = mesh_for_shards(shards)
+        else:
+            mesh, decomp = default_mesh(spec.ndim)
     assert decomp is not None
+    if steps <= 0:
+        return x
     pspec = halo.partition_spec(decomp, spec.ndim)
     x = jax.device_put(x, NamedSharding(mesh, pspec))
-    assert steps % k == 0
-    step = make_step(spec, mesh, decomp, k, engine, **kw)
-    for _ in range(steps // k):
-        x = step(x)
-    return x
+    prog = make_run(spec, mesh, decomp, steps, k, engine, sweep, remainder,
+                    vl, m, t0, interpret)
+    return prog(x)

@@ -13,7 +13,11 @@ Two periodic execution engines:
     program transposes in once, runs ALL steps (k-blocks + remainder)
     with the wrapped-periodic kernels, and untransposes once.  Bit-
     identical to the former, with the layout/pad traffic amortized over
-    the whole run.
+    the whole run.  The distributed runtime
+    (``distributed/multistep.make_run``) is the shard_map rendering of
+    the same idea: per-shard transpose once per run, halo blocks
+    exchanged in layout, programs cached per configuration like the
+    twin-jit pair below.
 
 On CPU hosts the kernels execute in interpret mode (validation); on TPU they
 compile via Mosaic.  ``interpret=None`` auto-detects.

@@ -48,7 +48,12 @@ TPU rendering of the paper (see DESIGN.md §2):
     §3.2/§3.5 claim that the layout cost is paid once per tile lifetime,
     honored across the whole time loop.  The raw multistep kernels stay
     dirichlet so the distributed halo runtime (edge_mask=False +
-    halo-block exchange) keeps its contract.
+    halo-block exchange) keeps its contract — and the shard-RESIDENT
+    distributed engine (distributed/multistep.py) feeds these same
+    ``sweep_periodic`` kernels a halo-extended resident shard: the ghost
+    ring arrives as whole layout blocks via ppermute, the wrapped reads
+    make no further copy, and the wrap corruption lands inside the
+    cropped ghost blocks.
 
 Grid-step uniform formulation (boot folded into the steady loop): at grid
 step j, window position i holds block ``j-k+i`` at time ``k-1-i``; blocks
@@ -300,11 +305,15 @@ def _kernel_nd(t_ref, o_ref, win_ref, vrl_ref, *, spec: StencilSpec,
 
 
 def stencil_nd_multistep(spec: StencilSpec, t: jax.Array, k: int, t0: int,
-                         *, interpret: bool = True) -> jax.Array:
+                         *, interpret: bool = True,
+                         edge_mask: bool = True) -> jax.Array:
     """t: (n0, *mid, nb, m, vl) — transpose layout on the minor spatial dim.
 
     Pipelines k time steps along axis 0 in tiles of t0 rows.  BC: dirichlet
-    along axis 0, periodic along every other axis."""
+    along axis 0, periodic along every other axis.  ``edge_mask=False``
+    leaves the first/last pipeline tiles un-masked (garbage within k·r of
+    the axis-0 edges) — the distributed halo runtime's contract: it
+    exchanges whole halo tiles and crops them after the sweep."""
     n0 = t.shape[0]
     r = spec.r
     assert n0 % t0 == 0 and t0 >= r, (n0, t0, r)
@@ -312,7 +321,8 @@ def stencil_nd_multistep(spec: StencilSpec, t: jax.Array, k: int, t0: int,
     assert spec.r <= t.shape[-2]
     block = (t0,) + t.shape[1:]
     nd = t.ndim
-    kern = functools.partial(_kernel_nd, spec=spec, n0t=n0t, t0=t0, k=k)
+    kern = functools.partial(_kernel_nd, spec=spec, n0t=n0t, t0=t0, k=k,
+                             edge_mask=edge_mask)
     zeros_tail = (0,) * (nd - 1)
     return pl.pallas_call(
         kern,

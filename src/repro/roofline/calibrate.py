@@ -1,0 +1,191 @@
+"""Measured roofline calibration: per-device-kind constants, persisted.
+
+The analytic plan roofline (:mod:`repro.roofline.stencil`) ranks plan
+candidates as ``t >= max(F/peak_flops, B/hbm_bw, C/ici_bw)``.  The static
+constants are the TPU-v5e numbers from :mod:`repro.roofline.analysis` —
+fine for *ranking* on any one device, but they cannot sharpen pruning on
+the device actually measured.  This module fits the constants from the
+timing harness's measured samples instead:
+
+    every measured candidate (modeled flops F, bytes B, collective bytes
+    C per step; measured seconds t per step) certifies the bounds
+    ``peak_flops >= F/t``, ``hbm_bw >= B/t``, ``ici_bw >= C/t`` — so the
+    fitted constant per device kind is the tightest such bound: the MAX
+    observed throughput.  A monotone ratchet: constants only grow as
+    samples accumulate (pruning sharpens run over run), and a slow
+    sample (e.g. an interpret-mode Pallas candidate) can never loosen
+    them.
+
+The bound argument holds only when the modeled term reflects real
+traffic: a grid whose working set fits in cache observes cache — not
+HBM — bandwidth, so the caller (``autotune.tune``) zeroes the ``bytes``
+field for problems under :data:`MIN_BANDWIDTH_WORKING_SET` and those
+samples feed only the flops/collective terms.  The fit calibrates the
+RANKING model — modeled terms over measured time — so a modest model
+bias (e.g. reorg-op accounting) shifts all candidates together and
+leaves the ordering usable.
+
+Fitted constants are served only once both the compute AND memory terms
+have samples (a half-fitted model would skew every ranking toward the
+term still at its static peak — see :func:`load_constants`); ``ici_bw``
+alone falls back independently until a distributed candidate has been
+measured.
+
+File format (JSON, ``REPRO_ROOFLINE_CONSTANTS`` env var, or
+``roofline_constants.json`` beside the plan cache)::
+
+    {"version": 1,
+     "devices": {
+       "cpu": {"peak_flops": 5.1e9, "hbm_bw": 1.3e10, "ici_bw": 0.0,
+               "n_samples": 24}}}
+
+Writes are read-merge-write under an exclusive lock + atomic replace
+(same discipline as the plan cache); corrupt or version-mismatched files
+are ignored and overwritten.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Iterable
+
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+CONSTANTS_VERSION = 1
+CONSTANTS_ENV = "REPRO_ROOFLINE_CONSTANTS"
+CONSTANTS_BASENAME = "roofline_constants.json"
+
+# grids whose full read+write working set is under this are (potentially)
+# cache-resident: their measured "bandwidth" is cache bandwidth and must
+# not ratchet the fitted HBM term (see module docstring)
+MIN_BANDWIDTH_WORKING_SET = 32 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineConstants:
+    """Device throughput peaks used by ``estimate_plan_time``; ``source``
+    records whether they are the static TPU-v5e defaults or fitted."""
+
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    n_samples: int = 0
+    source: str = "static"
+
+
+STATIC = RooflineConstants()
+
+
+def device_kind() -> str:
+    import jax
+    return jax.devices()[0].device_kind.lower().replace(" ", "_")
+
+
+def constants_path(cache_path: str | None = None) -> str:
+    """Resolution order: env var → sibling of the given plan-cache path →
+    the default cache directory.  Keeping the file beside the plan cache
+    means a tuner pointed at a private cache (tests, offline runs) also
+    keeps its calibration private."""
+    env = os.environ.get(CONSTANTS_ENV)
+    if env:
+        return env
+    if cache_path:
+        return os.path.join(os.path.dirname(os.path.abspath(cache_path)),
+                            CONSTANTS_BASENAME)
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        CONSTANTS_BASENAME)
+
+
+def _load_devices(path: str) -> dict:
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if raw.get("version") == CONSTANTS_VERSION:
+            return dict(raw.get("devices", {}))
+    except (OSError, ValueError):
+        pass
+    return {}
+
+
+def load_constants(device: str | None = None,
+                   cache_path: str | None = None,
+                   path: str | None = None) -> RooflineConstants:
+    """Fitted constants for ``device`` (default: the local device kind).
+
+    Fitted values are served only once BOTH the compute and memory terms
+    have samples: mixing a fitted ``peak_flops`` with the static TPU
+    ``hbm_bw`` (or vice versa) would skew every ranking toward whichever
+    term kept its inflated static peak — a coherent all-static model
+    ranks better than a half-sharpened one.  ``ici_bw`` alone still
+    falls back independently (it only enters distributed candidates'
+    max() term and stays conservative until a collective is measured)."""
+    path = path or constants_path(cache_path)
+    device = device or device_kind()
+    e = _load_devices(path).get(device)
+    if not e:
+        return STATIC
+    pf = float(e.get("peak_flops") or 0.0)
+    bw = float(e.get("hbm_bw") or 0.0)
+    if pf <= 0.0 or bw <= 0.0:
+        return STATIC
+    return RooflineConstants(
+        peak_flops=pf, hbm_bw=bw,
+        ici_bw=float(e.get("ici_bw") or 0.0) or ICI_BW,
+        n_samples=int(e.get("n_samples", 0)),
+        source="measured")
+
+
+def record_samples(samples: Iterable[dict], device: str | None = None,
+                   cache_path: str | None = None,
+                   path: str | None = None) -> RooflineConstants:
+    """Ratchet the fitted constants with measured samples and persist.
+
+    Each sample: ``{"flops": F, "bytes": B, "coll_bytes": C,
+    "seconds": t}`` — modeled per-step per-device terms against the
+    measured per-step wall time (what ``autotune.tune`` records for every
+    candidate it times).  Returns the post-update constants."""
+    path = path or constants_path(cache_path)
+    device = device or device_kind()
+    pf = bw = ici = 0.0
+    n = 0
+    for s in samples:
+        t = float(s.get("seconds", 0.0))
+        if t <= 0.0:
+            continue
+        pf = max(pf, float(s.get("flops", 0.0)) / t)
+        bw = max(bw, float(s.get("bytes", 0.0)) / t)
+        ici = max(ici, float(s.get("coll_bytes", 0.0)) / t)
+        n += 1
+    if not n:
+        return load_constants(device=device, path=path)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path + ".lock", "w") as lk:
+        try:
+            import fcntl
+            fcntl.flock(lk, fcntl.LOCK_EX)
+        except (ImportError, OSError):
+            pass                                # best-effort off-posix
+        devices = _load_devices(path)
+        old = devices.get(device, {})
+        entry = {"peak_flops": max(pf, float(old.get("peak_flops", 0.0))),
+                 "hbm_bw": max(bw, float(old.get("hbm_bw", 0.0))),
+                 "ici_bw": max(ici, float(old.get("ici_bw", 0.0))),
+                 "n_samples": int(old.get("n_samples", 0)) + n}
+        devices[device] = entry
+        payload = {"version": CONSTANTS_VERSION, "devices": devices}
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+    # serve the post-update view through the same coherence gate reads use
+    return load_constants(device=device, path=path)

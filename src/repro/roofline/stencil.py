@@ -23,10 +23,26 @@ step a plan costs:
                 round-trip / pad-crop traffic of their sweep engine:
                 per-sweep for "roundtrip", once per run for "resident"
                 (:func:`pallas_extra_bytes_per_step`).
+  collective    distributed plans only: the ppermute ghost-ring traffic,
+                charged per *k-block* (one exchange per sweep).  The
+                BYTES per step are flat in k — a k-wide ring ships k× the
+                bytes k× less often — so what trapezoid blocking actually
+                buys is the per-message LATENCY: the exchange count per
+                step falls as 1/k, and each message is charged
+                :data:`ICI_LATENCY` on top of its bandwidth time (the
+                communication-avoiding claim, made visible to the
+                ranking).  Distributed compute/memory terms are
+                per-device (points / #shards) with the redundant-halo
+                factor ``(n_local + 2·k·r)/n_local`` per decomposed axis.
 
-Absolute peak numbers are the TPU-v5e constants from
-:mod:`repro.roofline.analysis`; only the *ranking* matters for pruning, so
-the same model serves CPU runs unchanged.
+:func:`plan_terms` exposes the raw (flops, hbm_bytes, collective_bytes)
+per step per device; :func:`estimate_plan_time` divides them by device
+constants.  By default those are the static TPU-v5e numbers from
+:mod:`repro.roofline.analysis`; pass a ``constants`` object (e.g. the
+fitted per-device-kind :class:`repro.roofline.calibrate.RooflineConstants`
+the autotuner accumulates from its own measurements) to sharpen the
+ranking for the device actually in use — only the *ranking* matters for
+pruning, so the static model still serves any device unchanged.
 """
 from __future__ import annotations
 
@@ -34,7 +50,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
 
 # DLT keeps per-step reorg near zero but gathers each vector from
 # N/vl-strided addresses — charge the memory term for defeated prefetch.
@@ -43,6 +59,10 @@ _DLT_BW_PENALTY = 1.5
 # Amortization horizon for once-per-RUN costs (the resident engine's single
 # layout round-trip) when the plan is ranked without a concrete step count.
 RESIDENT_AMORT_STEPS = 16
+
+# Per-message ppermute launch latency (seconds) — what the k-step halo
+# exchange amortizes: bytes per step are flat in k, message COUNT is 1/k.
+ICI_LATENCY = 1e-6
 
 
 def reorg_ops_per_point(spec, scheme: str, vl: int, m: int | None) -> float:
@@ -95,22 +115,106 @@ def pallas_extra_bytes_per_step(pts: float, itemsize: int, sweep: str,
     return 2.0 * roundtrip * sweeps_per_step
 
 
-def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
-                       plan, steps: int | None = None) -> float:
-    """Roofline lower bound (seconds) for ONE step of ``plan``.
+def distributed_exchanges_per_step(plan, steps: int | None = None) -> float:
+    """ppermute messages per grid step: 2 (one per direction) per
+    decomposed axis, once per k-block sweep.  This COUNT — not the bytes,
+    which are flat in k — is what trapezoid blocking cuts; the estimate
+    charges each message :data:`ICI_LATENCY`.  Derived from the same
+    :func:`repro.core.api.sweep_schedule` chunks as every other
+    distributed term."""
+    shards = tuple(getattr(plan, "decomp", None) or ())
+    ndec = sum(1 for s in shards if s > 1)
+    if not ndec:
+        return 0.0
+    from repro.core.api import sweep_schedule
+    chunks, total = sweep_schedule(max(plan.k, 1), steps,
+                                   getattr(plan, "remainder", "fused"))
+    return 2.0 * ndec * sum(n for _, n in chunks) / total
 
-    plan: StencilPlan (duck-typed: scheme/k/tiling/height/vl/m/backend/
-    remainder/sweep).  ``steps`` amortizes the remainder policy into the
-    memory term (see :func:`_sweeps_per_step`).  Pallas plans keep the
-    transpose reorg cost for any k (the kernel stays layout-resident
-    within a sweep) and pay for the periodic halo ring (2·k·r extra rows
-    of traffic per sweep along the pipelined axis) plus the
-    engine-dependent layout/pad traffic of
-    :func:`pallas_extra_bytes_per_step` — once per sweep for
-    ``sweep="roundtrip"``, once per run for ``sweep="resident"``."""
+
+def _distributed_terms(spec, shape, itemsize, plan,
+                       steps: int | None) -> tuple[float, float, float]:
+    """Per-device (flops, hbm_bytes, collective_bytes) per step for a
+    ``backend="distributed"`` plan.
+
+    Every term is accumulated over the run's actual sweep schedule
+    (:func:`repro.core.api.sweep_schedule` — the same chunks the
+    distributed runtime executes), so a ``steps % k`` remainder sweep is
+    charged its OWN ghost width ``kk·r`` and halo-redundancy factor, not
+    the main block's — the fused-vs-native remainder ranking stays
+    honest.  The ppermute term is charged per *k-block*: one ghost-ring
+    exchange of width kk·r per sweep.  Per step the bytes come out flat
+    in k (total ring traffic is conserved); the k× win lives in the
+    exchange COUNT (:func:`distributed_exchanges_per_step`), charged as
+    per-message latency in :func:`estimate_plan_time` — trading
+    redundant halo flops (the ``ext`` factor below) for k× fewer
+    collectives is exactly the trapezoid-blocking economics the planner
+    must see."""
+    remainder = getattr(plan, "remainder", "fused")
+    shards = tuple(getattr(plan, "decomp", None) or ())
+    r = spec.r
+    local = [n // s for n, s in zip(shape, shards)] if shards else list(shape)
+    pts_dev = float(np.prod(local))
+    engine_pallas = plan.scheme == "transpose"
+    scheme = "transpose" if engine_pallas else "fused"
+    arith = float(spec.flops_per_point)
+    reorg = reorg_ops_per_point(spec, scheme, plan.vl, plan.m)
+
+    def ext_factor(kk: int) -> float:
+        # redundant halo compute/traffic: a kk-deep sweep updates the
+        # ghost-extended shard, (n_local + 2·kk·r)/n_local per axis
+        e = 1.0
+        for nl, s in zip(local, shards):
+            if s > 1:
+                e *= (nl + 2.0 * kk * r) / max(nl, 1)
+        return e
+
+    def ring_bytes(kk: int) -> float:
+        # ppermute bytes of one width-kk·r exchange (both directions,
+        # progressive corner growth — mirrors halo.halo_bytes_per_exchange)
+        b, shp = 0.0, list(local)
+        for ax, s in enumerate(shards):
+            if s <= 1:
+                continue
+            face = float(np.prod(shp)) / shp[ax]
+            b += 2.0 * kk * r * face * itemsize
+            shp[ax] += 2 * kk * r
+        return b
+
+    from repro.core.api import sweep_schedule
+    # layout traffic: the shard-resident engine transposes the bare shard
+    # once per RUN; the distributed roundtrip engine re-lays-out the
+    # halo-EXTENDED shard every sweep, but — unlike the single-device
+    # roundtrip wrapper — never wrap-pads or crops the full domain (the
+    # ghost ring arrives by ppermute), so it pays the round-trip alone.
+    rt_per_sweep = engine_pallas and \
+        getattr(plan, "sweep", "roundtrip") != "resident"
+    chunks, total = sweep_schedule(plan.k, steps, remainder)
+    flops = mem = coll = 0.0
+    for kk, n in chunks:
+        flops += n * kk * pts_dev * ext_factor(kk) * (arith + reorg)
+        mem += n * 2.0 * pts_dev * itemsize * ext_factor(kk)
+        if rt_per_sweep:
+            mem += n * 4.0 * pts_dev * itemsize * ext_factor(kk)
+        coll += n * ring_bytes(kk)
+    flops, mem, coll = flops / total, mem / total, coll / total
+    if engine_pallas and not rt_per_sweep:
+        mem += 4.0 * pts_dev * itemsize \
+            / float(steps if steps else RESIDENT_AMORT_STEPS)
+    return flops, mem, coll
+
+
+def plan_terms(spec, shape: Sequence[int], itemsize: int, plan,
+               steps: int | None = None) -> tuple[float, float, float]:
+    """(flops, hbm_bytes, collective_bytes) for ONE step of ``plan``, per
+    device — the raw roofline terms :func:`estimate_plan_time` divides by
+    the device constants, and the quantities the calibrator
+    (:mod:`repro.roofline.calibrate`) fits throughputs from."""
     pts = float(np.prod(list(shape)))
     backend = getattr(plan, "backend", "jnp")
     remainder = getattr(plan, "remainder", "fused")
+    if backend == "distributed":
+        return _distributed_terms(spec, shape, itemsize, plan, steps)
     if plan.tiling == "tessellate":
         k_eff = plan.height or plan.k
         scheme = plan.scheme
@@ -123,7 +227,7 @@ def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
             scheme = plan.scheme if plan.k == 1 else "fused"
     arith = float(spec.flops_per_point)
     reorg = reorg_ops_per_point(spec, scheme, plan.vl, plan.m)
-    t_compute = pts * (arith + reorg) / PEAK_FLOPS
+    flops = pts * (arith + reorg)
     sweeps = _sweeps_per_step(k_eff, steps, remainder)
     mem_bytes = 2.0 * pts * itemsize * sweeps
     if scheme == "dlt":
@@ -134,4 +238,28 @@ def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
         mem_bytes += pallas_extra_bytes_per_step(
             pts, itemsize, getattr(plan, "sweep", "roundtrip"), sweeps,
             steps)
-    return max(t_compute, mem_bytes / HBM_BW)
+    return flops, mem_bytes, 0.0
+
+
+def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
+                       plan, steps: int | None = None,
+                       constants=None) -> float:
+    """Roofline lower bound (seconds) for ONE step of ``plan``.
+
+    plan: StencilPlan (duck-typed: scheme/k/tiling/height/vl/m/backend/
+    remainder/sweep/decomp).  ``steps`` amortizes the remainder policy
+    into the memory term (see :func:`_sweeps_per_step`).  ``constants``
+    (duck-typed: ``peak_flops`` / ``hbm_bw`` / ``ici_bw``) overrides the
+    static TPU-v5e peaks — the autotuner passes the per-device-kind
+    constants fitted by :mod:`repro.roofline.calibrate`."""
+    flops, mem_bytes, coll_bytes = plan_terms(spec, shape, itemsize, plan,
+                                              steps)
+    pf = constants.peak_flops if constants is not None else PEAK_FLOPS
+    bw = constants.hbm_bw if constants is not None else HBM_BW
+    ici = constants.ici_bw if constants is not None else ICI_BW
+    t = max(flops / pf, mem_bytes / bw)
+    if coll_bytes:
+        t_coll = coll_bytes / ici \
+            + distributed_exchanges_per_step(plan, steps) * ICI_LATENCY
+        t = max(t, t_coll)
+    return t

@@ -257,7 +257,14 @@ class StencilService:
         per-``steps`` request served by the generic plan (or a cold-cache
         default) must not pin that step count — a later warm request or
         an offline tuner filling the per-``steps`` entry upgrades it on
-        the next request."""
+        the next request.
+
+        A resolved plan must also be *executable here*: a distributed
+        winner (tuned on a multi-device host, ``decomp`` needing N
+        shards) found in a shared cache degrades to the static default
+        when this host lacks the devices, instead of crashing the
+        request.  (The plan key carries the device count, so this only
+        triggers for hand-written / cross-host cache entries.)"""
         from repro.core import autotune
         key, prob = self._problem(name, shape, dtype)
         plan = self._plans.get((key, steps))
@@ -280,6 +287,8 @@ class StencilService:
             if plan is not None:
                 with self._lock:
                     self._plans[(key, None)] = plan
+        if plan is not None and not _plan_executable(plan):
+            plan = None
         return plan or prob.default_plan()
 
     def sweep(self, name: str, x, steps: int, warm: bool = False):
@@ -289,6 +298,17 @@ class StencilService:
         key, prob = self._problem(name, x.shape, x.dtype)
         plan = self.plan_for(name, x.shape, x.dtype, steps=steps, warm=warm)
         return prob.run(x, steps, plan)
+
+
+def _plan_executable(plan) -> bool:
+    """Can this host run the plan?  Distributed plans need enough visible
+    devices for their mesh decomposition."""
+    if getattr(plan, "backend", "jnp") != "distributed":
+        return True
+    decomp = getattr(plan, "decomp", None)
+    if not decomp:
+        return True                     # legacy no-decomp: any device count
+    return int(np.prod(decomp)) <= jax.device_count()
 
 
 def _write_slot(cache, cache1, slot: int):

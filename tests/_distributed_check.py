@@ -1,8 +1,23 @@
 """Subprocess body for distributed tests: runs with 8 forced host devices.
 
-Invoked by test_distributed.py; exits non-zero on any mismatch."""
+Invoked by test_distributed.py; exits non-zero on any mismatch.  Covers:
+
+  * the jnp halo engine over 1-D/2-D/3-D decompositions vs the oracle;
+  * the shard-RESIDENT pallas engine: parity matrix vs the f64 oracle AND
+    bit-identity vs the per-exchange round-trip engine (1-D and 2-D
+    decompositions, k>1, both remainder policies, ragged step counts);
+  * a jaxpr-inspection pin: the shard-resident program contains NO
+    transpose inside the sweep loop (exactly one layout round-trip per
+    run), while the round-trip engine transposes every sweep;
+  * plan="auto" on the 8-device mesh: distributed candidates are
+    enumerated, measured (stub timer), can WIN, round-trip through the
+    plan cache with their decomp axis intact, and dispatch correctly;
+  * the program/mesh caches: repeated distributed_run calls re-use the
+    jitted shard_map program instead of re-building mesh + jit.
+"""
 import os
 import sys
+import tempfile
 
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 "
@@ -13,9 +28,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
+from jax import core as jcore  # noqa: E402
 
 from repro.core import stencils  # noqa: E402
 from repro.distributed import halo, multistep  # noqa: E402
+
+
+def _f64_oracle(spec, x, steps):
+    out = np.asarray(x).astype(np.float64)
+    for _ in range(steps):
+        out = stencils.numpy_apply_once(spec, out)
+    return out
 
 
 def check(name, shape, steps, k, engine="jnp", **kw):
@@ -26,13 +49,180 @@ def check(name, shape, steps, k, engine="jnp", **kw):
     want = stencils.apply_steps(spec, x, steps, bc="periodic")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=5e-5, atol=5e-5)
-    print(f"ok: {name} {shape} steps={steps} k={k} engine={engine}")
+    print(f"ok: {name} {shape} steps={steps} k={k} engine={engine} "
+          + " ".join(f"{a}={v}" for a, v in kw.items()))
+
+
+def check_resident_parity(name, shape, shards, steps, k, remainder, **kw):
+    """resident == round-trip BITWISE; both ≈ f64 oracle; jnp engine too."""
+    spec = stencils.make(name)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    res = multistep.distributed_run(spec, x, steps, k, engine="pallas",
+                                    shards=shards, sweep="resident",
+                                    remainder=remainder, **kw)
+    rt = multistep.distributed_run(spec, x, steps, k, engine="pallas",
+                                   shards=shards, sweep="roundtrip",
+                                   remainder=remainder, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(res), np.asarray(rt),
+        err_msg=f"{name} {shards} k={k} steps={steps} {remainder}: "
+        "shard-resident != round-trip (must be bit-identical)")
+    want = _f64_oracle(spec, x, steps)
+    np.testing.assert_allclose(np.asarray(res), want.astype(np.float32),
+                               rtol=5e-5, atol=5e-5)
+    jn = multistep.distributed_run(spec, x, steps, k, engine="jnp",
+                                   shards=shards, remainder=remainder)
+    np.testing.assert_allclose(np.asarray(jn), want.astype(np.float32),
+                               rtol=5e-5, atol=5e-5)
+    print(f"parity ok: {name} {shape} shards={shards} steps={steps} "
+          f"k={k} rem={remainder}")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr census: transposes inside vs outside the sweep loop
+# ---------------------------------------------------------------------------
+
+_LOOP_PRIMS = ("while", "scan")
+
+
+def _transpose_census(closed) -> tuple[int, int]:
+    """(transposes outside any loop body, transposes inside loop bodies),
+    descending through pjit/shard_map/control-flow jaxprs but NOT into
+    pallas kernel bodies (in-kernel ops never touch HBM layout)."""
+    top = inside = 0
+
+    def visit(jaxpr, in_loop):
+        nonlocal top, inside
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "transpose":
+                if in_loop:
+                    inside += 1
+                else:
+                    top += 1
+            if eqn.primitive.name == "pallas_call":
+                continue
+            deeper = in_loop or eqn.primitive.name in _LOOP_PRIMS
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if isinstance(sub, jcore.ClosedJaxpr):
+                        visit(sub.jaxpr, deeper)
+                    elif isinstance(sub, jcore.Jaxpr):
+                        visit(sub, deeper)
+
+    visit(closed.jaxpr, False)
+    return top, inside
+
+
+def check_jaxpr_no_per_exchange_transpose():
+    """The acceptance pin: the shard-resident whole-run program holds the
+    layout across every halo exchange — zero transposes inside the sweep
+    loop, exactly one round-trip (2 transposes) at the top — while the
+    round-trip engine transposes inside the loop on every sweep."""
+    spec = stencils.make("1d3p")
+    x = jnp.zeros((8 * 4 * 4 * 4,), jnp.float32)
+    mesh, decomp = multistep.mesh_for_shards((8,))
+    res_prog = multistep.make_run(spec, mesh, decomp, steps=6, k=2,
+                                  engine="pallas", sweep="resident",
+                                  vl=4, m=4)
+    top, inside = _transpose_census(jax.make_jaxpr(res_prog)(x))
+    assert inside == 0, f"resident: {inside} per-sweep transposes"
+    assert top == 2, f"resident: expected one layout round-trip, got {top}"
+    rt_prog = multistep.make_run(spec, mesh, decomp, steps=6, k=2,
+                                 engine="pallas", sweep="roundtrip",
+                                 vl=4, m=4)
+    rtop, rinside = _transpose_census(jax.make_jaxpr(rt_prog)(x))
+    assert rinside >= 2, f"roundtrip engine should transpose per sweep, " \
+        f"got {rinside} in-loop"
+    print(f"jaxpr pin ok: resident top={top} in-loop={inside}; "
+          f"roundtrip in-loop={rinside}")
+
+
+def check_program_and_mesh_caches():
+    spec = stencils.make("1d3p")
+    x = jnp.zeros((512,), jnp.float32)
+    m1, _ = multistep.mesh_for_shards((8,))
+    m2, _ = multistep.mesh_for_shards((8,))
+    assert m1 is m2, "mesh_for_shards must cache the Mesh"
+    multistep.distributed_run(spec, x, 4, k=2, engine="jnp", shards=(8,))
+    n = len(multistep._programs)
+    multistep.distributed_run(spec, x, 4, k=2, engine="jnp", shards=(8,))
+    assert len(multistep._programs) == n, "distributed_run re-jitted"
+    # jnp engine: tile/sweep fields are inert and must not fragment the
+    # cache; equal (kk, n_sweeps) schedules share one program
+    multistep.distributed_run(spec, x, 4, k=2, engine="jnp", shards=(8,),
+                              vl=4, m=4, sweep="roundtrip")
+    assert len(multistep._programs) == n, "inert fields fragmented cache"
+    multistep.distributed_run(spec, x, 6, k=2, engine="jnp", shards=(8,))
+    assert len(multistep._programs) == n + 1   # different schedule
+    assert len(multistep._programs) <= multistep._PROGRAMS_MAX
+    d1, _ = multistep.default_mesh(1)
+    d2, _ = multistep.default_mesh(1)
+    assert d1 is d2, "default_mesh must cache the Mesh"
+    print(f"program cache ok ({len(multistep._programs)} programs)")
+
+
+def check_auto_plan_selects_distributed():
+    """plan='auto' on the 8-device mesh: the pool holds distributed
+    candidates; a stubbed timer makes the shard-resident one win; the
+    winner round-trips through the cache with decomp intact and runs
+    bit-identically to the round-trip engine."""
+    from repro.core import autotune
+    from repro.core.api import StencilProblem
+
+    prob = StencilProblem("1d3p", (8 * 4 * 4 * 4,))
+    cands = autotune.candidate_plans(prob.spec, prob.shape)
+    dist = [p for p in cands if p.backend == "distributed"]
+    assert dist, "auto pool must enumerate distributed candidates"
+    assert {p.scheme for p in dist} >= {"fused", "transpose"}
+    assert {p.sweep for p in dist if p.scheme == "transpose"} \
+        == {"resident", "roundtrip"}
+    assert all(p.decomp == (8,) for p in dist)
+
+    with tempfile.TemporaryDirectory() as td:
+        cache_path = os.path.join(td, "plans.json")
+
+        def resident_dist_wins(fn, plan):
+            return 0.001 if (plan.backend, plan.scheme, plan.sweep) == \
+                ("distributed", "transpose", "resident") else 1.0
+
+        # stub timers never execute the candidate, so measuring the whole
+        # pool is free — every distributed candidate reaches the timer
+        res = autotune.tune(prob, cache_path=cache_path,
+                            timer=resident_dist_wins,
+                            calibrate_samples=True, max_measure=500)
+        assert res.plan.backend == "distributed", res.plan
+        assert res.plan.sweep == "resident" and res.plan.decomp == (8,)
+        measured = {(m["plan"]["backend"]) for m in res.measurements}
+        assert "distributed" in measured, measured
+
+        res2 = autotune.tune(prob, cache_path=cache_path,
+                             timer=resident_dist_wins)
+        assert res2.cached and res2.plan == res.plan
+
+        x = prob.init(0)
+        got = prob.run(x, 5, res2.plan)
+        import dataclasses
+        rt = prob.run(x, 5, dataclasses.replace(res2.plan,
+                                                sweep="roundtrip"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(rt))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(prob.reference(x, 5)),
+            rtol=5e-5, atol=5e-5)
+        # the calibration file landed beside the plan cache (this tiny
+        # grid feeds only the flops/collective terms — the served
+        # constants stay coherently static until bandwidth has samples)
+        from repro.roofline import calibrate
+        devs = calibrate._load_devices(calibrate.constants_path(cache_path))
+        entry = devs.get(calibrate.device_kind())
+        assert entry and entry["n_samples"] > 0
+    print("plan='auto' distributed selection ok")
 
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
 
-    # 1-D decomposition over 8 devices, k-step trapezoid sweeps
+    # 1-D decomposition over 8 devices, k-step trapezoid sweeps (jnp)
     check("1d3p", (8 * 64,), steps=4, k=2)
     check("1d3p", (8 * 64,), steps=4, k=4)
     check("1d5p", (8 * 64,), steps=2, k=2)
@@ -44,12 +234,40 @@ def main():
     # 3-D: 2-D process grid over the two leading axes
     check("3d7p", (16, 16, 16), steps=2, k=2)
 
-    # pallas local engine (1-D, transpose-layout pipelined kernel, whole-
-    # block halos, edge_mask=False)
-    check("1d3p", (8 * 4 * 4 * 4,), steps=4, k=2, engine="pallas", vl=4, m=4)
+    # remainder policies fused into the one program (jnp engine)
+    check("1d3p", (8 * 64,), steps=5, k=2, remainder="fused")
+    check("1d3p", (8 * 64,), steps=5, k=2, remainder="native",
+          shards=(8,))
+    check("2d5p", (32, 32), steps=5, k=4, remainder="native",
+          shards=(4, 2))
 
     # one-step exchange (k=1) baseline
     check("1d3p", (8 * 64,), steps=3, k=1)
+
+    # shard-resident pallas engine: parity matrix (the acceptance pin) —
+    # 1-D and 2-D decompositions, k>1, both remainder policies, ragged
+    # and divisible step counts
+    check_resident_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=4, k=2,
+                          remainder="fused", vl=4, m=4)
+    check_resident_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=5, k=2,
+                          remainder="fused", vl=4, m=4)
+    check_resident_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=5, k=4,
+                          remainder="native", vl=4, m=4)
+    check_resident_parity("1d5p", (8 * 4 * 4 * 8,), (8,), steps=3, k=2,
+                          remainder="native", vl=4, m=4)
+    check_resident_parity("2d5p", (32, 64), (8, 1), steps=5, k=2,
+                          remainder="native", vl=4, m=4, t0=4)
+    check_resident_parity("2d5p", (32, 64), (8, 1), steps=4, k=2,
+                          remainder="fused", vl=4, m=4, t0=4)
+
+    # legacy call shape (engine="pallas", no shards): default mesh, new
+    # resident default
+    check("1d3p", (8 * 4 * 4 * 4,), steps=4, k=2, engine="pallas",
+          vl=4, m=4)
+
+    check_jaxpr_no_per_exchange_transpose()
+    check_program_and_mesh_caches()
+    check_auto_plan_selects_distributed()
 
     # halo byte accounting sanity
     b = halo.halo_bytes_per_exchange((64,), 2, ["dx"], 4)

@@ -1,0 +1,209 @@
+"""Measured roofline calibration (`repro.roofline.calibrate`): the fitted
+per-device-kind constants, their monotone-ratchet fitting rule, the
+file-beside-the-plan-cache persistence, and the autotune wiring (every
+tuning run records its measured samples and later rankings use them)."""
+import json
+import os
+
+import pytest
+
+from repro.core import autotune
+from repro.core.api import StencilProblem
+from repro.roofline import calibrate
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+@pytest.fixture()
+def cache_path(tmp_path, monkeypatch):
+    monkeypatch.setattr(autotune, "_caches", {})
+    return str(tmp_path / "plans.json")
+
+
+def test_static_defaults_without_samples(tmp_path):
+    c = calibrate.load_constants(device="cpu",
+                                 path=str(tmp_path / "none.json"))
+    assert c.source == "static" and c.n_samples == 0
+    assert (c.peak_flops, c.hbm_bw, c.ici_bw) == (PEAK_FLOPS, HBM_BW,
+                                                  ICI_BW)
+
+
+def test_fit_is_max_observed_throughput(tmp_path):
+    path = str(tmp_path / "consts.json")
+    got = calibrate.record_samples(
+        [{"flops": 1e9, "bytes": 4e9, "coll_bytes": 0.0, "seconds": 1e-3},
+         {"flops": 8e9, "bytes": 2e9, "coll_bytes": 0.0, "seconds": 1e-3}],
+        device="cpu", path=path)
+    assert got.peak_flops == pytest.approx(8e12)     # max over samples
+    assert got.hbm_bw == pytest.approx(4e12)
+    assert got.ici_bw == ICI_BW                      # no coll samples yet
+    assert got.n_samples == 2 and got.source == "measured"
+    # the load path agrees with the return value
+    loaded = calibrate.load_constants(device="cpu", path=path)
+    assert loaded == got
+
+
+def test_ratchet_is_monotone(tmp_path):
+    """New samples can only RAISE fitted throughputs — a slow interpret
+    sample never loosens the bound."""
+    path = str(tmp_path / "consts.json")
+    calibrate.record_samples(
+        [{"flops": 8e9, "bytes": 2e9, "seconds": 1e-3}],
+        device="cpu", path=path)
+    after = calibrate.record_samples(
+        [{"flops": 1e3, "bytes": 1e3, "seconds": 1.0}],   # garbage-slow
+        device="cpu", path=path)
+    assert after.peak_flops == pytest.approx(8e12)
+    assert after.n_samples == 2
+    better = calibrate.record_samples(
+        [{"flops": 1e10, "bytes": 1e9, "seconds": 1e-3}],
+        device="cpu", path=path)
+    assert better.peak_flops == pytest.approx(1e13)
+
+
+def test_ici_fitted_only_from_collective_samples(tmp_path):
+    path = str(tmp_path / "consts.json")
+    got = calibrate.record_samples(
+        [{"flops": 1e9, "bytes": 1e9, "coll_bytes": 5e8, "seconds": 1e-3}],
+        device="cpu", path=path)
+    assert got.ici_bw == pytest.approx(5e11)
+
+
+def test_constants_file_beside_plan_cache(tmp_path):
+    cache_path = str(tmp_path / "sub" / "plans.json")
+    path = calibrate.constants_path(cache_path)
+    assert path == str(tmp_path / "sub" / calibrate.CONSTANTS_BASENAME)
+    # env var wins
+    os.environ[calibrate.CONSTANTS_ENV] = "/tmp/elsewhere.json"
+    try:
+        assert calibrate.constants_path(cache_path) == \
+            "/tmp/elsewhere.json"
+    finally:
+        del os.environ[calibrate.CONSTANTS_ENV]
+
+
+def test_file_format_and_corruption_tolerance(tmp_path):
+    path = str(tmp_path / "consts.json")
+    calibrate.record_samples([{"flops": 1e9, "bytes": 1e9,
+                               "seconds": 1e-3}], device="cpu", path=path)
+    raw = json.load(open(path))
+    assert raw["version"] == calibrate.CONSTANTS_VERSION
+    assert "cpu" in raw["devices"]
+    assert set(raw["devices"]["cpu"]) == {"peak_flops", "hbm_bw",
+                                          "ici_bw", "n_samples"}
+    # corrupt file: ignored on read, overwritten on next record
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert calibrate.load_constants(device="cpu", path=path).source \
+        == "static"
+    got = calibrate.record_samples([{"flops": 2e9, "bytes": 1e9,
+                                     "seconds": 1e-3}],
+                                   device="cpu", path=path)
+    assert got.source == "measured"
+
+
+def test_per_device_kind_entries_are_independent(tmp_path):
+    path = str(tmp_path / "consts.json")
+    calibrate.record_samples([{"flops": 1e9, "bytes": 1e9,
+                               "seconds": 1e-3}], device="cpu", path=path)
+    calibrate.record_samples([{"flops": 9e9, "bytes": 9e9,
+                               "seconds": 1e-3}], device="tpu_v5e",
+                             path=path)
+    assert calibrate.load_constants(device="cpu", path=path).peak_flops \
+        == pytest.approx(1e12)
+    assert calibrate.load_constants(device="tpu_v5e",
+                                    path=path).peak_flops \
+        == pytest.approx(9e12)
+
+
+def test_empty_samples_are_a_noop(tmp_path):
+    path = str(tmp_path / "consts.json")
+    got = calibrate.record_samples([], device="cpu", path=path)
+    assert got.source == "static"
+    assert not os.path.exists(path)
+
+
+# ---------------------------------------------------------------------------
+# autotune wiring
+# ---------------------------------------------------------------------------
+
+def test_tune_records_calibration_samples(cache_path):
+    """Every (real-clock) tuning run persists its measured samples beside
+    the plan cache; the fitted constants then feed later rankings.
+    (``calibrate_samples=True`` stands in for the real timer here; the
+    grid is large enough that the bandwidth term qualifies.)"""
+    prob = StencilProblem("1d3p", (1 << 22,))    # 32 MB working set
+    autotune.tune(prob, cache_path=cache_path,
+                  timer=lambda fn, p: 1e-3, calibrate_samples=True)
+    consts = calibrate.load_constants(device=autotune.device_kind(),
+                                      cache_path=cache_path)
+    assert consts.source == "measured"
+    assert consts.n_samples >= 1
+    # sanity: fitted throughput is modeled-terms / stubbed-time
+    assert consts.peak_flops > 0 and consts.hbm_bw > 0
+    path = calibrate.constants_path(cache_path)
+    assert os.path.exists(path)
+
+
+def test_stub_timers_never_poison_calibration(cache_path):
+    """An injected timer returns FAKE seconds — by default its samples
+    must NOT enter the persistent monotone-ratchet constants (they could
+    never be un-learned)."""
+    prob = StencilProblem("1d3p", (128,))
+    autotune.tune(prob, cache_path=cache_path,
+                  timer=lambda fn, p: 1e-12)        # absurd throughput
+    assert not os.path.exists(calibrate.constants_path(cache_path))
+    assert calibrate.load_constants(device=autotune.device_kind(),
+                                    cache_path=cache_path).source \
+        == "static"
+
+
+def test_cache_resident_problems_do_not_ratchet_hbm_bw(cache_path):
+    """A grid whose working set fits in cache measures CACHE bandwidth —
+    its samples must not inflate the fitted HBM term, and (the coherence
+    gate) a half-fitted model is never served: until the bandwidth term
+    has real samples the ranking keeps the fully-static constants."""
+    prob = StencilProblem("1d3p", (128,))        # 1 KB working set
+    autotune.tune(prob, cache_path=cache_path,
+                  timer=lambda fn, p: 1e-9,      # absurdly fast
+                  calibrate_samples=True)
+    # samples WERE persisted (flops only)...
+    devs = calibrate._load_devices(calibrate.constants_path(cache_path))
+    entry = devs[autotune.device_kind()]
+    assert entry["n_samples"] >= 1
+    assert entry["peak_flops"] > 0 and entry["hbm_bw"] == 0.0
+    # ...but the served constants stay coherently static
+    consts = calibrate.load_constants(device=autotune.device_kind(),
+                                      cache_path=cache_path)
+    assert consts.source == "static"
+    assert consts.hbm_bw == HBM_BW
+
+
+def test_half_fitted_constants_are_not_served(tmp_path):
+    """Mixing one fitted peak with one static peak would skew every
+    ranking toward the still-static term — load_constants serves fitted
+    values only once BOTH compute and memory terms have samples."""
+    path = str(tmp_path / "consts.json")
+    got = calibrate.record_samples(
+        [{"flops": 1e9, "bytes": 0.0, "seconds": 1e-3}],
+        device="cpu", path=path)
+    assert got.source == "static"
+    got = calibrate.record_samples(
+        [{"flops": 0.0, "bytes": 4e9, "seconds": 1e-3}],
+        device="cpu", path=path)
+    assert got.source == "measured"              # both terms now fitted
+    assert got.peak_flops == pytest.approx(1e12)
+    assert got.hbm_bw == pytest.approx(4e12)
+
+
+def test_tune_ranking_survives_fitted_constants(cache_path):
+    """After calibration lands, a second tune (force=True) still runs and
+    picks a winner — fitted constants change the ranking, never the
+    correctness of the search."""
+    prob = StencilProblem("1d3p", (128,))
+    r1 = autotune.tune(prob, cache_path=cache_path,
+                       timer=lambda fn, p: 1e-3, calibrate_samples=True)
+    r2 = autotune.tune(prob, cache_path=cache_path,
+                       timer=lambda fn, p: 1e-3, calibrate_samples=True,
+                       force=True)
+    assert r1.plan is not None and r2.plan is not None
+    assert r2.n_measured >= 1

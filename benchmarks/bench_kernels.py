@@ -20,7 +20,10 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
     host (CI forces 8 via ``--xla_force_host_platform_device_count``) the
     artifact gains a ``distributed`` section timing the SHARD-resident
     engine (one transpose per run, halos exchanged in layout) against the
-    per-exchange round-trip engine on the same mesh.
+    per-exchange round-trip engine on the same mesh, plus a
+    ``minor_axis_vs_axis0`` 2-D-mesh smoke comparing axis-0, minor-axis
+    (lane-carry ghost codec) and 2-D-mesh decompositions of one 2-D
+    problem.
 """
 from __future__ import annotations
 
@@ -119,7 +122,58 @@ def _smoke_distributed(steps_list) -> dict:
         print(f"{row['name']}: shard_roundtrip={rt * 1e6:.0f}us "
               f"shard_resident={res * 1e6:.0f}us speedup={rt / res:.2f}x")
         rows.append(row)
-    return {"n_devices": n_dev, "shards": [n_dev], "results": rows}
+    # the virtual-halo overhead fix, on record: pallas grid steps per
+    # resident k-sweep with the halo-aware kernels vs what the wrapped-
+    # periodic variant used to run (2p extra virtual blocks per sweep —
+    # the per-sweep compute a tiny nb-blocks shard actually pays)
+    blk = kw["vl"] * kw["m"]
+    nb_local = shape[0] // n_dev // blk
+    gb = sk.sweep_halo_blocks(spec.r, kw["k"], blk)
+    grid_info = {"shard_blocks": nb_local,
+                 "halo_aware_grid": nb_local + 2 * gb + kw["k"],
+                 "virtual_halo_grid": nb_local + 4 * gb + kw["k"]}
+    print(f"dist sweep grid: halo-aware={grid_info['halo_aware_grid']} "
+          f"(virtual-halo variant ran {grid_info['virtual_halo_grid']})")
+    return {"n_devices": n_dev, "shards": [n_dev], "results": rows,
+            "sweep_grid": grid_info,
+            "minor_axis_vs_axis0": _smoke_minor_axis(steps_list, n_dev)}
+
+
+def _smoke_minor_axis(steps_list, n_dev: int) -> dict:
+    """Axis-0 vs minor-axis vs 2-D-mesh decompositions of the SAME 2-D
+    problem on the shard-resident engine — the lane-carry ghost codec's
+    comparison artifact: same global grid, same (k, vl, m, t0), three
+    meshes.  The hard-coded shape only decomposes evenly (incl. the
+    t0=2 pipeline tile on the axis-0 mesh) at 4 or 8 devices — CI
+    forces 8; other device counts skip with a reason rather than
+    crashing the whole smoke artifact."""
+    if n_dev not in (4, 8):
+        return {"skipped": f"needs a 4- or 8-device host, have {n_dev}",
+                "n_devices": n_dev, "results": []}
+    from repro.distributed import multistep as dms
+    spec = stencils.make("2d5p")
+    shape = (16, n_dev * 32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                    jnp.float32)
+    meshes = {"axis0": (n_dev, 1), "minor": (1, n_dev),
+              "mesh2d": (2, n_dev // 2)}
+    kw = dict(k=2, engine="pallas", sweep="resident", vl=4, m=4, t0=2)
+    rows = []
+    for steps in steps_list:
+        row = {"name": f"dist2d/2d5p/{'x'.join(map(str, shape))}"
+                       f"/{n_dev}dev/steps{steps}", "steps": steps}
+        for label, shards in meshes.items():
+            t = bench(lambda s=shards: dms.distributed_run(
+                spec, x, steps, shards=s, **kw),
+                warmup=1, iters=3, min_time_s=0.05)
+            row[f"{label}_us"] = t * 1e6
+        row["minor_vs_axis0"] = row["axis0_us"] / row["minor_us"]
+        print(f"{row['name']}: axis0={row['axis0_us']:.0f}us "
+              f"minor={row['minor_us']:.0f}us "
+              f"mesh2d={row['mesh2d_us']:.0f}us "
+              f"minor/axis0={row['minor_vs_axis0']:.2f}x")
+        rows.append(row)
+    return {"n_devices": n_dev, "meshes": meshes, "results": rows}
 
 
 def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:

@@ -13,9 +13,11 @@ over **every execution backend at once**:
      each backend has explicit legality gates (:func:`pallas_plan_legal`:
      block-shape divisibility, halo-fits-block, pipeline-tile
      divisibility, sweep-engine validity; :func:`distributed_plan_legal`:
-     shard divisibility, halo-fits-shard, ≥2 devices, axis-0-only
-     decomposition for the shard-resident Pallas engine) instead of
-     ad-hoc per-branch filtering.  Pallas candidates fan out along a
+     shard divisibility, halo-fits-shard, ≥2 devices, local lane-block
+     divisibility for the shard-resident Pallas engine — which, with the
+     lane-carry ghost codec, accepts ANY mesh decomposition including
+     minor-axis and 2-D+ meshes) instead of ad-hoc per-branch
+     filtering.  Pallas candidates fan out along a
      ``sweep`` axis — ``resident`` (the layout-resident engine: one
      program per run, no per-sweep pad/transpose round-trips) vs
      ``roundtrip`` (legacy per-sweep wrap-pad/crop) — and the roofline
@@ -105,18 +107,17 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import inspect
-import json
 import logging
 import math
 import os
-import tempfile
+import threading
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stencils
+from repro.core import locked_json, stencils
 from repro.core.api import StencilPlan
 from repro.core.timing import bench
 from repro.roofline import calibrate
@@ -285,10 +286,19 @@ def plan_from_dict(d: dict) -> StencilPlan:
 # ---------------------------------------------------------------------------
 
 class PlanCache:
-    """On-disk JSON plan cache; load-once, explicit save, atomic write."""
+    """On-disk JSON plan cache; load-once, explicit save, atomic write.
+
+    Thread-safe within the process: ``get_cache`` hands the same
+    instance to ``warm_async``'s background tuner and request threads,
+    so every access to the entry/dirty state goes through ``_tlock``
+    (the cross-PROCESS discipline is the file lock in
+    :mod:`repro.core.locked_json`).  A ``put()`` racing a ``save()``
+    is never lost: only keys whose written record is still current are
+    marked clean."""
 
     def __init__(self, path: str | None = None):
         self.path = path or default_cache_path()
+        self._tlock = threading.Lock()
         self._entries: dict[str, dict] = {}
         self._mtime: int | None = None
         self._dirty: set[str] = set()      # put() since last load/save
@@ -299,12 +309,11 @@ class PlanCache:
         self._mtime = None
         try:
             self._mtime = os.stat(self.path).st_mtime_ns
-            with open(self.path) as f:
-                raw = json.load(f)
-            if raw.get("version") == CACHE_VERSION:
-                self._entries = dict(raw.get("entries", {}))
-        except (OSError, ValueError):
-            pass
+        except OSError:
+            return
+        raw = locked_json.read_json(self.path)
+        if raw is not None and raw.get("version") == CACHE_VERSION:
+            self._entries = dict(raw.get("entries", {}))
 
     def refresh(self):
         """Re-read the file if another process wrote it since our last
@@ -315,44 +324,40 @@ class PlanCache:
             mtime = os.stat(self.path).st_mtime_ns
         except OSError:
             return
-        if mtime == self._mtime:
-            return
-        dirty = {k: self._entries[k] for k in self._dirty
-                 if k in self._entries}
-        self._load()
-        self._entries.update(dirty)
-
-    def get(self, key: str) -> dict | None:
-        return self._entries.get(key)
-
-    def put(self, key: str, record: dict):
-        self._entries[key] = record
-        self._dirty.add(key)
-
-    def save(self):
-        # read-merge-write under an exclusive lock: concurrent tuners
-        # (serving host + bench, say) sharing the default path must not
-        # erase each other's entries.  Our unsaved entries win on key
-        # collision; the file wins for everything else.
-        d = os.path.dirname(os.path.abspath(self.path))
-        os.makedirs(d, exist_ok=True)
-        with open(self.path + ".lock", "w") as lk:
-            try:
-                import fcntl
-                fcntl.flock(lk, fcntl.LOCK_EX)
-            except (ImportError, OSError):
-                pass                        # best-effort on odd platforms
-            merged: dict[str, dict] = {}
-            try:
-                with open(self.path) as f:
-                    raw = json.load(f)
-                if raw.get("version") == CACHE_VERSION:
-                    merged = dict(raw.get("entries", {}))
-            except (OSError, ValueError):
-                pass
+        with self._tlock:
+            if mtime == self._mtime:
+                return
             dirty = {k: self._entries[k] for k in self._dirty
                      if k in self._entries}
-            merged.update(dirty)
+            self._load()
+            self._entries.update(dirty)
+
+    def get(self, key: str) -> dict | None:
+        with self._tlock:
+            return self._entries.get(key)
+
+    def put(self, key: str, record: dict):
+        with self._tlock:
+            self._entries[key] = record
+            self._dirty.add(key)
+
+    def save(self):
+        # read-merge-write under an exclusive file lock
+        # (core/locked_json.py): concurrent tuners (serving host + bench,
+        # say) sharing the default path must not erase each other's
+        # entries.  Our unsaved entries win on key collision; the file
+        # wins for everything else.
+        written: dict[str, dict] = {}     # what THIS save persisted
+        payload_entries: dict[str, dict] = {}
+
+        def merge(raw: dict | None) -> dict:
+            merged: dict[str, dict] = {}
+            if raw is not None and raw.get("version") == CACHE_VERSION:
+                merged = dict(raw.get("entries", {}))
+            with self._tlock:
+                written.update({k: self._entries[k] for k in self._dirty
+                                if k in self._entries})
+            merged.update(written)
             # prune entries tuned against retired code: their keys can
             # never match again (plan_key embeds the fingerprint), so
             # keeping them only grows the file without bound across code
@@ -361,24 +366,27 @@ class PlanCache:
             fp = code_fingerprint()
             merged = {k: v for k, v in merged.items()
                       if v.get("fingerprint") in (None, fp)}
-            self._entries = merged
-            payload = {"version": CACHE_VERSION, "entries": self._entries}
-            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(payload, f, indent=1)
-                os.replace(tmp, self.path)
-            except BaseException:
+            payload_entries.update(merged)
+            return {"version": CACHE_VERSION, "entries": merged}
+
+        def snapshot():       # file lock still held: no cross-proc races
+            with self._tlock:
+                # adopt the persisted view, but a put() that raced this
+                # save stays in memory AND stays dirty — only keys whose
+                # written record is still current go clean
+                fresh = {k: self._entries[k] for k in self._dirty
+                         if k in self._entries}
+                self._entries = dict(payload_entries)
+                self._entries.update(fresh)
+                self._dirty = {k for k in self._dirty
+                               if self._entries.get(k)
+                               is not written.get(k)}
                 try:
-                    os.unlink(tmp)
+                    self._mtime = os.stat(self.path).st_mtime_ns
                 except OSError:
                     pass
-                raise
-            self._dirty.clear()
-            try:
-                self._mtime = os.stat(self.path).st_mtime_ns
-            except OSError:
-                pass
+
+        locked_json.locked_update(self.path, merge, on_written=snapshot)
 
     def __len__(self):
         return len(self._entries)
@@ -497,15 +505,18 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
     * halo-fits-shard: the k·r ghost ring is sliced from the *neighbor's*
       local block, so ``k·r <= local extent`` along every decomposed
       axis;
-    * ``engine="pallas"`` additionally requires an axis-0-only
-      decomposition (mid/minor axes stay shard-local so the kernels'
-      periodic rolls and lane carries remain globally correct), a local
-      minor extent tiling into (vl, m) blocks with the halo inside one
-      block row, and — n-D — a pipeline tile ``t0`` dividing the local
-      leading extent with the whole-tile halo inside the shard.  The
-      ``sweep`` axis (resident | roundtrip) is validated here and
+    * ``engine="pallas"`` additionally requires the LOCAL minor extent
+      to tile into (vl, m) lane blocks with the halo inside one block
+      row (``m >= r``, ``vl >= r``) and — n-D — a pipeline tile ``t0``
+      dividing the local leading extent.  ANY mesh decomposition is
+      legal beyond that: the pipelined axis exchanges whole t0-row
+      tiles, mid axes raw rows, and the minor axis runs the lane-carry
+      ghost codec (``halo.exchange_minor``) — the per-axis halo-fits
+      checks above already guarantee every whole-unit rounding fits the
+      shard (the exchanged width rounds up within a divisible extent).
+      The ``sweep`` axis (resident | roundtrip) is validated here and
       interchangeable wherever the engine is legal (both exchange the
-      same whole-block ghost rings).
+      same valid ghost cells).
     """
     if n_devices is None:
         n_devices = jax.device_count()
@@ -525,35 +536,32 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
         return True
     if engine != "pallas" or sweep not in ("resident", "roundtrip"):
         return False
-    if decomp[0] < 2 or any(s > 1 for s in decomp[1:]):
-        return False
     n_minor = local[-1]
     if vl < r or m < r or n_minor % (vl * m):
         return False
-    if spec.ndim == 1:
-        blk = vl * m
-        if -(-(k * r) // blk) > local[0] // blk:   # halo blocks fit shard
-            return False
-    else:
-        if t0 is None or t0 < r or local[0] % t0:
-            return False
-        if -(-(k * r) // t0) * t0 > local[0]:      # halo tiles fit shard
-            return False
+    if spec.ndim > 1 and (t0 is None or t0 < r or local[0] % t0):
+        return False
     return True
 
 
 def _decomps_for(ndim: int, n_devices: int) -> list[tuple[int, ...]]:
-    """Candidate mesh decompositions: every factorization of the device
-    count over the first two spatial axes (1-D: the single axis)."""
+    """Candidate mesh decompositions: every ordered factorization of the
+    device count over ALL spatial axes — axis-0, mid-axis, minor-axis
+    and 2-D+ meshes alike (the lane-carry ghost codec makes every axis
+    exchangeable in layout, so none is excluded a priori)."""
     if n_devices < 2:
         return []
-    if ndim == 1:
-        return [(n_devices,)]
-    out = []
-    for a in range(1, n_devices + 1):
-        if n_devices % a:
-            continue
-        out.append((a, n_devices // a) + (1,) * (ndim - 2))
+    out: list[tuple[int, ...]] = []
+
+    def rec(prefix: tuple[int, ...], rem: int):
+        if len(prefix) == ndim - 1:
+            out.append(prefix + (rem,))
+            return
+        for a in range(1, rem + 1):
+            if rem % a == 0:
+                rec(prefix + (a,), rem // a)
+
+    rec((), n_devices)
     return out
 
 
@@ -562,8 +570,10 @@ def _distributed_candidates(spec: stencils.StencilSpec,
                             n_devices: int | None = None,
                             budget_gate: bool = False) -> list[StencilPlan]:
     """The (mesh decomposition × k × engine × sweep) distributed axis of
-    the unified pool.  Local engines: "jnp" (any decomposition) and the
-    shard-resident/roundtrip Pallas pair (axis-0 decompositions)."""
+    the unified pool.  Local engines: "jnp" and the shard-resident /
+    roundtrip Pallas pair — both over ANY mesh decomposition (minor-axis
+    and 2-D+ meshes included; the lane-carry ghost codec exchanges the
+    folded axis in layout)."""
     if n_devices is None:
         n_devices = jax.device_count()
     if n_devices < 2:
@@ -581,10 +591,8 @@ def _distributed_candidates(spec: stencils.StencilSpec,
                                 decomp=decomp), steps, k)
             if not pallas_ok:
                 continue
-            # pallas engines need an axis-0-only decomposition — skip the
-            # (vl, m) × t0 × sweep fan-out for meshes the gate rejects
-            if decomp[0] < 2 or any(s > 1 for s in decomp[1:]):
-                continue
+            # pallas engines: tiles are picked from the LOCAL extents —
+            # the minor axis may itself be decomposed (lane-carry codec)
             n_minor = shape[-1] // decomp[-1]
             if spec.ndim == 1:
                 t0s: list[int | None] = [None]

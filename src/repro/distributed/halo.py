@@ -7,12 +7,27 @@ ring of width w to both neighbors along every decomposed axis via
 already-extended array so corner/edge ghosts are captured without extra
 diagonal messages — the standard two-phase trick).
 
-The same primitive serves the shard-RESIDENT layout path: a transpose-layout
-array (nb, m, vl) keeps the decomposed 1-D axis as its *block* axis (axis 0),
-and an n-D layout (n0, *mid, nb, m, vl) keeps the pipelined axis as axis 0 —
-so :func:`exchange_blocks` exchanges ghost rings as whole (vl·m)-element
-blocks / whole pipeline tiles without ever leaving the layout (the blocks a
-``ppermute`` ships are bit-identical to the natural-layout ring, permuted).
+The same primitives serve the shard-RESIDENT layout path, one per layout
+regime of the decomposed axis:
+
+  * **block/tile axes** (1-D block axis, n-D pipelined axis 0, n-D mid
+    axes): the layout transform leaves these axes whole, so
+    :func:`exchange_blocks` / :func:`exchange_axis` ship ghost rings as
+    contiguous slices — whole (vl·m)-element blocks, whole pipeline
+    tiles, or raw rows — without ever leaving the layout;
+  * **the minor axis** (the axis folded INTO the (m, vl) lane layout):
+    ghost cells straddle vector-lane boundaries — the ``width`` boundary
+    elements occupy the trailing rows of the trailing lanes of the edge
+    block (element g sits at (row g % m, lane (g % vl·m) // m)) — so
+    :func:`exchange_minor` runs the lane-carry ghost codec:
+    :func:`gather_minor_strip` collects them into ONE contiguous strip,
+    the ``ppermute`` ships exactly those ``width`` elements (not whole
+    blocks), and :func:`scatter_minor_strip` lands the neighbor's strip
+    in whole ghost *blocks* flush against the shard (unused lanes
+    zero-filled; a k-step sweep's edge corruption never crosses the
+    valid strip into retained cells, and the ghost blocks are cropped).
+    The resident array is never de-transposed — gather and scatter are
+    static index maps on the layout.
 
 Global BC is periodic (the process ring wraps), matching the core oracle.
 """
@@ -60,6 +75,102 @@ def exchange_blocks(t: jax.Array, nblocks: int, axis_name: str,
     bit-identical to exchanging the natural-layout ghost ring and
     re-laying it out — with zero transposes."""
     return exchange_axis(t, nblocks, 0, axis_name, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# minor-axis lane-carry ghost codec
+# ---------------------------------------------------------------------------
+
+def _layout_coords(offs: np.ndarray, m: int, vl: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Transpose-layout addressing (core/layouts.py): flat minor index g
+    lives at block g // (vl·m), row g % m, lane (g % (vl·m)) // m —
+    consecutive elements advance the ROW, so a boundary strip straddles
+    lane (and block) boundaries instead of being a contiguous slice.
+    The single source of truth for BOTH halves of the ghost codec: the
+    gather and the scatter must agree on this mapping exactly."""
+    blk = vl * m
+    return offs // blk, (offs % blk) % m, (offs % blk) // m
+
+
+def _minor_strip_coords(n_minor: int, width: int, m: int, vl: int,
+                        side: str) -> tuple[np.ndarray, np.ndarray,
+                                            np.ndarray]:
+    """Static (block, row, lane) coordinates of the ``width`` boundary
+    elements of the flattened minor axis of an (..., nb, m, vl) layout
+    array (``side="head"``: the first ``width`` elements, ``"tail"``: the
+    last)."""
+    if side == "tail":
+        offs = np.arange(n_minor - width, n_minor)
+    elif side == "head":
+        offs = np.arange(width)
+    else:
+        raise ValueError(f"unknown side {side!r}")
+    return _layout_coords(offs, m, vl)
+
+
+def gather_minor_strip(t: jax.Array, width: int, side: str) -> jax.Array:
+    """Lane-carry gather: collect the ``width`` boundary elements of the
+    layout-resident minor axis — scattered over trailing rows of trailing
+    lanes — into ONE contiguous (..., width) strip, ready to ppermute.
+    A static gather on the resident array; no de-transpose."""
+    nb, m, vl = t.shape[-3:]
+    b, s, j = _minor_strip_coords(nb * vl * m, width, m, vl, side)
+    return t[..., b, s, j]
+
+
+def scatter_minor_strip(strip: jax.Array, m: int, vl: int,
+                        side: str) -> jax.Array:
+    """Inverse codec half: scatter a ppermuted ghost strip into whole
+    (m, vl) ghost BLOCKS (..., gb, m, vl), positioned flush against the
+    shard — ``side="left"`` ghosts (a left neighbor's tail) occupy the
+    LAST ``width`` minor offsets of the ghost region, ``"right"`` (a
+    right neighbor's head) the first — remaining lanes zero-filled.  The
+    zeros sit >= ``width`` elements from the shard, so a k-step sweep's
+    edge corruption (<= k·r <= width by the caller's contract) never
+    reaches retained cells; it dies inside the cropped ghost blocks."""
+    width = strip.shape[-1]
+    blk = vl * m
+    gb = -(-width // blk)
+    if side == "left":
+        start = gb * blk - width
+    elif side == "right":
+        start = 0
+    else:
+        raise ValueError(f"unknown side {side!r}")
+    b, s, j = _layout_coords(np.arange(start, start + width), m, vl)
+    out = jnp.zeros(strip.shape[:-1] + (gb, m, vl), strip.dtype)
+    return out.at[..., b, s, j].set(strip)
+
+
+def exchange_minor(t: jax.Array, width: int, axis_name: str,
+                   n_shards: int) -> jax.Array:
+    """Halo-extend a layout-resident array along the axis folded into the
+    (nb, m, vl) lane layout: gather the ``width``-element boundary strips
+    (lane-carry gather), ship exactly those strips by ring ``ppermute``
+    (not whole blocks — the traffic is the same ``width`` cells the
+    natural-layout exchange would ship), scatter them into ghost blocks
+    and concatenate on the block axis (axis -3).  The sweep kernels then
+    read the strips straight out of the extended resident array."""
+    nb, m, vl = t.shape[-3:]
+    tail = gather_minor_strip(t, width, "tail")
+    head = gather_minor_strip(t, width, "head")
+    if n_shards == 1:
+        left_strip, right_strip = tail, head     # periodic wrap is local
+    else:
+        fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+        left_strip = lax.ppermute(tail, axis_name, fwd)
+        right_strip = lax.ppermute(head, axis_name, bwd)
+    left = scatter_minor_strip(left_strip, m, vl, "left")
+    right = scatter_minor_strip(right_strip, m, vl, "right")
+    return jnp.concatenate([left, t, right], axis=-3)
+
+
+def crop_minor_blocks(t: jax.Array, gblocks: int) -> jax.Array:
+    """Drop ``gblocks`` ghost blocks per side of the block axis (-3)."""
+    ax = t.ndim - 3
+    return lax.slice_in_dim(t, gblocks, t.shape[ax] - gblocks, axis=ax)
 
 
 def exchange(xl: jax.Array, width: int, decomp: Sequence[str | None],

@@ -17,22 +17,33 @@ Local engines (engine= below):
 
       - ``resident`` (the fast path): each shard transposes into the
         (nb, m, vl) layout ONCE per run.  Halos are exchanged *in
-        layout* — the ghost ring ships as whole (vl·m)-element blocks
-        (1-D: block-axis slices; n-D: whole pipeline tiles along axis 0)
-        via ``lax.ppermute`` — and each k-step sweep runs the
-        wrapped-grid periodic kernels ``stencil{1d,_nd}_sweep_periodic``
-        straight on the halo-extended resident array (their BlockSpec
-        index maps wrap the halo *reads*, so no pad copy materializes;
-        the wrap corruption lies inside the exchanged ghost blocks,
-        which are cropped).  One transpose in + one transpose out per
-        RUN — zero per-exchange transpose/pad round-trips (jaxpr-pinned
-        in tests/_distributed_check.py).
+        layout*, per layout regime of the decomposed axis: the n-D
+        pipelined axis ships whole t0-row tiles and mid axes raw rows
+        (``halo.exchange_blocks`` / ``exchange_axis`` — contiguous
+        slices of the layout), while the minor axis — the axis folded
+        into the (m, vl) lane layout, where ghost cells straddle
+        vector-lane boundaries (1-D decompositions land here too) —
+        runs the lane-carry ghost codec ``halo.exchange_minor``:
+        gather the k·r boundary elements into a contiguous strip,
+        ppermute exactly that strip, scatter it into ghost blocks flush
+        against the shard.  Each k-step sweep then runs the halo-aware
+        kernels ``stencil{1d,_nd}_sweep_halo`` straight on the
+        ghost-extended resident array — no virtual 2p wrap halo (the
+        ghost blocks ARE the periodicity), no pad copy — falling back
+        to the wrapped-grid ``stencil_nd_sweep_periodic`` only when
+        axis 0 itself is un-decomposed and must wrap globally.  Ghost
+        blocks/rows are cropped after the sweep.  One transpose in +
+        one transpose out per RUN — zero per-exchange transpose/pad
+        round-trips (jaxpr-pinned in tests/_distributed_check.py).
       - ``roundtrip`` (legacy): every sweep exchanges the halo in the
-        natural layout, transposes, runs the dirichlet multistep kernel
+        natural layout (whole blocks/tiles on block axes, whole-block
+        widths on the minor axis so the extended extent stays layout-
+        divisible), transposes, runs the dirichlet multistep kernel
         with ``edge_mask=False``, untransposes and crops — one layout
         round-trip per exchange.  Kept as the bit-parity oracle: both
-        renderings feed identical block contents to identical kernel
-        arithmetic, so their outputs are bit-identical.
+        renderings feed identical valid cells to identical kernel
+        arithmetic (the resident codec's zero-filled ghost lanes only
+        ever influence cropped cells), so outputs are bit-identical.
 
 Whole runs execute as ONE jitted shard_map program (transpose once →
 ``lax.fori_loop`` over k-step sweeps → remainder policy fused in →
@@ -196,49 +207,122 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
         from repro.kernels import stencil_kernels as sk
         if sweep not in ("resident", "roundtrip"):
             raise ValueError(f"unknown sweep engine {sweep!r}")
-        aname = decomp[0]
-        if aname is None or any(d is not None for d in decomp[1:]):
-            raise ValueError("pallas engines require an axis-0-only "
-                             f"decomposition, got {decomp}")
-        nsh = _axis_shards(mesh, aname)
+        if all(a is None for a in decomp):
+            raise ValueError("pallas engines need at least one decomposed "
+                             f"axis, got {decomp}")
+        nd = spec.ndim
+        nshards = [1 if a is None else _axis_shards(mesh, a) for a in decomp]
+        kmax = max(kk for kk, _ in chunks)
+
+        def _validate(local_shape):
+            # the only genuinely unsupported shapes: halo thicker than the
+            # shard (the ghost strip must come from ONE neighbor), and a
+            # shard whose minor extent admits no (vl, m) lane block —
+            # everything else, any axis, any mesh rank, is exchangeable
+            # (distributed_plan_legal mirrors these checks, so plan="auto"
+            # never dispatches a shape that raises here)
+            for ax, (nl, s) in enumerate(zip(local_shape, nshards)):
+                if s > 1 and kmax * r > nl:
+                    raise ValueError(
+                        f"halo k*r = {kmax * r} exceeds the local extent "
+                        f"{nl} of axis {ax} under decomp {decomp} (shard "
+                        "too small for the sweep depth)")
+            try:
+                return kops.pick_tile(spec, local_shape, vl, m, t0)
+            except ValueError as e:
+                raise ValueError(
+                    f"decomp {decomp} leaves shard shape "
+                    f"{tuple(local_shape)} unsupported by the pallas "
+                    f"engines: {e}") from e
 
         def run(xl):
-            vl_, m_, t0_ = kops.pick_tile(spec, xl.shape, vl, m, t0)
-            # halo unit along the exchanged axis: whole (vl·m) blocks in
-            # 1-D, whole t0-row pipeline tiles in n-D
-            unit = vl_ * m_ if spec.ndim == 1 else t0_
+            vl_, m_, t0_ = _validate(xl.shape)
+            blk = vl_ * m_
 
             if sweep == "resident":
                 def sweep_fn(t, kk):
-                    p = sk.sweep_halo_blocks(r, kk, unit)
-                    w = p if spec.ndim == 1 else p * t0_
-                    ext = halo.exchange_blocks(t, w, aname, nsh)
-                    if spec.ndim == 1:
-                        out = sk.stencil1d_sweep_periodic(
-                            spec, ext, kk, interpret=interpret)
+                    w = kk * r
+                    w0 = gb = 0
+                    if nd > 1 and nshards[0] > 1:      # whole t0-row tiles
+                        w0 = sk.sweep_halo_blocks(r, kk, t0_) * t0_
+                        t = halo.exchange_blocks(t, w0, decomp[0],
+                                                 nshards[0])
+                    for ax in range(1, nd - 1):        # mid axes: raw rows
+                        if nshards[ax] > 1:
+                            t = halo.exchange_axis(t, w, ax, decomp[ax],
+                                                   nshards[ax])
+                    if nshards[-1] > 1:                # lane-carry codec
+                        gb = sk.sweep_halo_blocks(r, kk, blk)
+                        t = halo.exchange_minor(t, w, decomp[-1],
+                                                nshards[-1])
+                    if nd == 1:
+                        out = sk.stencil1d_sweep_halo(
+                            spec, t, kk, w, interpret=interpret)
+                    elif nshards[0] > 1:
+                        out = sk.stencil_nd_sweep_halo(
+                            spec, t, kk, t0_, w0, interpret=interpret)
                     else:
+                        # axis 0 un-decomposed: it must wrap globally —
+                        # only here do the 2p virtual wrap tiles remain
                         out = sk.stencil_nd_sweep_periodic(
-                            spec, ext, kk, t0_, interpret=interpret)
-                    return lax.slice_in_dim(out, w, out.shape[0] - w,
-                                            axis=0)
+                            spec, t, kk, t0_, interpret=interpret)
+                    if gb:
+                        out = halo.crop_minor_blocks(out, gb)
+                    for ax in range(nd - 2, 0, -1):
+                        if nshards[ax] > 1:
+                            out = lax.slice_in_dim(
+                                out, w, out.shape[ax] - w, axis=ax)
+                    if w0:
+                        out = lax.slice_in_dim(out, w0, out.shape[0] - w0,
+                                               axis=0)
+                    return out
                 t = layouts.to_transpose_layout(xl, vl_, m_)
                 t = _loop(t, sweep_fn)
                 return layouts.from_transpose_layout(t, vl_, m_)
 
             def sweep_fn(v, kk):               # legacy per-sweep round-trip
-                w = sk.sweep_halo_blocks(r, kk, unit) * unit
-                ext = halo.exchange_axis(v, w, 0, aname, nsh)
+                w = kk * r
+                w0 = wm = 0
+                ext = v
+                if nd > 1 and nshards[0] > 1:
+                    w0 = sk.sweep_halo_blocks(r, kk, t0_) * t0_
+                    ext = halo.exchange_axis(ext, w0, 0, decomp[0],
+                                             nshards[0])
+                for ax in range(1, nd - 1):
+                    if nshards[ax] > 1:
+                        ext = halo.exchange_axis(ext, w, ax, decomp[ax],
+                                                 nshards[ax])
+                if nshards[-1] > 1:
+                    # whole-block widths keep the extended minor extent
+                    # divisible by vl·m for the per-sweep layout round-trip
+                    wm = sk.sweep_halo_blocks(r, kk, blk) * blk
+                    ext = halo.exchange_axis(ext, wm, nd - 1, decomp[-1],
+                                             nshards[-1])
                 t = layouts.to_transpose_layout(ext, vl_, m_)
-                if spec.ndim == 1:
+                if nd == 1:
                     out = sk.stencil1d_multistep(spec, t, kk,
                                                  interpret=interpret,
                                                  edge_mask=False)
-                else:
+                elif nshards[0] > 1:
                     out = sk.stencil_nd_multistep(spec, t, kk, t0_,
                                                   interpret=interpret,
                                                   edge_mask=False)
+                else:
+                    out = sk.stencil_nd_sweep_periodic(spec, t, kk, t0_,
+                                                       interpret=interpret)
                 flat = layouts.from_transpose_layout(out, vl_, m_)
-                return lax.slice_in_dim(flat, w, flat.shape[0] - w, axis=0)
+                if wm:
+                    flat = lax.slice_in_dim(flat, wm,
+                                            flat.shape[nd - 1] - wm,
+                                            axis=nd - 1)
+                for ax in range(nd - 2, 0, -1):
+                    if nshards[ax] > 1:
+                        flat = lax.slice_in_dim(flat, w,
+                                                flat.shape[ax] - w, axis=ax)
+                if w0:
+                    flat = lax.slice_in_dim(flat, w0, flat.shape[0] - w0,
+                                            axis=0)
+                return flat
             return _loop(xl, sweep_fn)
     else:
         raise ValueError(f"unknown engine {engine!r}")

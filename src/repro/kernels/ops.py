@@ -142,14 +142,14 @@ def stencil_multistep_periodic(spec: StencilSpec, x: jax.Array, k: int,
     r = spec.r
     if spec.ndim == 1:
         blk = vl * m
-        pad = -(-(k * r) // blk) * blk          # whole blocks covering k*r
+        pad = sk.sweep_halo_blocks(r, k, blk) * blk   # whole blocks ⊇ k*r
         xp = jnp.pad(x, [(pad, pad)], mode="wrap")
         t = sk.block_transpose(xp, vl, m, interpret=interpret)
         out = sk.stencil1d_multistep(spec, t, k, interpret=interpret,
                                      edge_mask=False)
         flat = sk.block_untranspose(out, vl, m, interpret=interpret)
         return jax.lax.slice_in_dim(flat, pad, pad + x.shape[-1], axis=0)
-    pad0 = -(-(k * r) // t0) * t0               # whole pipeline tiles
+    pad0 = sk.sweep_halo_blocks(r, k, t0) * t0  # whole pipeline tiles
     xp = jnp.pad(x, [(pad0, pad0)] + [(0, 0)] * (x.ndim - 1), mode="wrap")
     t = layouts.to_transpose_layout(xp, vl, m)
     out = sk.stencil_nd_multistep(spec, t, k, t0, interpret=interpret)

@@ -205,6 +205,39 @@ def sweep_halo_blocks(r: int, k: int, block: int) -> int:
     return -(-(k * r) // block)
 
 
+def stencil1d_sweep_halo(spec: StencilSpec, t: jax.Array, k: int,
+                         halo: int, *, interpret: bool = True) -> jax.Array:
+    """One k-step sweep on a halo-EXTENDED layout-resident (nb, m, vl)
+    shard — the distributed engine's sweep kernel.
+
+    ``halo`` is the valid ghost width (elements per side) the caller
+    exchanged into the edge blocks; everything the un-masked edges
+    corrupt lies within k·r <= ``halo`` of the extended edges, inside
+    the ghost blocks the caller crops.  Unlike
+    :func:`stencil1d_sweep_periodic` there is NO virtual wrap halo: the
+    grid runs exactly ``nb + k`` steps instead of ``nb + 2p + k``
+    (``p = sweep_halo_blocks(r, k, vl·m)``) — periodicity is the
+    exchanged ghost blocks' job, not the index maps', so a small shard
+    stops paying 2p redundant virtual-block updates per sweep."""
+    assert halo >= k * spec.r, (halo, k, spec.r)
+    return stencil1d_multistep(spec, t, k, interpret=interpret,
+                               edge_mask=False)
+
+
+def stencil_nd_sweep_halo(spec: StencilSpec, t: jax.Array, k: int, t0: int,
+                          halo: int, *, interpret: bool = True
+                          ) -> jax.Array:
+    """n-D analogue of :func:`stencil1d_sweep_halo`: one k-step sweep on
+    a shard whose pipelined axis 0 carries ``halo`` exchanged ghost rows
+    per side (whole t0-row tiles).  Mid and minor axes stay periodic
+    in-kernel over the (possibly ghost-extended) local extents — a
+    decomposed mid/minor axis confines the wrap corruption to its own
+    exchanged ghosts.  Grid: ``n0/t0 + k`` steps, no 2p virtual tiles."""
+    assert halo >= k * spec.r and halo % t0 == 0, (halo, k, spec.r, t0)
+    return stencil_nd_multistep(spec, t, k, t0, interpret=interpret,
+                                edge_mask=False)
+
+
 def stencil1d_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
                              *, interpret: bool = True) -> jax.Array:
     """One fully-periodic k-step sweep on the layout-RESIDENT (nb, m, vl)

@@ -40,17 +40,17 @@ File format (JSON, ``REPRO_ROOFLINE_CONSTANTS`` env var, or
                "n_samples": 24}}}
 
 Writes are read-merge-write under an exclusive lock + atomic replace
-(same discipline as the plan cache); corrupt or version-mismatched files
-are ignored and overwritten.
+via the shared :func:`repro.core.locked_json.locked_update` helper (the
+same discipline — and the same code — as the plan cache); corrupt or
+version-mismatched files are ignored and overwritten.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
-import tempfile
 from typing import Iterable
 
+from repro.core import locked_json
 from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
 
 CONSTANTS_VERSION = 1
@@ -99,13 +99,9 @@ def constants_path(cache_path: str | None = None) -> str:
 
 
 def _load_devices(path: str) -> dict:
-    try:
-        with open(path) as f:
-            raw = json.load(f)
-        if raw.get("version") == CONSTANTS_VERSION:
-            return dict(raw.get("devices", {}))
-    except (OSError, ValueError):
-        pass
+    raw = locked_json.read_json(path)
+    if raw is not None and raw.get("version") == CONSTANTS_VERSION:
+        return dict(raw.get("devices", {}))
     return {}
 
 
@@ -160,32 +156,21 @@ def record_samples(samples: Iterable[dict], device: str | None = None,
         n += 1
     if not n:
         return load_constants(device=device, path=path)
-    d = os.path.dirname(os.path.abspath(path))
-    os.makedirs(d, exist_ok=True)
-    with open(path + ".lock", "w") as lk:
-        try:
-            import fcntl
-            fcntl.flock(lk, fcntl.LOCK_EX)
-        except (ImportError, OSError):
-            pass                                # best-effort off-posix
-        devices = _load_devices(path)
+
+    def merge(raw: dict | None) -> dict:
+        # re-read under the lock and ratchet against the FRESH entry —
+        # a concurrent writer's constants are merged, never clobbered
+        devices = {}
+        if raw is not None and raw.get("version") == CONSTANTS_VERSION:
+            devices = dict(raw.get("devices", {}))
         old = devices.get(device, {})
-        entry = {"peak_flops": max(pf, float(old.get("peak_flops", 0.0))),
-                 "hbm_bw": max(bw, float(old.get("hbm_bw", 0.0))),
-                 "ici_bw": max(ici, float(old.get("ici_bw", 0.0))),
-                 "n_samples": int(old.get("n_samples", 0)) + n}
-        devices[device] = entry
-        payload = {"version": CONSTANTS_VERSION, "devices": devices}
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1)
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        devices[device] = {
+            "peak_flops": max(pf, float(old.get("peak_flops", 0.0))),
+            "hbm_bw": max(bw, float(old.get("hbm_bw", 0.0))),
+            "ici_bw": max(ici, float(old.get("ici_bw", 0.0))),
+            "n_samples": int(old.get("n_samples", 0)) + n}
+        return {"version": CONSTANTS_VERSION, "devices": devices}
+
+    locked_json.locked_update(path, merge)
     # serve the post-update view through the same coherence gate reads use
     return load_constants(device=device, path=path)

@@ -31,9 +31,15 @@ step a plan costs:
                 step falls as 1/k, and each message is charged
                 :data:`ICI_LATENCY` on top of its bandwidth time (the
                 communication-avoiding claim, made visible to the
-                ranking).  Distributed compute/memory terms are
+                ranking).  Ghost widths are engine-aware: jnp ships and
+                computes exact k·r rings; the pallas engines ship whole
+                t0-row tiles on the pipelined axis, and on the minor
+                axis ship the lane-carry STRIP of exactly k·r elements
+                (the ghost codec) while computing on whole (vl·m) ghost
+                blocks — the strip is padded to lane-block granularity
+                on arrival.  Distributed compute/memory terms are
                 per-device (points / #shards) with the redundant-halo
-                factor ``(n_local + 2·k·r)/n_local`` per decomposed axis.
+                factor ``(n_local + 2·w)/n_local`` per decomposed axis.
 
 :func:`plan_terms` exposes the raw (flops, hbm_bytes, collective_bytes)
 per step per device; :func:`estimate_plan_time` divides them by device
@@ -159,26 +165,59 @@ def _distributed_terms(spec, shape, itemsize, plan,
     scheme = "transpose" if engine_pallas else "fused"
     arith = float(spec.flops_per_point)
     reorg = reorg_ops_per_point(spec, scheme, plan.vl, plan.m)
+    ndim = len(local)
+    t0 = getattr(plan, "t0", None) or 1
+    blk = (plan.vl or 1) * (plan.m or plan.vl or 1)
+
+    resident_sweep = getattr(plan, "sweep", "roundtrip") == "resident"
+
+    def _ghost_widths(kk: int, ax: int) -> tuple[float, float]:
+        """(shipped, computed) ghost width along decomposed axis ``ax``.
+
+        jnp ships and computes exact kk·r rings.  The pallas engines ship
+        exact widths everywhere EXCEPT the pipelined axis (whole t0-row
+        tiles — BlockSpec granularity): on the minor axis the RESIDENT
+        engine's lane-carry codec ships the STRIP of exactly kk·r
+        elements while *computing* on whole (vl·m)-element ghost blocks
+        (the scatter pads the strip to lane-block granularity); the
+        ROUNDTRIP engine exchanges the minor axis in natural layout at
+        whole-block widths (the per-sweep re-layout needs a divisible
+        extent), so it ships the full vl·m-granular ring too."""
+        w = float(kk * r)
+        if not engine_pallas:
+            return w, w
+        if ndim > 1 and ax == 0:
+            wt = float(-(-(kk * r) // t0) * t0)
+            return wt, wt
+        if ax == ndim - 1:
+            wb = float(-(-(kk * r) // blk) * blk)
+            return (w if resident_sweep else wb), wb
+        return w, w
 
     def ext_factor(kk: int) -> float:
         # redundant halo compute/traffic: a kk-deep sweep updates the
-        # ghost-extended shard, (n_local + 2·kk·r)/n_local per axis
+        # ghost-extended shard — (n_local + 2·w_computed)/n_local per
+        # decomposed axis, where w_computed rounds up to the engine's
+        # exchange granularity (whole tiles / lane blocks for pallas)
         e = 1.0
-        for nl, s in zip(local, shards):
+        for ax, (nl, s) in enumerate(zip(local, shards)):
             if s > 1:
-                e *= (nl + 2.0 * kk * r) / max(nl, 1)
+                e *= (nl + 2.0 * _ghost_widths(kk, ax)[1]) / max(nl, 1)
         return e
 
     def ring_bytes(kk: int) -> float:
-        # ppermute bytes of one width-kk·r exchange (both directions,
-        # progressive corner growth — mirrors halo.halo_bytes_per_exchange)
+        # ppermute bytes of one ghost exchange (both directions,
+        # progressive corner growth — mirrors halo.halo_bytes_per_exchange;
+        # the grown face uses the COMPUTED width: later axes ship faces of
+        # the physically extended array)
         b, shp = 0.0, list(local)
         for ax, s in enumerate(shards):
             if s <= 1:
                 continue
+            ship, comp = _ghost_widths(kk, ax)
             face = float(np.prod(shp)) / shp[ax]
-            b += 2.0 * kk * r * face * itemsize
-            shp[ax] += 2 * kk * r
+            b += 2.0 * ship * face * itemsize
+            shp[ax] += 2 * comp
         return b
 
     from repro.core.api import sweep_schedule

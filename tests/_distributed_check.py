@@ -4,14 +4,23 @@ Invoked by test_distributed.py; exits non-zero on any mismatch.  Covers:
 
   * the jnp halo engine over 1-D/2-D/3-D decompositions vs the oracle;
   * the shard-RESIDENT pallas engine: parity matrix vs the f64 oracle AND
-    bit-identity vs the per-exchange round-trip engine (1-D and 2-D
-    decompositions, k>1, both remainder policies, ragged step counts);
+    bit-identity vs the per-exchange round-trip engine — axis-0,
+    MINOR-AXIS (lane-carry ghost codec), 2-D-mesh and 3-D-mesh
+    decompositions, k>1, both remainder policies, ragged step counts;
   * a jaxpr-inspection pin: the shard-resident program contains NO
     transpose inside the sweep loop (exactly one layout round-trip per
-    run), while the round-trip engine transposes every sweep;
-  * plan="auto" on the 8-device mesh: distributed candidates are
-    enumerated, measured (stub timer), can WIN, round-trip through the
-    plan cache with their decomp axis intact, and dispatch correctly;
+    run) — including under the minor-axis ghost codec, whose
+    gather/ppermute/scatter never de-transposes — while the round-trip
+    engine transposes every sweep;
+  * a pallas grid (block-count) pin: the resident sweeps run the
+    halo-aware kernels with NO 2p virtual wrap halo — grid is exactly
+    nb_ext + k, not nb_ext + 2p + k (the small-shard overhead fix);
+  * pinned ValueError messages for the remaining genuinely-illegal
+    decompositions (halo thicker than the shard; no legal lane block);
+  * plan="auto" on the 8-device mesh: distributed candidates —
+    including minor-axis and 2-D-mesh pallas decomps — are enumerated,
+    measured (stub timer), can WIN, round-trip through the plan cache
+    with their decomp axis intact, and dispatch correctly;
   * the program/mesh caches: repeated distributed_run calls re-use the
     jitted shard_map program instead of re-building mesh + jit.
 """
@@ -114,6 +123,27 @@ def _transpose_census(closed) -> tuple[int, int]:
     return top, inside
 
 
+def _pallas_grids(closed) -> list[tuple[int, ...]]:
+    """Grids of every pallas_call in the program (descending through
+    pjit/shard_map/control-flow, not into kernel bodies)."""
+    grids: list[tuple[int, ...]] = []
+
+    def visit(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                grids.append(tuple(eqn.params["grid_mapping"].grid))
+                continue
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if isinstance(sub, jcore.ClosedJaxpr):
+                        visit(sub.jaxpr)
+                    elif isinstance(sub, jcore.Jaxpr):
+                        visit(sub)
+
+    visit(closed.jaxpr)
+    return grids
+
+
 def check_jaxpr_no_per_exchange_transpose():
     """The acceptance pin: the shard-resident whole-run program holds the
     layout across every halo exchange — zero transposes inside the sweep
@@ -136,6 +166,81 @@ def check_jaxpr_no_per_exchange_transpose():
         f"got {rinside} in-loop"
     print(f"jaxpr pin ok: resident top={top} in-loop={inside}; "
           f"roundtrip in-loop={rinside}")
+
+    # the NEW ghost codec: minor-axis and 2-D-mesh resident programs hold
+    # the layout across every exchange too — the lane-carry
+    # gather/ppermute/scatter is transpose-free by construction
+    spec2 = stencils.make("2d5p")
+    for shards, shape in [((1, 8), (32, 8 * 32)), ((2, 4), (32, 4 * 32))]:
+        x2 = jnp.zeros(shape, jnp.float32)
+        mesh2, decomp2 = multistep.mesh_for_shards(shards)
+        prog = multistep.make_run(spec2, mesh2, decomp2, steps=6, k=2,
+                                  engine="pallas", sweep="resident",
+                                  vl=4, m=4, t0=4)
+        top2, inside2 = _transpose_census(jax.make_jaxpr(prog)(x2))
+        assert inside2 == 0, \
+            f"{shards}: {inside2} in-loop transposes under the ghost codec"
+        assert top2 == 2, f"{shards}: expected one layout round-trip, " \
+            f"got {top2}"
+        print(f"jaxpr pin ok: ghost codec {shards} top={top2} in-loop=0")
+
+
+def check_sweep_grid_pin():
+    """The virtual-halo overhead fix: resident distributed sweeps run the
+    halo-aware kernels, whose pallas grid is exactly nb_ext + k — the
+    wrapped-periodic kernels' 2p extra virtual blocks per sweep are gone
+    (at this tiny shard that's 10 grid steps down to 8 per sweep)."""
+    spec = stencils.make("1d3p")
+    x = jnp.zeros((8 * 4 * 4 * 4,), jnp.float32)   # local nb = 4 blocks
+    mesh, decomp = multistep.mesh_for_shards((8,))
+    kk, blk = 2, 4 * 4
+    gb = -(-(kk * spec.r) // blk)                  # exchanged ghost blocks
+    nb_ext = 4 + 2 * gb
+    prog = multistep.make_run(spec, mesh, decomp, steps=6, k=kk,
+                              engine="pallas", sweep="resident", vl=4, m=4)
+    grids = _pallas_grids(jax.make_jaxpr(prog)(x))
+    assert grids, "no pallas_call found in the resident program"
+    want = (nb_ext + kk,)
+    virtual = (nb_ext + 2 * gb + kk,)
+    assert all(g == want for g in grids), (grids, want)
+    assert want[0] < virtual[0]
+    # n-D with a decomposed pipeline axis drops its virtual tiles too
+    spec2 = stencils.make("2d5p")
+    x2 = jnp.zeros((32, 64), jnp.float32)
+    mesh2, decomp2 = multistep.mesh_for_shards((8, 1))
+    t0 = 4
+    w0 = -(-(kk * spec2.r) // t0) * t0
+    n0t_ext = (32 // 8 + 2 * w0) // t0
+    prog2 = multistep.make_run(spec2, mesh2, decomp2, steps=4, k=kk,
+                               engine="pallas", sweep="resident",
+                               vl=4, m=4, t0=t0)
+    grids2 = _pallas_grids(jax.make_jaxpr(prog2)(x2))
+    assert grids2 and all(g == (n0t_ext + kk,) for g in grids2), grids2
+    print(f"grid pin ok: 1-D sweep grid {want[0]} (virtual-halo variant "
+          f"would be {virtual[0]}); 2-D sweep grid {n0t_ext + kk}")
+
+
+def check_illegal_decomp_messages():
+    """The axis-0-only ValueError is gone; what remains rejects only
+    genuinely unsupported shard shapes, with pinned messages."""
+    spec = stencils.make("1d3p")
+    x = jnp.zeros((8 * 8,), jnp.float32)           # local extent 8
+    try:
+        multistep.distributed_run(spec, x, steps=16, k=16, engine="pallas",
+                                  shards=(8,))
+        raise AssertionError("halo-thicker-than-shard must raise")
+    except ValueError as e:
+        assert "halo k*r = 16 exceeds the local extent 8 of axis 0" \
+            in str(e), e
+    spec5 = stencils.make("1d5p")
+    try:
+        multistep.distributed_run(spec5, x, steps=2, k=2, engine="pallas",
+                                  shards=(8,), vl=8)
+        raise AssertionError("no-legal-lane-block must raise")
+    except ValueError as e:
+        assert "unsupported by the pallas engines" in str(e), e
+        assert "no legal Pallas tile" in str(e), e
+    print("illegal-decomp message pins ok")
 
 
 def check_program_and_mesh_caches():
@@ -219,6 +324,52 @@ def check_auto_plan_selects_distributed():
     print("plan='auto' distributed selection ok")
 
 
+def check_auto_plan_selects_minor_axis():
+    """plan='auto' on a 2-D problem: the pool holds pallas decomps beyond
+    axis-0 (2-D meshes and minor-axis splits); a stubbed timer makes a
+    2-D-mesh shard-resident candidate win; the winner round-trips through
+    the cache and runs bit-identically to the round-trip oracle."""
+    import dataclasses
+
+    from repro.core import autotune
+    from repro.core.api import StencilProblem
+
+    prob = StencilProblem("2d5p", (32, 64))
+    cands = autotune.candidate_plans(prob.spec, prob.shape)
+    pall = [p for p in cands
+            if p.backend == "distributed" and p.scheme == "transpose"]
+    decomps = {p.decomp for p in pall}
+    assert any(d[1] > 1 for d in decomps), \
+        f"no beyond-axis-0 pallas decomp enumerated: {decomps}"
+    assert (2, 4) in decomps, decomps
+
+    with tempfile.TemporaryDirectory() as td:
+        cache_path = os.path.join(td, "plans.json")
+
+        def mesh24_wins(fn, plan):
+            return 0.001 if (plan.backend, plan.scheme, plan.sweep,
+                             plan.decomp) == ("distributed", "transpose",
+                                              "resident", (2, 4)) else 1.0
+
+        res = autotune.tune(prob, cache_path=cache_path, timer=mesh24_wins,
+                            max_measure=500)
+        assert res.plan.decomp == (2, 4) and res.plan.sweep == "resident", \
+            res.plan
+        res2 = autotune.tune(prob, cache_path=cache_path,
+                             timer=mesh24_wins)
+        assert res2.cached and res2.plan == res.plan
+
+        x = prob.init(0)
+        got = prob.run(x, 5, res2.plan)
+        rt = prob.run(x, 5, dataclasses.replace(res2.plan,
+                                                sweep="roundtrip"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(rt))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(prob.reference(x, 5)),
+            rtol=5e-5, atol=5e-5)
+    print("plan='auto' minor-axis/2-D-mesh selection ok")
+
+
 def main():
     assert len(jax.devices()) == 8, jax.devices()
 
@@ -245,8 +396,8 @@ def main():
     check("1d3p", (8 * 64,), steps=3, k=1)
 
     # shard-resident pallas engine: parity matrix (the acceptance pin) —
-    # 1-D and 2-D decompositions, k>1, both remainder policies, ragged
-    # and divisible step counts
+    # axis-0 decompositions, k>1, both remainder policies, ragged and
+    # divisible step counts
     check_resident_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=4, k=2,
                           remainder="fused", vl=4, m=4)
     check_resident_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=5, k=2,
@@ -260,14 +411,42 @@ def main():
     check_resident_parity("2d5p", (32, 64), (8, 1), steps=4, k=2,
                           remainder="fused", vl=4, m=4, t0=4)
 
+    # MINOR-AXIS decompositions (the lane-carry ghost codec): the mesh
+    # splits the axis folded into the (m, vl) lane layout
+    check_resident_parity("2d5p", (32, 8 * 32), (1, 8), steps=4, k=2,
+                          remainder="fused", vl=4, m=4, t0=4)
+    check_resident_parity("2d5p", (32, 8 * 32), (1, 8), steps=5, k=2,
+                          remainder="native", vl=4, m=4, t0=4)
+    check_resident_parity("2d5p", (32, 8 * 32), (1, 8), steps=7, k=4,
+                          remainder="fused", vl=4, m=4, t0=4)
+    check_resident_parity("1d5p", (8 * 4 * 4 * 8,), (8,), steps=5, k=4,
+                          remainder="fused", vl=4, m=4)   # r=2 strip, ragged
+
+    # 2-D MESHES: pipelined-axis tiles + minor-axis strips in one sweep
+    check_resident_parity("2d5p", (32, 64), (4, 2), steps=5, k=2,
+                          remainder="fused", vl=4, m=4, t0=4)
+    check_resident_parity("2d5p", (32, 64), (2, 4), steps=5, k=4,
+                          remainder="native", vl=4, m=4, t0=4)
+    check_resident_parity("2d9p", (32, 64), (2, 4), steps=3, k=2,
+                          remainder="native", vl=4, m=4, t0=4)
+
+    # 3-D MESHES incl. a decomposed MID axis (raw-row exchange)
+    check_resident_parity("3d7p", (16, 16, 16), (2, 2, 2), steps=3, k=2,
+                          remainder="fused", vl=4, m=2, t0=4)
+    check_resident_parity("3d7p", (16, 16, 16), (1, 2, 4), steps=2, k=2,
+                          remainder="fused", vl=2, m=2, t0=4)
+
     # legacy call shape (engine="pallas", no shards): default mesh, new
     # resident default
     check("1d3p", (8 * 4 * 4 * 4,), steps=4, k=2, engine="pallas",
           vl=4, m=4)
 
     check_jaxpr_no_per_exchange_transpose()
+    check_sweep_grid_pin()
+    check_illegal_decomp_messages()
     check_program_and_mesh_caches()
     check_auto_plan_selects_distributed()
+    check_auto_plan_selects_minor_axis()
 
     # halo byte accounting sanity
     b = halo.halo_bytes_per_exchange((64,), 2, ["dx"], 4)

@@ -59,10 +59,17 @@ def test_distributed_gate_pallas_engine():
     assert not legal(spec5, (512,), (8,), k=2, engine="pallas", vl=4, m=1,
                      n_devices=8)
     spec2 = stencils.make("2d5p")
-    # axis-0-only decomposition for the pallas engines
+    # any mesh decomposition is legal for the pallas engines now — the
+    # minor axis exchanges via the lane-carry ghost codec
     assert legal(spec2, (32, 64), (8, 1), k=2, engine="pallas", vl=4, m=4,
                  t0=4, n_devices=8)
-    assert not legal(spec2, (32, 64), (4, 2), k=2, engine="pallas", vl=4,
+    assert legal(spec2, (32, 64), (4, 2), k=2, engine="pallas", vl=4,
+                 m=4, t0=4, n_devices=8)                 # 2-D mesh
+    assert legal(spec2, (32, 8 * 32), (1, 8), k=2, engine="pallas", vl=4,
+                 m=4, t0=4, n_devices=8)                 # minor-axis only
+    # ...but the LOCAL minor extent must still tile into (vl, m) lane
+    # blocks: (1, 8) on (32, 64) leaves 8 < vl·m = 16 per shard
+    assert not legal(spec2, (32, 64), (1, 8), k=2, engine="pallas", vl=4,
                      m=4, t0=4, n_devices=8)
     # t0 must divide the LOCAL leading extent and hold the halo tiles
     assert not legal(spec2, (32, 64), (8, 1), k=2, engine="pallas", vl=4,
@@ -73,6 +80,15 @@ def test_distributed_gate_pallas_engine():
     # but k=4 on 1d needs ceil(4/16)=1 block <= nb — exercised above
     assert legal(spec2, (32, 64), (8, 1), k=4, engine="pallas", vl=4, m=4,
                  t0=4, n_devices=8)
+    # 3-D: mid-axis decompositions are legal too (raw-row exchange)
+    spec3 = stencils.make("3d7p")
+    assert legal(spec3, (16, 16, 16), (1, 2, 4), k=2, engine="pallas",
+                 vl=2, m=2, t0=4, n_devices=8)
+    assert legal(spec3, (16, 16, 16), (2, 2, 2), k=2, engine="pallas",
+                 vl=4, m=2, t0=4, n_devices=8)
+    # the sweep-engine axis stays validated on the new meshes too
+    assert not legal(spec2, (32, 64), (4, 2), k=2, engine="pallas", vl=4,
+                     m=4, t0=4, n_devices=8, sweep="bogus")
 
 
 # ---------------------------------------------------------------------------
@@ -85,14 +101,22 @@ def test_distributed_candidates_fan_out():
                                      backend="distributed", n_devices=8)
     assert cands and all(p.backend == "distributed" for p in cands)
     assert all(p.decomp is not None for p in cands)
-    # mesh axis: every factorization of 8 over the two leading axes
+    # mesh axis: every factorization of 8 over the two spatial axes
     decomps = {p.decomp for p in cands}
     assert {(8, 1), (4, 2), (2, 4), (1, 8)} <= decomps
-    # engine axis: jnp (any decomp) + pallas (axis-0 decomps only)
+    # engine axis: jnp AND pallas over any decomposition — minor-axis and
+    # 2-D meshes reach the pallas engines via the lane-carry ghost codec
     engines = {(p.scheme, p.decomp) for p in cands}
     assert ("fused", (4, 2)) in engines
     assert ("transpose", (8, 1)) in engines
-    assert not any(s == "transpose" and d[1] > 1 for s, d in engines)
+    assert ("transpose", (4, 2)) in engines      # 2-D mesh
+    assert ("transpose", (2, 4)) in engines
+    assert ("transpose", (1, 8)) in engines      # minor-axis only
+    # pallas points on non-axis-0 decomps carry lane tiles fitting the
+    # LOCAL minor extent (64/8 = 8 → vl·m = 8)
+    minor = [p for p in cands
+             if p.scheme == "transpose" and p.decomp == (1, 8)]
+    assert minor and all(p.vl * p.m <= 8 for p in minor)
     # sweep axis: every pallas point exists in both engines
     pall = [p for p in cands if p.scheme == "transpose"]
     assert {p.sweep for p in pall} == {"resident", "roundtrip"}
@@ -154,6 +178,84 @@ def test_explicit_distributed_backend_single_device_fallback():
                                      n_devices=1)
     assert cands and all(p.backend == "distributed" and p.decomp is None
                          for p in cands)
+
+
+# ---------------------------------------------------------------------------
+# the lane-carry ghost codec (pure array transforms — single device)
+# ---------------------------------------------------------------------------
+
+def _natural(t, vl, m):
+    from repro.core import layouts
+    return np.asarray(layouts.from_transpose_layout(t, vl, m))
+
+
+def test_gather_minor_strip_matches_natural_boundary():
+    """The gather collects exactly the natural-layout boundary elements,
+    in natural order, even though they straddle lanes and blocks."""
+    import jax.numpy as jnp
+
+    from repro.core import layouts
+    from repro.distributed import halo
+
+    vl, m, nb = 4, 4, 3
+    x = np.arange(nb * vl * m, dtype=np.float32)
+    t = layouts.to_transpose_layout(jnp.asarray(x), vl, m)
+    for width in (1, 3, 5, 17, 21):     # within, at and across block edges
+        np.testing.assert_array_equal(
+            np.asarray(halo.gather_minor_strip(t, width, "tail")),
+            x[-width:])
+        np.testing.assert_array_equal(
+            np.asarray(halo.gather_minor_strip(t, width, "head")),
+            x[:width])
+    # leading batch dims ride along
+    t2 = jnp.stack([t, t + 100.0])
+    got = np.asarray(halo.gather_minor_strip(t2, 5, "tail"))
+    np.testing.assert_array_equal(got[0], x[-5:])
+    np.testing.assert_array_equal(got[1], x[-5:] + 100.0)
+
+
+def test_scatter_minor_strip_positions_and_zero_fill():
+    import jax.numpy as jnp
+
+    from repro.distributed import halo
+
+    vl = m = 4
+    strip = jnp.arange(1.0, 6.0)        # width 5 → one ghost block of 16
+    left = _natural(halo.scatter_minor_strip(strip, m, vl, "left"), vl, m)
+    right = _natural(halo.scatter_minor_strip(strip, m, vl, "right"),
+                     vl, m)
+    np.testing.assert_array_equal(left[-5:], np.arange(1.0, 6.0))
+    assert not left[:-5].any()           # zero-filled away from the shard
+    np.testing.assert_array_equal(right[:5], np.arange(1.0, 6.0))
+    assert not right[5:].any()
+    # width > one block spills into a second ghost block
+    strip2 = jnp.arange(1.0, 19.0)      # width 18 → gb = 2
+    out = halo.scatter_minor_strip(strip2, m, vl, "left")
+    assert out.shape == (2, m, vl)
+    np.testing.assert_array_equal(_natural(out, vl, m)[-18:],
+                                  np.arange(1.0, 19.0))
+
+
+def test_exchange_minor_single_shard_is_periodic_wrap():
+    """n_shards=1: the codec wraps locally — the ghost blocks hold the
+    shard's own opposite-boundary strips at the positions flush to it."""
+    import jax.numpy as jnp
+
+    from repro.core import layouts
+    from repro.distributed import halo
+
+    vl, m, nb, w = 4, 4, 2, 3
+    x = np.arange(nb * vl * m, dtype=np.float32)
+    t = layouts.to_transpose_layout(jnp.asarray(x), vl, m)
+    ext = halo.exchange_minor(t, w, "dx", 1)
+    assert ext.shape == (nb + 2, m, vl)
+    nat = _natural(ext, vl, m)
+    blk = vl * m
+    np.testing.assert_array_equal(nat[blk - w:blk], x[-w:])   # left ghost
+    np.testing.assert_array_equal(nat[blk:-blk], x)           # shard
+    np.testing.assert_array_equal(nat[-blk:-blk + w], x[:w])  # right ghost
+    np.testing.assert_array_equal(
+        np.asarray(halo.crop_minor_blocks(ext, 1)), np.asarray(t))
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +356,46 @@ def test_distributed_mesh_shape_moves_collective_bytes():
     _, _, c2 = rs.plan_terms(spec, (64, 64), 4,
                              _dist_plan(decomp=(4, 2)), steps=16)
     assert c1 > c2 > 0
+
+
+def test_ghost_traffic_term_is_engine_aware():
+    """The lane-carry ghost-traffic accounting: on the n-D pipelined axis
+    the pallas engines ship whole t0-row tiles (more than jnp's exact k·r
+    ring when t0 > k·r); on the minor axis they ship the lane-carry STRIP
+    of exactly k·r elements — same collective bytes as jnp — while the
+    redundant-compute factor sees the whole (vl·m) ghost blocks the
+    scatter pads to."""
+    spec = stencils.make("2d5p")                 # r = 1
+    shape, item = (64, 512), 4
+
+    def plan(scheme, decomp, **kw):
+        return _dist_plan(scheme=scheme, decomp=decomp, k=2, **kw)
+
+    # axis-0 decomp: pallas rounds the 2-cell ghost up to one t0=8 tile
+    f_j, _, c_j = rs.plan_terms(spec, shape, item,
+                                plan("fused", (8, 1)), steps=16)
+    f_p, _, c_p = rs.plan_terms(spec, shape, item,
+                                plan("transpose", (8, 1), vl=8, m=8, t0=8),
+                                steps=16)
+    assert c_p == pytest.approx(4 * c_j)         # 8-row tile vs 2-row ring
+    # minor-axis decomp: the strip ships exactly k·r — bytes match jnp —
+    # but the ghost blocks (vl·m = 64 >> k·r = 2) inflate the redundant
+    # compute factor
+    f_jm, _, c_jm = rs.plan_terms(spec, shape, item,
+                                  plan("fused", (1, 8)), steps=16)
+    f_pm, _, c_pm = rs.plan_terms(spec, shape, item,
+                                  plan("transpose", (1, 8), vl=8, m=8),
+                                  steps=16)
+    assert c_pm == pytest.approx(c_jm)           # lane-carry strip: exact
+    ext_j = (64.0 + 2 * 2) / 64.0                # jnp: +k·r per side
+    ext_p = (64.0 + 2 * 64) / 64.0               # pallas: +vl·m per side
+    assert f_pm / f_jm > ext_p / ext_j * 0.9     # block-granular compute
+    # ...the ROUNDTRIP engine has no codec: it exchanges the minor axis
+    # at whole-block widths in natural layout, and is charged for it
+    _, _, c_rt = rs.plan_terms(
+        spec, shape, item,
+        plan("transpose", (1, 8), vl=8, m=8, sweep="roundtrip"), steps=16)
+    assert c_rt == pytest.approx(c_jm * 64 / 2)  # vl·m blocks vs k·r strip
 
 
 def test_distributed_resident_ranked_ahead_of_roundtrip():

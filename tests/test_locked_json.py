@@ -1,0 +1,182 @@
+"""core/locked_json: the one shared locked-atomic-JSON read-merge-write
+helper, plus concurrent-writer coverage of BOTH call sites that were
+deduplicated onto it — ``autotune.PlanCache.save`` and
+``roofline.calibrate.record_samples``."""
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import autotune, locked_json
+from repro.core.api import StencilPlan
+from repro.roofline import calibrate
+
+
+# ---------------------------------------------------------------------------
+# the helper itself
+# ---------------------------------------------------------------------------
+
+def test_read_json_missing_and_corrupt(tmp_path):
+    assert locked_json.read_json(str(tmp_path / "nope.json")) is None
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    assert locked_json.read_json(str(p)) is None
+
+
+def test_locked_update_creates_dirs_and_writes_atomically(tmp_path):
+    path = str(tmp_path / "deep" / "er" / "f.json")
+    out = locked_json.locked_update(path, lambda raw: {"raw": raw, "n": 1})
+    assert out == {"raw": None, "n": 1}
+    with open(path) as f:
+        assert json.load(f) == {"raw": None, "n": 1}
+    # second update sees the first's payload
+    out2 = locked_json.locked_update(path,
+                                     lambda raw: {"n": raw["n"] + 1})
+    assert out2["n"] == 2
+    # no stray tempfiles left behind
+    assert sorted(os.listdir(os.path.dirname(path))) == ["f.json",
+                                                         "f.json.lock"]
+
+
+def test_locked_update_merge_exception_preserves_file(tmp_path):
+    path = str(tmp_path / "f.json")
+    locked_json.locked_update(path, lambda raw: {"keep": True})
+
+    with pytest.raises(RuntimeError):
+        locked_json.locked_update(
+            path, lambda raw: (_ for _ in ()).throw(RuntimeError("boom")))
+    assert locked_json.read_json(path) == {"keep": True}
+
+
+def test_locked_update_on_written_runs_inside_lock(tmp_path):
+    path = str(tmp_path / "f.json")
+    seen = []
+    locked_json.locked_update(path, lambda raw: {"x": 1},
+                              on_written=lambda: seen.append(
+                                  locked_json.read_json(path)))
+    assert seen == [{"x": 1}]           # file already replaced when called
+
+
+def test_locked_update_concurrent_counter(tmp_path):
+    """N threads × M increments through the helper: every increment
+    survives — the lock + re-read-under-lock discipline loses nothing."""
+    path = str(tmp_path / "counter.json")
+
+    def bump(raw):
+        n = (raw or {}).get("n", 0)
+        return {"n": n + 1}
+
+    def worker():
+        for _ in range(20):
+            locked_json.locked_update(path, bump)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert locked_json.read_json(path)["n"] == 8 * 20
+
+
+# ---------------------------------------------------------------------------
+# both call sites, concurrently
+# ---------------------------------------------------------------------------
+
+def _rec(scheme):
+    return {"plan": autotune.plan_to_dict(StencilPlan(scheme=scheme)),
+            "seconds_per_step": 1.0}
+
+
+def test_concurrent_plan_cache_and_calibration_writers(tmp_path):
+    """The two deduplicated call sites hammered concurrently, each on its
+    own file: every plan-cache key survives, and the calibration ratchet
+    sees every sample batch (n_samples adds up exactly — a lost
+    read-merge-write would drop a batch)."""
+    cache_path = str(tmp_path / "plans.json")
+    const_path = str(tmp_path / "roofline_constants.json")
+    n_writers, n_rounds = 4, 6
+    errors = []
+
+    def plan_writer(i):
+        try:
+            for j in range(n_rounds):
+                c = autotune.PlanCache(cache_path)
+                c.put(f"w{i}r{j}", _rec("fused"))
+                c.save()
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    def calib_writer(i):
+        try:
+            for j in range(n_rounds):
+                calibrate.record_samples(
+                    [{"flops": 1e9 * (i + 1), "bytes": 1e8 * (j + 1),
+                      "coll_bytes": 0.0, "seconds": 1.0}],
+                    device=f"dev{i}", path=const_path)
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=plan_writer, args=(i,))
+               for i in range(n_writers)]
+    threads += [threading.Thread(target=calib_writer, args=(i,))
+                for i in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+
+    fresh = autotune.PlanCache(cache_path)
+    assert len(fresh) == n_writers * n_rounds
+    for i in range(n_writers):
+        for j in range(n_rounds):
+            assert fresh.get(f"w{i}r{j}") is not None
+
+    devs = calibrate._load_devices(const_path)
+    assert set(devs) == {f"dev{i}" for i in range(n_writers)}
+    for i in range(n_writers):
+        e = devs[f"dev{i}"]
+        assert e["n_samples"] == n_rounds          # no batch lost
+        assert e["peak_flops"] == pytest.approx(1e9 * (i + 1))
+        assert e["hbm_bw"] == pytest.approx(1e8 * n_rounds)   # max ratchet
+
+
+def test_shared_plan_cache_instance_put_save_race(tmp_path):
+    """The in-process hazard: get_cache() hands ONE PlanCache instance to
+    warm_async's tuner thread and request threads — put() racing save()
+    on the shared instance must neither crash (dirty-set mutation during
+    merge) nor lose an entry (a put landing mid-save stays dirty and is
+    persisted by the next save)."""
+    cache = autotune.PlanCache(str(tmp_path / "plans.json"))
+    n_keys, errors = 120, []
+    stop = threading.Event()
+
+    def putter():
+        try:
+            for i in range(n_keys):
+                cache.put(f"k{i}", _rec("fused"))
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def saver():
+        try:
+            while not stop.is_set():
+                cache.save()
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=putter)] + \
+        [threading.Thread(target=saver) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    cache.save()                        # flush whatever stayed dirty
+    fresh = autotune.PlanCache(cache.path)
+    missing = [f"k{i}" for i in range(n_keys)
+               if fresh.get(f"k{i}") is None]
+    assert not missing, missing

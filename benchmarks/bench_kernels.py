@@ -16,7 +16,11 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
     ``ops.stencil_run_periodic`` (pad/transpose/crop per sweep) at growing
     step counts and writes the JSON artifact CI uploads
     (``benchmarks/results/bench_kernels_smoke.json``) — the perf
-    trajectory record for the layout-resident engine.  On a multi-device
+    trajectory record for the layout-resident engine.  The artifact's
+    ``ttile_vs_resident`` section compares the time-tiled resident path
+    (ttile=4 — one HBM round-trip per ttile·k steps) against the ttile=1
+    resident path: measured times, the roofline's modeled HBM-bytes
+    ratio, and a bit-identity flag.  On a multi-device
     host (CI forces 8 via ``--xla_force_host_platform_device_count``) the
     artifact gains a ``distributed`` section timing the SHARD-resident
     engine (one transpose per run, halos exchanged in layout) against the
@@ -28,6 +32,7 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
@@ -176,6 +181,56 @@ def _smoke_minor_axis(steps_list, n_dev: int) -> dict:
     return {"n_devices": n_dev, "meshes": meshes, "results": rows}
 
 
+def _smoke_ttile(steps_list) -> dict:
+    """Time-tiled resident engine vs the PR 3 resident path (ttile=1):
+    measured times, the roofline's modeled HBM-bytes ratio for the same
+    two plans, and a bit-identity flag — the acceptance artifact for the
+    temporal-tile axis (>=2x modeled byte cut at steps >= 8·k, results
+    bit-identical)."""
+    from repro.core.api import StencilPlan
+    from repro.kernels import ops
+    from repro.roofline import stencil as rs
+
+    cases = [("1d3p", (8 * 8 * 8,), dict(k=2, vl=8, m=8)),
+             ("2d5p", (16, 8 * 8 * 2), dict(k=2, vl=8, m=8, t0=4))]
+    ttile = 4
+    rows = []
+    for name, shape, kw in cases:
+        spec = stencils.make(name)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                        jnp.float32)
+        base = StencilPlan(scheme="transpose", backend="pallas",
+                           sweep="resident", **kw)
+        for steps in steps_list:
+            res = bench(lambda: ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True, **kw),
+                warmup=1, iters=3, min_time_s=0.05)
+            tt = bench(lambda: ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True, ttile=ttile, **kw),
+                warmup=1, iters=3, min_time_s=0.05)
+            _, b_base, _ = rs.plan_terms(spec, shape, 4, base, steps=steps)
+            _, b_tt, _ = rs.plan_terms(
+                spec, shape, 4, dataclasses.replace(base, ttile=ttile),
+                steps=steps)
+            a = np.asarray(ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True, **kw))
+            b = np.asarray(ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True, ttile=ttile, **kw))
+            row = {"name": f"{name}/{'x'.join(map(str, shape))}"
+                           f"/steps{steps}/ttile{ttile}",
+                   "steps": steps, "ttile": ttile,
+                   "resident_us": res * 1e6, "ttile_us": tt * 1e6,
+                   "speedup": res / tt,
+                   "modeled_bytes_ratio": b_base / b_tt,
+                   "bit_identical": bool(np.array_equal(a, b))}
+            print(f"{row['name']}: resident={res * 1e6:.0f}us "
+                  f"ttile={tt * 1e6:.0f}us speedup={res / tt:.2f}x "
+                  f"modeled_bytes={b_base / b_tt:.2f}x "
+                  f"bit_identical={row['bit_identical']}")
+            rows.append(row)
+    return {"ttile": ttile, "results": rows}
+
+
 def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
     """Micro-benchmark the layout-resident sweep engine against the
     per-sweep pad/transpose/crop path, at CPU-interpret-friendly scale,
@@ -210,6 +265,7 @@ def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
                # CPU-interpret-scale numbers on every host, incl. TPU
                "mode": "interpret",
                "results": results,
+               "ttile_vs_resident": _smoke_ttile(steps_list),
                "distributed": _smoke_distributed(steps_list)}
     out_path = out_path or SMOKE_PATH
     os.makedirs(os.path.dirname(out_path), exist_ok=True)

@@ -16,6 +16,11 @@ Plans compose the paper's three pieces:
                 (one program for the whole run, transpose-layout held
                 across every sweep/exchange, zero wrap-pad copies) |
                 "roundtrip" (legacy per-sweep pad/transpose/crop)
+  ttile       — temporal tile (resident engines): ttile consecutive
+                k-blocks fuse into ONE depth-ttile·k trapezoid launch,
+                cutting HBM round-trips (and distributed ghost
+                exchanges) to one per ttile·k steps at the price of a
+                deeper halo slope ttile·k·r
   decomp      — distributed plans: per-spatial-axis shard counts, e.g.
                 (8,) or (4, 2); the mesh decomposition axis the unified
                 autotuner searches jointly with k and the engine.  On the
@@ -35,26 +40,43 @@ from repro.core import stencils, vectorize, unroll_jam, tessellate
 
 
 def sweep_schedule(k: int, steps: int | None,
-                   remainder: str = "fused"
+                   remainder: str = "fused", ttile: int = 1
                    ) -> tuple[list[tuple[int, int]], int]:
-    """The (kk, n_sweeps) blocks a ``steps``-long k-blocked run executes:
-    main k-blocks, then the remainder policy ("native": one k=rem sweep;
-    "fused": rem single-step sweeps).  ``steps=None`` (ranking without a
-    step count) yields one canonical k-block.  Returns (chunks, total
-    steps to amortize over).
+    """The (depth, n_launches) blocks a ``steps``-long k-blocked run
+    executes — each entry is ``n`` kernel launches (halo exchanges, on
+    the distributed backend) of ``depth`` time steps apiece: the
+    ``ttile``-grouped main k-blocks, the ungrouped k-block leftovers,
+    then the remainder policy ("native": one k=rem sweep; "fused": rem
+    single-step sweeps).  ``steps=None`` (ranking without a step count)
+    yields one canonical depth-``ttile·k`` block.  Returns (chunks,
+    total steps to amortize over).
+
+    ``ttile`` is the temporal-tile factor: ``ttile`` consecutive
+    k-blocks fuse into ONE depth-``ttile·k`` launch, so the grid makes
+    one HBM round-trip (one ghost exchange) per ``ttile·k`` steps
+    instead of per ``k``.  The remainder semantics stay defined mod
+    ``k`` — ``ttile`` only regroups the main k-blocks, so any
+    (steps, k, remainder) run is bit-identical at every ttile.
 
     Single source of truth for the sweep decomposition — shared by the
-    distributed runtime (``distributed/multistep.make_run`` builds its
-    program from these chunks) and the roofline's per-chunk accounting
-    (``roofline/stencil._distributed_terms``), so the model can never
-    silently charge a schedule the runtime stopped executing.
+    resident single-device engine (``kernels/ops._sweep_periodic_impl``),
+    the distributed runtime (``distributed/multistep.make_run`` builds
+    its program from these chunks) and the roofline's per-chunk
+    accounting (``roofline/stencil._distributed_terms``), so the model
+    can never silently charge a schedule the runtime stopped executing.
     ``StencilProblem._chunked`` below realizes the same decomposition in
-    aggregated (n_steps, k) form for the single-device backends."""
+    aggregated (n_steps, k) form for the legacy single-device backends."""
     k = max(k, 1)
+    ttile = max(ttile, 1)
     if steps is None:
-        return [(k, 1)], k
+        return [(k * ttile, 1)], k * ttile
     n_main, rem = divmod(steps, k)
-    chunks = [(k, n_main)] if n_main else []
+    n_tt, tt_rem = divmod(n_main, ttile)
+    chunks = []
+    if n_tt:
+        chunks.append((k * ttile, n_tt))
+    if tt_rem:
+        chunks.append((k, tt_rem))
     if rem:
         chunks.append((rem, 1) if remainder == "native" else (1, rem))
     return chunks, steps
@@ -74,6 +96,8 @@ class StencilPlan:
     remainder: str = "fused"       # fused | native — steps % k policy
     sweep: str = "resident"        # resident | roundtrip — pallas engine
     decomp: tuple[int, ...] | None = None   # distributed: shards per axis
+    ttile: int = 1                 # temporal tile: k-blocks per HBM/ghost
+    #                                round-trip (resident engines only)
 
 
 class StencilProblem:
@@ -127,6 +151,14 @@ class StencilProblem:
                 raise ValueError(f"unknown plan {plan!r}; expected 'auto', "
                                  f"'default' or a StencilPlan")
         assert isinstance(plan, StencilPlan)
+        if plan.ttile > 1 and not (
+                plan.backend == "distributed"
+                or (plan.backend == "pallas" and plan.sweep == "resident")):
+            raise ValueError(
+                f"ttile={plan.ttile} requires a resident sweep engine "
+                "(backend='pallas' with sweep='resident', or "
+                "backend='distributed'); the legacy paths round-trip "
+                "every sweep, so there is nothing to temporally tile")
         if plan.backend == "pallas":
             from repro.kernels import ops
             # m=None means "kernel auto-picks the native tile" (vl=128 on
@@ -135,11 +167,13 @@ class StencilProblem:
             vl = plan.vl if plan.m is not None else None
             if plan.sweep == "resident":
                 # layout-resident engine: ONE program for all steps — the
-                # k-blocked sweeps AND the steps % k remainder are fused
-                # inside (no _chunked round-trips between sweeps).
+                # (ttile-grouped) k-blocked sweeps AND the steps % k
+                # remainder are fused inside (no _chunked round-trips
+                # between sweeps).
                 return ops.stencil_sweep_periodic(
                     self.spec, x, steps, k=plan.k, vl=vl, m=plan.m,
-                    t0=plan.t0, remainder=plan.remainder)
+                    t0=plan.t0, remainder=plan.remainder,
+                    ttile=plan.ttile)
             if plan.sweep != "roundtrip":
                 raise ValueError(f"unknown sweep engine {plan.sweep!r}")
             return self._chunked(
@@ -157,7 +191,8 @@ class StencilProblem:
             return dms.distributed_run(
                 self.spec, x, steps, k=plan.k, engine=engine,
                 shards=plan.decomp, sweep=plan.sweep,
-                remainder=plan.remainder, vl=vl, m=plan.m, t0=plan.t0)
+                remainder=plan.remainder, vl=vl, m=plan.m, t0=plan.t0,
+                ttile=plan.ttile)
         if plan.tiling == "tessellate":
             h = plan.height or plan.k
             tile = plan.tile or self._default_tile(h)

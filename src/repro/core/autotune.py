@@ -25,7 +25,12 @@ over **every execution backend at once**:
      the run.  Distributed candidates fan out over (mesh decomposition ×
      k × local engine × sweep): the ``decomp`` plan axis carries the
      per-spatial-axis shard counts, so the mesh mapping and the
-     time-block depth are chosen *jointly* by measurement.  Off-TPU the
+     time-block depth are chosen *jointly* by measurement.  Every
+     resident-sweep candidate (single-device AND distributed)
+     additionally fans out over the temporal-tile axis ``ttile`` ∈
+     :data:`_TTILES`, gated by :func:`ttile_plan_legal` (halo slope
+     fits the local extent, VMEM window fits
+     :data:`TTILE_VMEM_BUDGET`, the run is deep enough to amortize).  Off-TPU the
      auto pool caps pallas enumeration at
      :data:`INTERPRET_MAX_POINTS` grid points (interpret-mode
      measurement latency budget; explicit ``backend="pallas"`` /
@@ -91,7 +96,7 @@ Plan-cache file format (JSON, ``REPRO_PLAN_CACHE`` env var or
          "plan": {"scheme": "transpose", "k": 2, "tiling": "none",
                   "tile": null, "height": null, "vl": 8, "m": 8,
                   "backend": "jnp", "t0": null, "remainder": "fused",
-                  "sweep": "resident", "decomp": null},
+                  "sweep": "resident", "decomp": null, "ttile": 1},
          "seconds_per_step": 1.2e-4,
          "fingerprint": "3f2a9c1d04be",
          "n_candidates": 23, "n_measured": 8,
@@ -131,6 +136,8 @@ CACHE_ENV = "REPRO_PLAN_CACHE"
 # search space knobs
 _VLS = (4, 8, 16)
 _KS = (1, 2, 4)
+_TTILES = (2, 4)          # temporal-tile factors enumerated for resident
+#                           sweep candidates (ttile=1 is the base plan)
 _HEIGHTS = (2, 4)         # tessellation heights enumerated below
 _MEASURE_STEPS = 4        # lcm-friendly with every k in _KS
 # lcm of every block size (unroll k, tessellation height) a candidate can
@@ -150,6 +157,14 @@ INTERPRET_PENALTY = 50.0
 # backend="pallas" request bypasses the gate).  Env-overridable.
 INTERPRET_MAX_POINTS = int(os.environ.get(
     "REPRO_PALLAS_INTERPRET_MAX_POINTS", 1 << 18))
+
+# VMEM budget for the temporal-tile scratch window: a depth-d launch keeps
+# d live blocks + d carry rows resident per grid step (see
+# kernels/stencil_kernels), and TPU cores have ~16 MB of VMEM shared with
+# the in/out block pipeline — candidates whose window exceeds this budget
+# are rejected by :func:`ttile_plan_legal`.  Env-overridable.
+TTILE_VMEM_BUDGET = int(os.environ.get(
+    "REPRO_TTILE_VMEM_BUDGET", 4 << 20))
 
 
 def default_cache_path() -> str:
@@ -423,9 +438,24 @@ def _layout_pairs(n: int, r: int):
     return out
 
 
+def _schedule_max_depth(k: int, steps: int | None, remainder: str,
+                        ttile: int = 1) -> int:
+    """Deepest single launch of the run's sweep schedule — the depth the
+    halo/slope legality gates must accommodate.  Schedule-aware: a
+    ``steps < k`` run never executes the main k-block, so only the
+    remainder's depth counts (the fix for ``remainder="native"`` plans
+    whose k exceeds what the shard/grid supports but whose actual
+    remainder block fits)."""
+    from repro.core.api import sweep_schedule
+    chunks, _ = sweep_schedule(k, steps, remainder, ttile)
+    return max((d for d, _ in chunks), default=1)
+
+
 def pallas_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
                       vl: int, m: int, t0: int | None = None,
-                      sweep: str = "resident") -> bool:
+                      sweep: str = "resident", *, ttile: int = 1,
+                      k: int | None = None, steps: int | None = None,
+                      remainder: str = "fused") -> bool:
     """Backend legality gate for the Pallas transpose-layout kernels.
 
     * block-shape divisibility: ``shape[-1] % (vl*m) == 0`` — the
@@ -440,9 +470,21 @@ def pallas_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
       ``roundtrip`` (per-sweep wrap-pad/crop).  The resident engine wraps
       its halo reads through the grid index maps, which is legal for any
       block count — it adds NO constraint beyond the shared gates above,
-      so the two engines are interchangeable wherever pallas is legal.
+      so the two engines are interchangeable wherever pallas is legal;
+    * temporal tile: ``ttile > 1`` requires the resident engine (the
+      roundtrip path re-lays-out every sweep — there is nothing to
+      temporally tile) and is further gated by :func:`ttile_plan_legal`
+      (slope fits the extent, VMEM window fits the budget);
+    * schedule depth (only checked when ``k``/``steps`` are given): the
+      deepest launch of the (k, steps, remainder, ttile) schedule —
+      including a ``remainder="native"`` block of ``steps % k`` steps —
+      must keep its halo slope ``depth·r`` within the pipelined extent.
+      This is what rejects native-remainder plans whose leftover block
+      is too deep for the grid instead of letting them fail at run time.
     """
     if sweep not in ("resident", "roundtrip"):
+        return False
+    if ttile > 1 and sweep != "resident":
         return False
     n = shape[-1]
     r = spec.r
@@ -450,6 +492,11 @@ def pallas_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
         return False
     if spec.ndim > 1:
         if t0 is None or t0 < r or shape[0] % t0:
+            return False
+    if k is not None:
+        kmax = _schedule_max_depth(k, steps, remainder, ttile)
+        n_pipe = shape[0] if spec.ndim > 1 else n
+        if kmax * r > n_pipe:
             return False
     return True
 
@@ -495,16 +542,23 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
                            k: int, engine: str = "jnp",
                            sweep: str = "resident", vl: int = 8,
                            m: int = 8, t0: int | None = None,
-                           n_devices: int | None = None) -> bool:
+                           n_devices: int | None = None, *,
+                           ttile: int = 1, steps: int | None = None,
+                           remainder: str = "fused") -> bool:
     """Backend legality gate for distributed (shard_map halo) plans.
 
     * device availability: ``prod(decomp) == n_devices >= 2`` — the
       decomposition uses every visible device (partial meshes fragment
       the measurement pool without a matching serving story);
     * shard divisibility: every decomposed extent splits evenly;
-    * halo-fits-shard: the k·r ghost ring is sliced from the *neighbor's*
-      local block, so ``k·r <= local extent`` along every decomposed
-      axis;
+    * halo-fits-shard: the ghost ring of the DEEPEST launch in the run's
+      sweep schedule is sliced from the *neighbor's* local block, so
+      ``depth·r <= local extent`` along every decomposed axis.  The
+      depth is schedule-aware (see :func:`_schedule_max_depth`): with
+      ``steps`` given, a ``remainder="native"`` leftover block of
+      ``steps % k`` steps — or a k-block that ``steps < k`` never
+      executes — is gated on what actually runs, and ``ttile > 1``
+      widens the main blocks to ``ttile·k``;
     * ``engine="pallas"`` additionally requires the LOCAL minor extent
       to tile into (vl, m) lane blocks with the halo inside one block
       row (``m >= r``, ``vl >= r``) and — n-D — a pipeline tile ``t0``
@@ -530,7 +584,10 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
         return False
     r = spec.r
     local = [n // s for n, s in zip(shape, decomp)]
-    if any(s > 1 and k * r > nl for nl, s in zip(local, decomp)):
+    kmax = _schedule_max_depth(k, steps, remainder, ttile)
+    if any(s > 1 and kmax * r > nl for nl, s in zip(local, decomp)):
+        return False
+    if ttile > 1 and sweep != "resident":
         return False
     if engine == "jnp":
         return True
@@ -542,6 +599,110 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
     if spec.ndim > 1 and (t0 is None or t0 < r or local[0] % t0):
         return False
     return True
+
+
+def _ttile_window_bytes(spec: stencils.StencilSpec,
+                        local: Sequence[int], depth: int, vl: int, m: int,
+                        t0: int | None, itemsize: int = 4) -> int:
+    """VMEM bytes the resident kernels keep live for a depth-``depth``
+    launch: the (depth, block) sliding window plus the (depth, r, lanes)
+    boundary carries (see ``kernels/stencil_kernels`` scratch shapes)."""
+    r = spec.r
+    if spec.ndim == 1:
+        window = depth * m * vl
+        carry = depth * r * vl
+    else:
+        mid = int(np.prod(local[1:-1])) if spec.ndim > 2 else 1
+        block = (t0 or 1) * mid * local[-1]
+        window = depth * block
+        carry = depth * r * mid * local[-1]
+    return (window + carry) * itemsize
+
+
+def ttile_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
+                     plan: StencilPlan, steps: int | None = None,
+                     itemsize: int = 4,
+                     n_devices: int | None = None) -> bool:
+    """Legality gate for the temporal-tile axis of a resident-sweep plan.
+
+    ``ttile = 1`` is always legal (it IS the base resident plan).  For
+    ``ttile > 1``:
+
+    * engine: only the resident sweep engines time-tile — ``pallas`` with
+      ``sweep="resident"`` or the ``distributed`` backend (whose local
+      sweeps are resident by construction);
+    * slope-fits-extent: a depth-``d = ttile·k`` trapezoid launch drags a
+      halo slope of ``d·r`` points behind the sweep front; the pipelined
+      extent of the LOCAL block (``local[0]`` for n-D, the full extent
+      for 1-D) must hold it, or the wrapped grid re-reads blocks still
+      being written (on the distributed backend this is the same bound
+      as the ghost ring: ``d·r <= nl`` on every decomposed axis);
+    * steps-amortizable: with ``steps`` given, at least one full
+      ``ttile·k`` block must execute (``steps // k >= ttile``) — deeper
+      tiles than the run are wasted redundant compute;
+    * VMEM window: the kernel's live scratch
+      (:func:`_ttile_window_bytes`) must fit
+      :data:`TTILE_VMEM_BUDGET` — deep tiles on fat blocks would spill
+      the very window residency the schedule exists to exploit.
+    """
+    tt = plan.ttile
+    if tt < 1:
+        return False
+    if tt == 1:
+        return True
+    if plan.backend == "pallas":
+        if plan.sweep != "resident":
+            return False
+    elif plan.backend == "distributed":
+        # the jnp engine's halo-extended sweeps are resident by
+        # construction; the pallas engine must not be the per-exchange
+        # roundtrip rendering
+        if plan.scheme == "transpose" and plan.sweep != "resident":
+            return False
+    else:
+        return False
+    if steps is not None and steps // max(plan.k, 1) < tt:
+        return False
+    depth = tt * max(plan.k, 1)
+    r = spec.r
+    shape = tuple(shape)
+    if plan.backend == "distributed":
+        if plan.decomp is None:
+            return False
+        local = tuple(n // s for n, s in zip(shape, plan.decomp))
+        if any(s > 1 and depth * r > nl
+               for nl, s in zip(local, plan.decomp)):
+            return False
+    else:
+        local = shape
+    n_pipe = local[0] if spec.ndim > 1 else local[-1]
+    if depth * r > n_pipe:
+        return False
+    uses_pallas = plan.backend == "pallas" or plan.scheme == "transpose"
+    if uses_pallas:
+        vl = plan.vl if plan.m is not None else 8
+        m = plan.m if plan.m is not None else 8
+        if _ttile_window_bytes(spec, local, depth, vl, m, plan.t0,
+                               itemsize) > TTILE_VMEM_BUDGET:
+            return False
+    return True
+
+
+def _ttile_fanout(spec: stencils.StencilSpec, shape: Sequence[int],
+                  plans: list[StencilPlan],
+                  steps: int | None) -> list[StencilPlan]:
+    """Fan resident-sweep candidates out along the temporal-tile axis:
+    each legal base plan also enumerates ``ttile`` ∈ ``_TTILES`` variants
+    that pass :func:`ttile_plan_legal`.  Base (ttile=1) plans always
+    stay in the pool — the ttile variants trade redundant compute for
+    HBM/ghost round-trips, and measurement decides."""
+    out = list(plans)
+    for plan in plans:
+        for tt in _TTILES:
+            cand = dataclasses.replace(plan, ttile=tt)
+            if ttile_plan_legal(spec, shape, cand, steps):
+                out.append(cand)
+    return out
 
 
 def _decomps_for(ndim: int, n_devices: int) -> list[tuple[int, ...]]:
@@ -584,11 +745,14 @@ def _distributed_candidates(spec: stencils.StencilSpec,
     cands: list[StencilPlan] = []
     for decomp in _decomps_for(spec.ndim, n_devices):
         for k in _KS:
-            if distributed_plan_legal(spec, shape, decomp, k, "jnp",
-                                      n_devices=n_devices):
-                cands += _with_remainder(
-                    StencilPlan(scheme="fused", k=k, backend="distributed",
-                                decomp=decomp), steps, k)
+            base = StencilPlan(scheme="fused", k=k, backend="distributed",
+                               decomp=decomp)
+            jnp_variants = [
+                p for p in _with_remainder(base, steps, k)
+                if distributed_plan_legal(
+                    spec, shape, decomp, k, "jnp", n_devices=n_devices,
+                    steps=steps, remainder=p.remainder)]
+            cands += _ttile_fanout(spec, shape, jnp_variants, steps)
             if not pallas_ok:
                 continue
             # pallas engines: tiles are picked from the LOCAL extents —
@@ -603,15 +767,18 @@ def _distributed_candidates(spec: stencils.StencilSpec,
             for vl, m in _pallas_pairs(n_minor, spec.r)[:2]:
                 for t0 in t0s:
                     for swp in ("resident", "roundtrip"):
-                        if not distributed_plan_legal(
+                        base = StencilPlan(
+                            scheme="transpose", k=k, vl=vl, m=m, t0=t0,
+                            backend="distributed", decomp=decomp,
+                            sweep=swp)
+                        variants = [
+                            p for p in _with_remainder(base, steps, k)
+                            if distributed_plan_legal(
                                 spec, shape, decomp, k, "pallas", swp,
-                                vl, m, t0, n_devices):
-                            continue
-                        cands += _with_remainder(
-                            StencilPlan(scheme="transpose", k=k, vl=vl,
-                                        m=m, t0=t0, backend="distributed",
-                                        decomp=decomp, sweep=swp),
-                            steps, k)
+                                vl, m, t0, n_devices, steps=steps,
+                                remainder=p.remainder)]
+                        cands += _ttile_fanout(spec, shape, variants,
+                                               steps)
     return cands
 
 
@@ -636,7 +803,12 @@ def _pallas_candidates(spec: stencils.StencilSpec, shape: tuple[int, ...],
                 for k in _KS:
                     plan = StencilPlan(scheme="transpose", k=k, vl=vl, m=m,
                                        t0=t0, backend="pallas", sweep=sweep)
-                    cands += _with_remainder(plan, steps, k)
+                    variants = [
+                        p for p in _with_remainder(plan, steps, k)
+                        if pallas_plan_legal(
+                            spec, shape, vl, m, t0, sweep, k=k,
+                            steps=steps, remainder=p.remainder)]
+                    cands += _ttile_fanout(spec, shape, variants, steps)
     return cands
 
 

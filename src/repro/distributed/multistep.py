@@ -61,6 +61,7 @@ for an existing mesh (used by the dry-run and benchmarks).
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Sequence
 
 import jax
@@ -158,23 +159,29 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
              steps: int, k: int = 2, engine: str = "jnp",
              sweep: str = "resident", remainder: str = "fused",
              vl: int | None = None, m: int | None = None,
-             t0: int | None = None, interpret: bool | None = None):
+             t0: int | None = None, interpret: bool | None = None,
+             ttile: int = 1):
     """ONE jitted shard_map program advancing the global array ``steps``
     periodic steps in k-step halo-exchange sweeps (plus the ``steps % k``
-    remainder under ``remainder``).  Cached (FIFO-bounded at
-    :data:`_PROGRAMS_MAX`) per effective configuration — the key is the
-    (kk, n_sweeps) *schedule*, not the raw (steps, k, remainder) triple,
-    and fields the jnp engine ignores are normalized away, so equivalent
-    requests share one program and later calls are dict hits (satellite
-    of ISSUE 4: no per-call mesh rebuild or re-jit)."""
+    remainder under ``remainder``).  ``ttile`` regroups the main k-blocks
+    into depth-``ttile·k`` launches — ONE ghost exchange (of the wider
+    ``ttile·k·r`` ring) per temporal tile instead of per k-block; the
+    sweep bodies below are depth-generic, so the deeper launches reuse
+    them unchanged.  Cached (FIFO-bounded at :data:`_PROGRAMS_MAX`) per
+    effective configuration — the key is the (kk, n_sweeps) *schedule*,
+    not the raw (steps, k, remainder, ttile) tuple, and fields the jnp
+    engine ignores are normalized away, so equivalent requests share one
+    program and later calls are dict hits (satellite of ISSUE 4: no
+    per-call mesh rebuild or re-jit)."""
     interpret = _auto_interpret(interpret)
     if remainder not in ("fused", "native"):
         raise ValueError(f"unknown remainder policy {remainder!r}")
     decomp = tuple(decomp)
     r = spec.r
-    # (kk, n_sweeps) schedule: main k-blocks then the remainder policy —
-    # the shared decomposition the roofline also charges
-    chunks, _ = sweep_schedule(k, steps, remainder)
+    # (kk, n_sweeps) schedule: ttile-grouped main k-blocks then the
+    # remainder policy — the shared decomposition the roofline also
+    # charges
+    chunks, _ = sweep_schedule(k, steps, remainder, ttile)
 
     if engine == "jnp":          # tile/sweep/interpret fields are inert
         vl = m = t0 = None
@@ -356,7 +363,8 @@ def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
                     sweep: str = "resident", remainder: str = "fused",
                     vl: int | None = None, m: int | None = None,
                     t0: int | None = None,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    ttile: int = 1) -> jax.Array:
     """Advance ``x`` by ``steps`` periodic steps on a device mesh.
 
     ``shards`` (the plan's ``decomp`` axis) names the per-spatial-axis
@@ -364,8 +372,17 @@ def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
     the default mesh over all visible devices is used.  Any ``steps`` is
     valid — the ``steps % k`` remainder runs inside the same program
     under ``remainder`` ("fused": single steps, "native": one shorter
-    k=remainder sweep).  The program and mesh are cached, so steady-state
-    calls are a dict lookup + dispatch."""
+    k=remainder sweep), and ``ttile`` fuses that many consecutive
+    k-blocks into one deeper launch (one ghost exchange per
+    ``ttile·k`` steps).  A schedule whose deepest launch outgrows the
+    shard — a too-ambitious ``ttile``, or a ``remainder="native"``
+    leftover block thicker than the local extent — is degraded here
+    with a warning (``ttile`` clamped to the deepest feasible value,
+    then the remainder policy falls back to "fused") instead of
+    raising deep inside the kernel build; only a main k-block that
+    can never fit still raises (:func:`make_run`'s pinned error).
+    The program and mesh are cached, so steady-state calls are a dict
+    lookup + dispatch."""
     if mesh is None:
         if shards is not None:
             mesh, decomp = mesh_for_shards(shards)
@@ -374,8 +391,40 @@ def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
     assert decomp is not None
     if steps <= 0:
         return x
+    ttile = max(ttile, 1)
+    nshards = [1 if a is None else _axis_shards(mesh, a) for a in decomp]
+    if (ttile > 1 or remainder == "native") and any(s > 1 for s in nshards):
+        local = [n // s for n, s in zip(x.shape, nshards)]
+        r = spec.r
+
+        def fits(tt: int, pol: str) -> bool:
+            chunks, _ = sweep_schedule(k, steps, pol, tt)
+            dmax = max((d for d, _ in chunks), default=1)
+            return all(s <= 1 or dmax * r <= nl
+                       for nl, s in zip(local, nshards))
+
+        pols = (remainder,) if remainder == "fused" else (remainder,
+                                                          "fused")
+        for tt in range(ttile, 0, -1):      # deepest feasible tile wins,
+            pol = next((p for p in pols if fits(tt, p)), None)
+            if pol is not None:             # requested remainder preferred
+                if (tt, pol) != (ttile, remainder):
+                    warnings.warn(
+                        f"distributed schedule (k={k}, ttile={ttile}, "
+                        f"remainder={remainder!r}, steps={steps}) needs a "
+                        "deeper halo than the local shard extents "
+                        f"{tuple(local)} under decomp {tuple(decomp)} "
+                        f"support; running ttile={tt}, remainder={pol!r} "
+                        "instead", stacklevel=2)
+                ttile, remainder = tt, pol
+                break
+        else:
+            # no feasible downgrade → the main k-block itself is too deep;
+            # drop the temporal tile so make_run's pinned error names the
+            # irreducible k·r halo, not the (already-abandoned) ttile·k
+            ttile = 1
     pspec = halo.partition_spec(decomp, spec.ndim)
     x = jax.device_put(x, NamedSharding(mesh, pspec))
     prog = make_run(spec, mesh, decomp, steps, k, engine, sweep, remainder,
-                    vl, m, t0, interpret)
+                    vl, m, t0, interpret, ttile)
     return prog(x)

@@ -63,7 +63,11 @@ def pick_tile(spec: StencilSpec, shape, vl: int | None = None,
     n_minor = shape[-1]
     r = spec.r
     vl_req = vl
-    vl = vl or (sk.DEFAULT_VL if n_minor % (sk.DEFAULT_VL * 2) == 0 else 8)
+    # any 128-divisible extent gets the native lane count (the historical
+    # `% (DEFAULT_VL * 2)` test silently dropped shapes like (384,) —
+    # divisible by 128 but not 256 — to vl=8, pessimizing every
+    # auto-tiled candidate; regression-pinned in tests/test_resident_sweep)
+    vl = vl or (sk.DEFAULT_VL if n_minor % sk.DEFAULT_VL == 0 else 8)
     fit = _fit_m(n_minor, vl, r, m)
     while fit is None and vl_req is None and vl // 2 >= max(r, 1):
         vl //= 2                      # auto-picked vl: fall back to smaller
@@ -185,48 +189,56 @@ def stencil_run_periodic(spec: StencilSpec, x: jax.Array, steps: int,
 def _sweep_periodic_impl(spec: StencilSpec, x: jax.Array, steps: int,
                          k: int, vl: int | None, m: int | None,
                          t0: int | None, remainder: str,
-                         interpret: bool | None) -> jax.Array:
+                         interpret: bool | None,
+                         ttile: int = 1) -> jax.Array:
     if remainder not in ("fused", "native"):
         raise ValueError(f"unknown remainder policy {remainder!r}")
     interpret = _auto_interpret(interpret)
     vl, m, t0 = pick_tile(spec, x.shape, vl, m, t0)
     if steps <= 0:
         return x
-    n_main, rem = divmod(steps, k)
+    # the shared (depth, n_launches) decomposition: ttile-grouped main
+    # k-blocks, ungrouped k-block leftovers, then the remainder policy —
+    # the same chunks the distributed runtime executes and the roofline
+    # charges (core.api.sweep_schedule is the single source of truth)
+    from repro.core.api import sweep_schedule
+    chunks, _ = sweep_schedule(k, steps, remainder, ttile)
     if spec.ndim == 1:
         t = sk.block_transpose(x, vl, m, interpret=interpret)
-        sweep = lambda v, kk: sk.stencil1d_sweep_periodic(
-            spec, v, kk, interpret=interpret)
+        sweep = lambda v, kk, tt: sk.stencil1d_sweep_ttile(
+            spec, v, kk, tt, interpret=interpret)
     else:
         t = layouts.to_transpose_layout(x, vl, m)
-        sweep = lambda v, kk: sk.stencil_nd_sweep_periodic(
-            spec, v, kk, t0, interpret=interpret)
+        sweep = lambda v, kk, tt: sk.stencil_nd_sweep_ttile(
+            spec, v, kk, tt, t0, interpret=interpret)
 
-    def sweeps(v, kk, n):
+    def sweeps(v, kk, tt, n):
         if n == 1:
-            return sweep(v, kk)
-        return jax.lax.fori_loop(0, n, lambda _, u: sweep(u, kk), v)
+            return sweep(v, kk, tt)
+        return jax.lax.fori_loop(0, n, lambda _, u: sweep(u, kk, tt), v)
 
-    if n_main:
-        t = sweeps(t, k, n_main)
-    if rem:
-        # remainder fused INTO the same program: "native" runs one shorter
-        # k=rem pipelined sweep, "fused" runs rem single-step sweeps —
-        # either way the array never leaves the transpose layout.
-        t = sweep(t, rem) if remainder == "native" else sweeps(t, 1, rem)
+    for depth, n in chunks:
+        # a depth-k·ttile chunk runs as the time-tiled kernel (one HBM
+        # round-trip per ttile k-blocks); plain k-blocks and the
+        # remainder ("native": one shorter k=rem pipelined sweep,
+        # "fused": rem single-step sweeps) run at ttile=1 — either way
+        # the array never leaves the transpose layout.
+        kk, tt = (k, depth // k) if depth > k and depth % k == 0 \
+            else (depth, 1)
+        t = sweeps(t, kk, tt, n)
     if spec.ndim == 1:
         return sk.block_untranspose(t, vl, m, interpret=interpret)
     return layouts.from_transpose_layout(t, vl, m)
 
 
 _sweep_jit = jax.jit(_sweep_periodic_impl,
-                     static_argnums=(0, 2, 3, 4, 5, 6, 7, 8))
+                     static_argnums=(0, 2, 3, 4, 5, 6, 7, 8, 9))
 # donated twin: XLA reuses x's buffer for the result (no double-buffering
 # at the jit boundary).  The caller's x is INVALIDATED on donation-capable
 # backends (TPU) — opt in only when the input is dead after the call
 # (steady-state sweep loops, benchmarks); CPU ignores donation.
 _sweep_jit_donated = jax.jit(_sweep_periodic_impl,
-                             static_argnums=(0, 2, 3, 4, 5, 6, 7, 8),
+                             static_argnums=(0, 2, 3, 4, 5, 6, 7, 8, 9),
                              donate_argnums=(1,))
 
 
@@ -235,18 +247,24 @@ def stencil_sweep_periodic(spec: StencilSpec, x: jax.Array, steps: int,
                            m: int | None = None, t0: int | None = None,
                            remainder: str = "fused",
                            interpret: bool | None = None,
-                           donate: bool = False) -> jax.Array:
+                           donate: bool = False,
+                           ttile: int = 1) -> jax.Array:
     """Advance ``x`` by ``steps`` periodic steps, layout-resident.
 
     Equivalent to ``stencil_run_periodic`` over the main k-blocks plus the
     ``steps % k`` remainder under ``remainder`` — bit-identical output —
     but as ONE program: one transpose in, one transpose out, zero
     wrap-pad/crop copies (the sweep kernels wrap their reads through the
-    grid index maps instead).  ``donate=True`` additionally donates ``x``
-    to the program (in-place update on TPU; the caller must not reuse x).
-    """
+    grid index maps instead).  ``ttile > 1`` additionally fuses every
+    ``ttile`` consecutive k-blocks into one depth-``ttile·k`` trapezoid
+    launch (``stencil{1d,_nd}_sweep_ttile``): one HBM round-trip of the
+    grid per ``ttile·k`` steps instead of per ``k``, still bit-identical
+    (Jacobi updates are per-point order-independent, so launch grouping
+    cannot change any arithmetic).  ``donate=True`` additionally donates
+    ``x`` to the program (in-place update on TPU; the caller must not
+    reuse x)."""
     impl = _sweep_jit_donated if donate else _sweep_jit
-    return impl(spec, x, steps, k, vl, m, t0, remainder, interpret)
+    return impl(spec, x, steps, k, vl, m, t0, remainder, interpret, ttile)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))

@@ -238,40 +238,65 @@ def stencil_nd_sweep_halo(spec: StencilSpec, t: jax.Array, k: int, t0: int,
                                 edge_mask=False)
 
 
-def stencil1d_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
-                             *, interpret: bool = True) -> jax.Array:
-    """One fully-periodic k-step sweep on the layout-RESIDENT (nb, m, vl)
-    array — no pad copy, no layout round-trip.
+def stencil1d_sweep_ttile(spec: StencilSpec, t: jax.Array, k: int,
+                          ttile: int = 1, *, interpret: bool = True
+                          ) -> jax.Array:
+    """``ttile`` fully-periodic k-step sweeps — ``depth = ttile·k`` time
+    steps — in ONE wrapped-grid launch on the layout-RESIDENT (nb, m, vl)
+    array: the trapezoid/diamond time-tile schedule over the pipelined
+    block axis.  No pad copy, no layout round-trip, ONE HBM round-trip of
+    the grid per ``ttile·k`` steps (vs one per ``k`` for the plain sweep).
 
-    The grid runs over a virtual padded domain of ``nbp = nb + 2p`` blocks
-    (p halo blocks per side).  Reads wrap through the input index map
-    (``(j - p) mod nb``), so halo blocks come straight from the resident
-    array; writes land at ``(bp - p) mod nb`` where the p corrupted head
-    blocks are re-written correctly later in the same grid and the p
-    corrupted tail writes are suppressed (out index frozen on the last
-    correct block, kernel skips o_ref past ``write_stop``).  Bit-identical
-    to wrap-pad + ``stencil1d_multistep(edge_mask=False)`` + crop."""
+    Each block advances all ``depth`` steps inside the VMEM scratch
+    window before its halo dependence forces the next block touch: the
+    window holds ``depth`` live blocks skewed in time (block ``j-depth+i``
+    at time ``depth-1-i`` — the tile's slope), so the per-block compute is
+    the full time tile and the redundant work lives in the ``2p`` virtual
+    halo blocks (``p = ceil(depth·r / block)``) covering the slope.
+
+    The grid runs over a virtual padded domain of ``nbp = nb + 2p``
+    blocks.  Reads wrap through the input index map (``(j - p) mod nb``),
+    so halo blocks come straight from the resident array; writes land at
+    ``(bp - p) mod nb`` where the p corrupted head blocks are re-written
+    correctly later in the same grid and the p corrupted tail writes are
+    suppressed (out index frozen on the last correct block, kernel skips
+    o_ref past ``write_stop``).  Because Jacobi updates are per-point and
+    order-independent, a depth-``ttile·k`` launch is bit-identical to
+    ``ttile`` successive k-step launches — the parity oracle the tests
+    pin — and to wrap-pad + ``stencil1d_multistep(edge_mask=False)`` +
+    crop."""
     nb, m, vl = t.shape
     r = spec.r
     assert r <= m and r <= vl
-    p = sweep_halo_blocks(r, k, vl * m)
+    depth = k * max(ttile, 1)
+    p = sweep_halo_blocks(r, depth, vl * m)
     nbp = nb + 2 * p
-    kern = functools.partial(_kernel_1d, spec=spec, nb=nbp, m=m, vl=vl, k=k,
-                             edge_mask=False, write_stop=nb + p + k)
+    kern = functools.partial(_kernel_1d, spec=spec, nb=nbp, m=m, vl=vl,
+                             k=depth, edge_mask=False,
+                             write_stop=nb + p + depth)
     return pl.pallas_call(
         kern,
-        grid=(nbp + k,),
+        grid=(nbp + depth,),
         in_specs=[pl.BlockSpec(
             (1, m, vl),
             lambda j: ((jnp.minimum(j, nbp - 1) - p) % nb, 0, 0))],
         out_specs=pl.BlockSpec(
             (1, m, vl),
-            lambda j: ((jnp.clip(j - k, 0, nb + p - 1) - p) % nb, 0, 0)),
+            lambda j: ((jnp.clip(j - depth, 0, nb + p - 1) - p) % nb,
+                       0, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, m, vl), t.dtype),
-        scratch_shapes=[pltpu.VMEM((k, m, vl), t.dtype),
-                        pltpu.VMEM((k, r, vl), t.dtype)],
+        scratch_shapes=[pltpu.VMEM((depth, m, vl), t.dtype),
+                        pltpu.VMEM((depth, r, vl), t.dtype)],
         interpret=interpret,
     )(t)
+
+
+def stencil1d_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
+                             *, interpret: bool = True) -> jax.Array:
+    """One fully-periodic k-step sweep on the layout-RESIDENT (nb, m, vl)
+    array — the ``ttile=1`` slice of :func:`stencil1d_sweep_ttile` (see
+    there for the wrapped-grid construction)."""
+    return stencil1d_sweep_ttile(spec, t, k, 1, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -371,42 +396,59 @@ def stencil_nd_multistep(spec: StencilSpec, t: jax.Array, k: int, t0: int,
     )(t)
 
 
-def stencil_nd_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
-                              t0: int, *, interpret: bool = True
-                              ) -> jax.Array:
-    """One fully-periodic k-step sweep on the layout-RESIDENT
+def stencil_nd_sweep_ttile(spec: StencilSpec, t: jax.Array, k: int,
+                           ttile: int, t0: int, *, interpret: bool = True
+                           ) -> jax.Array:
+    """``ttile`` fully-periodic k-step sweeps (``depth = ttile·k`` time
+    steps) in ONE wrapped-grid launch on the layout-RESIDENT
     (n0, *mid, nb, m, vl) array — the n-D analogue of
-    :func:`stencil1d_sweep_periodic`, wrapping the pipeline-tile axis
+    :func:`stencil1d_sweep_ttile`, time-tiling the pipeline-tile axis
     (axis 0) through the index maps instead of a wrap-pad copy.  Mid dims
     and the unit-stride dim are periodic in-kernel already (rolls +
-    ``extend_vs`` lane carry)."""
+    ``extend_vs`` lane carry), so the trapezoid slope only widens the
+    axis-0 virtual halo: ``p = ceil(depth·r / t0)`` tiles per side, and
+    every (t0 × mid × vl·m) tile advances the full ``depth`` steps in
+    VMEM between HBM touches.  Bit-identical to ``ttile`` successive
+    k-step launches (Jacobi updates are per-point order-independent)."""
     n0 = t.shape[0]
     r = spec.r
     assert n0 % t0 == 0 and t0 >= r, (n0, t0, r)
     assert r <= t.shape[-2]
+    depth = k * max(ttile, 1)
     n0t = n0 // t0
-    p = sweep_halo_blocks(r, k, t0)
+    p = sweep_halo_blocks(r, depth, t0)
     n0tp = n0t + 2 * p
     block = (t0,) + t.shape[1:]
     nd = t.ndim
-    kern = functools.partial(_kernel_nd, spec=spec, n0t=n0tp, t0=t0, k=k,
-                             edge_mask=False, write_stop=n0t + p + k)
+    kern = functools.partial(_kernel_nd, spec=spec, n0t=n0tp, t0=t0,
+                             k=depth, edge_mask=False,
+                             write_stop=n0t + p + depth)
     zeros_tail = (0,) * (nd - 1)
     return pl.pallas_call(
         kern,
-        grid=(n0tp + k,),
+        grid=(n0tp + depth,),
         in_specs=[pl.BlockSpec(
             block,
             lambda j: ((jnp.minimum(j, n0tp - 1) - p) % n0t,) + zeros_tail)],
         out_specs=pl.BlockSpec(
             block,
-            lambda j: ((jnp.clip(j - k, 0, n0t + p - 1) - p) % n0t,)
+            lambda j: ((jnp.clip(j - depth, 0, n0t + p - 1) - p) % n0t,)
             + zeros_tail),
         out_shape=jax.ShapeDtypeStruct(t.shape, t.dtype),
-        scratch_shapes=[pltpu.VMEM((k,) + block, t.dtype),
-                        pltpu.VMEM((k, r) + block[1:], t.dtype)],
+        scratch_shapes=[pltpu.VMEM((depth,) + block, t.dtype),
+                        pltpu.VMEM((depth, r) + block[1:], t.dtype)],
         interpret=interpret,
     )(t)
+
+
+def stencil_nd_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
+                              t0: int, *, interpret: bool = True
+                              ) -> jax.Array:
+    """One fully-periodic k-step sweep on the layout-RESIDENT
+    (n0, *mid, nb, m, vl) array — the ``ttile=1`` slice of
+    :func:`stencil_nd_sweep_ttile` (see there for the wrapped-grid
+    construction)."""
+    return stencil_nd_sweep_ttile(spec, t, k, 1, t0, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,12 @@ step a plan costs:
                 Pallas plans add the periodic halo ring plus the layout
                 round-trip / pad-crop traffic of their sweep engine:
                 per-sweep for "roundtrip", once per run for "resident"
-                (:func:`pallas_extra_bytes_per_step`).
+                (:func:`pallas_extra_bytes_per_step`).  Temporal-tiled
+                resident plans (``ttile > 1``) charge HBM once per
+                depth-``ttile·k`` launch, each launch paying the halo
+                ring AND redundant compute of ITS depth (ext factor
+                ``1 + 2·depth·r/n0``) — round-trips per run fall as
+                1/ttile at a redundant-compute tax the ranking sees.
   collective    distributed plans only: the ppermute ghost-ring traffic,
                 charged per *k-block* (one exchange per sweep).  The
                 BYTES per step are flat in k — a k-wide ring ships k× the
@@ -134,7 +139,8 @@ def distributed_exchanges_per_step(plan, steps: int | None = None) -> float:
         return 0.0
     from repro.core.api import sweep_schedule
     chunks, total = sweep_schedule(max(plan.k, 1), steps,
-                                   getattr(plan, "remainder", "fused"))
+                                   getattr(plan, "remainder", "fused"),
+                                   getattr(plan, "ttile", 1))
     return 2.0 * ndec * sum(n for _, n in chunks) / total
 
 
@@ -228,7 +234,13 @@ def _distributed_terms(spec, shape, itemsize, plan,
     # ghost ring arrives by ppermute), so it pays the round-trip alone.
     rt_per_sweep = engine_pallas and \
         getattr(plan, "sweep", "roundtrip") != "resident"
-    chunks, total = sweep_schedule(plan.k, steps, remainder)
+    # the temporal tile regroups the main k-blocks into depth-ttile·k
+    # launches: the per-chunk loop below then charges each launch its own
+    # (wider) ghost ring, redundant-halo factor and ONE exchange — the
+    # 1/ttile collective-count win and the deeper-slope compute tax both
+    # fall out of the shared schedule.
+    chunks, total = sweep_schedule(plan.k, steps, remainder,
+                                   getattr(plan, "ttile", 1))
     flops = mem = coll = 0.0
     for kk, n in chunks:
         flops += n * kk * pts_dev * ext_factor(kk) * (arith + reorg)
@@ -273,10 +285,34 @@ def plan_terms(spec, shape: Sequence[int], itemsize: int, plan,
         mem_bytes *= _DLT_BW_PENALTY
     if backend == "pallas":
         n0 = shape[0] if spec.ndim > 1 else shape[-1]
+        sweep_engine = getattr(plan, "sweep", "roundtrip")
+        ttile = getattr(plan, "ttile", 1)
+        if ttile > 1 and sweep_engine == "resident":
+            # temporal tiling: HBM is charged once per depth-d launch
+            # (d = ttile·k for the main blocks), not once per k-block —
+            # the per-chunk loop mirrors the distributed accounting.
+            # Each launch pays the halo-ring factor of ITS depth
+            # (ext = 1 + 2·d·r/n0: the wrapped grid re-reads/RE-COMPUTES
+            # d·r halo blocks per side — the redundant-compute tax that
+            # deeper trapezoids trade for fewer round-trips), applied to
+            # the compute term too, unlike the shallow ttile=1 model
+            # where the re-read is noise.
+            from repro.core.api import sweep_schedule
+            chunks, total = sweep_schedule(plan.k, steps, remainder,
+                                           ttile)
+            flops = mem_bytes = 0.0
+            for depth, n in chunks:
+                ext = 1.0 + 2.0 * depth * spec.r / max(n0, 1)
+                flops += n * depth * pts * (arith + reorg) * ext
+                mem_bytes += n * 2.0 * pts * itemsize * ext
+            flops /= total
+            mem_bytes /= total
+            mem_bytes += pallas_extra_bytes_per_step(
+                pts, itemsize, "resident", 0.0, steps)
+            return flops, mem_bytes, 0.0
         mem_bytes *= 1.0 + 2.0 * plan.k * spec.r / max(n0, 1)
         mem_bytes += pallas_extra_bytes_per_step(
-            pts, itemsize, getattr(plan, "sweep", "roundtrip"), sweeps,
-            steps)
+            pts, itemsize, sweep_engine, sweeps, steps)
     return flops, mem_bytes, 0.0
 
 

@@ -218,6 +218,12 @@ class StencilService:
         with self._lock:
             self._closed = True
             ex, self._executor = self._executor, None
+            # drain the in-flight map under the lock: a warm_async racing
+            # this close either saw _closed (raises) or already registered
+            # its future — clearing here guarantees no stale future is
+            # handed to a later caller, whatever the interleaving (the
+            # done-callbacks' pop()s become harmless no-ops)
+            self._warming.clear()
         if ex is not None:
             ex.shutdown(wait=wait, cancel_futures=True)
 
@@ -237,8 +243,12 @@ class StencilService:
         # the lock (plan_for/_problem mutate _plans concurrently), and only
         # while the signature is still memoized — a warm finishing after
         # its problem was LRU-evicted must not leave an orphan plan entry.
+        # A tune that outlives close() (close(wait=False), or a caller
+        # holding the future) still RETURNS its plan — and tune() already
+        # persisted it to the shared cache file — but must not repopulate
+        # the closed service's memo: the late publish is a no-op.
         with self._lock:
-            if sig in self._problems:
+            if not self._closed and sig in self._problems:
                 self._plans[(sig, steps)] = result.plan
                 if steps is not None and \
                         autotune.normalize_steps(steps) is None:

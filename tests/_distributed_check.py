@@ -15,6 +15,13 @@ Invoked by test_distributed.py; exits non-zero on any mismatch.  Covers:
   * a pallas grid (block-count) pin: the resident sweeps run the
     halo-aware kernels with NO 2p virtual wrap halo — grid is exactly
     nb_ext + k, not nb_ext + 2p + k (the small-shard overhead fix);
+  * temporal tiling (ttile>1): one ghost exchange per ttile·k steps is
+    bit-identical (pallas engine; jnp pins to a few ulp — XLA FMA
+    contraction varies with unroll depth) to the ttile=1 schedule across
+    1-D/minor-axis/2-D-mesh decomps × remainder policies × ragged
+    steps; the shared
+    sweep_schedule pins; the runtime warn-and-degrade fallback for
+    schedules too deep for the shard; the ttile fan-out in plan="auto";
   * pinned ValueError messages for the remaining genuinely-illegal
     decompositions (halo thicker than the shard; no legal lane block);
   * plan="auto" on the 8-device mesh: distributed candidates —
@@ -244,6 +251,11 @@ def check_illegal_decomp_messages():
 
 
 def check_program_and_mesh_caches():
+    # start from an empty program cache: the growth assertions below
+    # (hit vs. new-schedule) are meaningless once the earlier checks have
+    # saturated the FIFO bound (every insert then evicts one)
+    with multistep._lock:
+        multistep._programs.clear()
     spec = stencils.make("1d3p")
     x = jnp.zeros((512,), jnp.float32)
     m1, _ = multistep.mesh_for_shards((8,))
@@ -370,6 +382,132 @@ def check_auto_plan_selects_minor_axis():
     print("plan='auto' minor-axis/2-D-mesh selection ok")
 
 
+def check_ttile_parity(name, shape, shards, steps, k, ttile, remainder,
+                       **kw):
+    """Temporal tiling on the distributed engines: ttile>1 (one ghost
+    exchange per ttile·k steps, ttile·k·r-wide ring) vs the ttile=1
+    shard-resident schedule.  The PALLAS engine is BIT-identical — the
+    kernels iterate the depth axis one step at a time, so a depth-4
+    launch runs the same arithmetic sequence as two depth-2 launches.
+    The jnp engine unrolls ``apply_once`` kk times into one fusion and
+    XLA's FMA contraction varies with the unroll depth on multi-tap
+    stencils (both roundings correct) — so jnp pins to a few ulp."""
+    spec = stencils.make(name)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    for engine in ("jnp", "pallas"):
+        ekw = kw if engine == "pallas" else {}
+        tt = multistep.distributed_run(spec, x, steps, k, engine=engine,
+                                       shards=shards, remainder=remainder,
+                                       ttile=ttile, **ekw)
+        base = multistep.distributed_run(spec, x, steps, k, engine=engine,
+                                         shards=shards,
+                                         remainder=remainder, **ekw)
+        msg = (f"{name} {shards} k={k} ttile={ttile} steps={steps} "
+               f"{remainder} {engine}: != ttile=1")
+        if engine == "pallas":
+            np.testing.assert_array_equal(np.asarray(tt), np.asarray(base),
+                                          err_msg=msg + " (must be "
+                                          "bit-identical)")
+        else:
+            np.testing.assert_allclose(np.asarray(tt), np.asarray(base),
+                                       rtol=3e-7, atol=3e-7, err_msg=msg)
+        want = _f64_oracle(spec, x, steps)
+        np.testing.assert_allclose(np.asarray(tt), want.astype(np.float32),
+                                   rtol=5e-5, atol=5e-5)
+    print(f"ttile parity ok: {name} {shape} shards={shards} steps={steps} "
+          f"k={k} ttile={ttile} rem={remainder}")
+
+
+def check_ttile_schedule_pin():
+    """The shared schedule is the single source of truth: ttile regroups
+    the main k-blocks and leaves the remainder semantics mod k."""
+    from repro.core.api import sweep_schedule
+    assert sweep_schedule(2, 16, "fused", 4) == ([(8, 2)], 16)
+    assert sweep_schedule(2, 13, "fused", 2) == ([(4, 3), (1, 1)], 13)
+    assert sweep_schedule(2, 13, "native", 2) == ([(4, 3), (1, 1)], 13)
+    assert sweep_schedule(2, 11, "native", 2) == \
+        ([(4, 2), (2, 1), (1, 1)], 11)
+    assert sweep_schedule(2, None, "fused", 4) == ([(8, 1)], 8)
+    # ttile=1 output identical to the pre-ttile schedule shape
+    assert sweep_schedule(2, 7, "native") == ([(2, 3), (1, 1)], 7)
+    # fewer exchanges per run: the roofline sees the 1/ttile count win
+    from repro.core.api import StencilPlan
+    from repro.roofline.stencil import distributed_exchanges_per_step
+    base = StencilPlan(scheme="fused", k=2, backend="distributed",
+                       decomp=(8,))
+    import dataclasses
+    tiled = dataclasses.replace(base, ttile=4)
+    assert distributed_exchanges_per_step(tiled, 16) == \
+        distributed_exchanges_per_step(base, 16) / 4
+    print("ttile schedule pin ok")
+
+
+def check_ttile_fallback_warns():
+    """A schedule too deep for the shard degrades with a warning instead
+    of raising inside the kernel build: ttile clamps to the deepest
+    feasible tile; a native remainder thicker than the shard falls back
+    to fused.  An infeasible MAIN k-block still raises the pinned
+    error."""
+    import warnings as _w
+    spec = stencils.make("1d3p")
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(64),
+                    dtype=jnp.float32)          # 8 shards × local extent 8
+    want = _f64_oracle(spec, x, 32)
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        got = multistep.distributed_run(spec, x, 32, k=2, engine="jnp",
+                                        shards=(8,), ttile=8)
+    msgs = [str(r.message) for r in rec
+            if "needs a deeper halo" in str(r.message)]
+    assert msgs and "running ttile=4" in msgs[0], msgs
+    np.testing.assert_allclose(np.asarray(got), want.astype(np.float32),
+                               rtol=5e-5, atol=5e-5)
+
+    # native remainder block (12 steps) thicker than the shard → fused
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        got2 = multistep.distributed_run(spec, x, 12, k=16, engine="jnp",
+                                         shards=(8,), remainder="native")
+    msgs2 = [str(r.message) for r in rec
+             if "remainder='fused'" in str(r.message)]
+    assert msgs2, [str(r.message) for r in rec]
+    np.testing.assert_allclose(np.asarray(got2),
+                               _f64_oracle(spec, x, 12).astype(np.float32),
+                               rtol=5e-5, atol=5e-5)
+
+    # main k-block too deep: no downgrade can help → pinned error
+    try:
+        multistep.distributed_run(spec, x, 32, k=16, engine="pallas",
+                                  shards=(8,), ttile=2)
+        raise AssertionError("infeasible main k-block must raise")
+    except ValueError as e:
+        assert "halo k*r = 16 exceeds the local extent 8" in str(e), e
+    print("ttile fallback warnings ok")
+
+
+def check_auto_pool_enumerates_ttile():
+    """The unified pool fans resident candidates out along the ttile
+    axis, gated by ttile_plan_legal; dict round-trip keeps the field."""
+    from repro.core import autotune
+    from repro.core.api import StencilProblem
+
+    prob = StencilProblem("1d3p", (8 * 4 * 4 * 4,))
+    cands = autotune.candidate_plans(prob.spec, prob.shape, steps=16)
+    dist_tt = {p.ttile for p in cands if p.backend == "distributed"}
+    assert dist_tt >= {1, 2, 4}, dist_tt
+    # roundtrip sweeps never time-tile
+    assert all(p.ttile == 1 for p in cands if p.sweep == "roundtrip")
+    tiled = next(p for p in cands
+                 if p.backend == "distributed" and p.ttile == 4)
+    assert autotune.plan_from_dict(autotune.plan_to_dict(tiled)) == tiled
+    # pre-ttile cache records (no "ttile" key) still deserialize
+    d = autotune.plan_to_dict(tiled)
+    del d["ttile"]
+    assert autotune.plan_from_dict(d).ttile == 1
+    print(f"auto pool ttile fan-out ok ({sorted(dist_tt)})")
+
+
 def main():
     assert len(jax.devices()) == 8, jax.devices()
 
@@ -440,6 +578,23 @@ def main():
     # resident default
     check("1d3p", (8 * 4 * 4 * 4,), steps=4, k=2, engine="pallas",
           vl=4, m=4)
+
+    # TEMPORAL TILING: 1-D, minor-axis and 2-D-mesh decomps, k>1, both
+    # remainder policies, ragged steps — one exchange per ttile·k steps,
+    # bit-identical to the ttile=1 schedule
+    check_ttile_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=16, k=2,
+                       ttile=2, remainder="fused", vl=4, m=4)
+    check_ttile_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=11, k=2,
+                       ttile=2, remainder="native", vl=4, m=4)
+    check_ttile_parity("1d5p", (8 * 4 * 4 * 8,), (8,), steps=9, k=2,
+                       ttile=2, remainder="fused", vl=4, m=4)
+    check_ttile_parity("2d5p", (32, 8 * 32), (1, 8), steps=8, k=2,
+                       ttile=2, remainder="fused", vl=4, m=4, t0=4)
+    check_ttile_parity("2d5p", (64, 64), (4, 2), steps=13, k=2,
+                       ttile=3, remainder="native", vl=4, m=4, t0=4)
+    check_ttile_schedule_pin()
+    check_ttile_fallback_warns()
+    check_auto_pool_enumerates_ttile()
 
     check_jaxpr_no_per_exchange_transpose()
     check_sweep_grid_pin()

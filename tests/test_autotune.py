@@ -608,3 +608,166 @@ def test_warm_async_close_cancels_queued_warms(cache_path):
         np.asarray(StencilProblem("1d3p", (128,)).reference(x, 4)),
         rtol=2e-5, atol=2e-5)
     svc.close()                           # idempotent
+
+
+def test_warm_async_close_race_late_publish_is_noop(cache_path):
+    """Regression for the close()/warm_async race: a tune still in flight
+    when close() returns (close(wait=False)) must (a) keep its future
+    usable — it resolves to the tuned plan, (b) persist the winner to the
+    shared cache file, and (c) NOT repopulate the closed service's
+    in-process memo; close() drains the in-flight map under the lock so
+    no stale future is ever handed out."""
+    import threading
+
+    from repro.serve.engine import StencilService
+
+    svc = StencilService(cache_path=cache_path)
+    started = threading.Event()
+    release = threading.Event()
+
+    def slow_timer(fn, plan):
+        started.set()
+        release.wait(timeout=30)
+        return 0.001
+
+    fut = svc.warm_async("1d3p", (128,), timer=slow_timer)
+    assert started.wait(timeout=30)
+    svc.close(wait=False)                 # tune is mid-measurement
+    with svc._lock:
+        assert not svc._warming           # drained under the lock
+    release.set()
+    plan = fut.result(timeout=60)         # the caller still gets the plan
+    assert isinstance(plan, StencilPlan)
+    # the winner reached the shared cache file (visible cross-process)...
+    assert autotune.cached_plan(StencilProblem("1d3p", (128,)),
+                                cache_path=cache_path) == plan
+    # ...but the late publish into the closed service was a no-op
+    with svc._lock:
+        assert not svc._plans
+        assert not svc._warming
+    svc.close()                           # idempotent after the race
+
+
+# ---------------------------------------------------------------------------
+# temporal-tile (ttile) axis
+# ---------------------------------------------------------------------------
+
+def test_ttile_legality_gate():
+    """ttile_plan_legal: resident engines only; the depth-ttile·k halo
+    slope must fit the pipelined extent; the run must be deep enough to
+    amortize; the VMEM window must fit the budget."""
+    import dataclasses
+
+    spec = stencils.make("1d3p")
+    base = StencilPlan(scheme="transpose", k=2, vl=8, m=8,
+                       backend="pallas", sweep="resident")
+    tiled = dataclasses.replace(base, ttile=4)
+    assert autotune.ttile_plan_legal(spec, (2048,), base)        # ttile=1
+    assert autotune.ttile_plan_legal(spec, (2048,), tiled, steps=16)
+    # not enough steps to run one full ttile·k block
+    assert not autotune.ttile_plan_legal(spec, (2048,), tiled, steps=6)
+    # roundtrip / jnp backends never time-tile
+    assert not autotune.ttile_plan_legal(
+        spec, (2048,), dataclasses.replace(tiled, sweep="roundtrip"))
+    assert not autotune.ttile_plan_legal(
+        spec, (2048,), StencilPlan(scheme="fused", k=2, ttile=2))
+    # slope exceeds the extent: depth·r = 8 > 4 rows
+    spec2 = stencils.make("2d5p")
+    deep = StencilPlan(scheme="transpose", k=2, vl=8, m=4, t0=4,
+                       backend="pallas", sweep="resident", ttile=4)
+    assert not autotune.ttile_plan_legal(spec2, (4, 64), deep)
+    assert autotune.ttile_plan_legal(spec2, (64, 64), deep)
+    # distributed: the decomposed-axis shard extent bounds the slope
+    dist = StencilPlan(scheme="fused", k=2, backend="distributed",
+                       decomp=(8,), ttile=4)
+    assert autotune.ttile_plan_legal(spec, (256,), dist)     # nl=32 >= 8
+    assert not autotune.ttile_plan_legal(spec, (32,), dist)  # nl=4 < 8
+    # VMEM window: a deep tile on a fat block blows the budget
+    fat = dataclasses.replace(base, vl=128, m=8, ttile=4)
+    assert not autotune.ttile_plan_legal(
+        spec, (1 << 20,), fat,
+        itemsize=autotune.TTILE_VMEM_BUDGET // (4 * 8 * (128 + 1)) + 1)
+
+
+def test_pallas_pool_fans_out_along_ttile_axis():
+    """Resident candidates fan out over ttile ∈ _TTILES (roundtrip stays
+    ttile=1); the roofline ranks a deep-run ttile plan ahead of its
+    ttile=1 twin; the field round-trips through the plan-dict codec and
+    old dicts (no "ttile" key) still load."""
+    import dataclasses
+
+    from repro.roofline.stencil import estimate_plan_time
+
+    spec = stencils.make("1d3p")
+    cands = autotune.candidate_plans(spec, (2048,), backend="pallas",
+                                     steps=16)
+    tts = {p.ttile for p in cands if p.sweep == "resident"}
+    assert tts >= {1, 2, 4}, tts
+    assert all(p.ttile == 1 for p in cands if p.sweep == "roundtrip")
+    for p in cands:
+        if p.ttile > 1:
+            assert autotune.ttile_plan_legal(spec, (2048,), p, steps=16), p
+    tiled = next(p for p in cands if p.ttile == 4 and p.k == 2)
+    base = dataclasses.replace(tiled, ttile=1)
+    assert estimate_plan_time(spec, (1 << 20,), 4, tiled, steps=32) < \
+        estimate_plan_time(spec, (1 << 20,), 4, base, steps=32)
+    d = autotune.plan_to_dict(tiled)
+    assert d["ttile"] == 4
+    assert autotune.plan_from_dict(d) == tiled
+    del d["ttile"]
+    assert autotune.plan_from_dict(d).ttile == 1
+
+
+def test_ttile_winner_round_trips_and_dispatches(cache_path):
+    """A ttile>1 winner survives the cache round-trip and runs bit-
+    identically to its ttile=1 twin through plan='auto' dispatch."""
+    import dataclasses
+
+    prob = StencilProblem("1d3p", (128,))
+
+    def ttile_wins(fn, plan):
+        return 0.001 if plan.ttile == 2 else 1.0
+
+    res = autotune.tune(prob, steps=16, cache_path=cache_path,
+                        timer=ttile_wins, max_measure=500)
+    assert res.plan.ttile == 2 and res.plan.sweep == "resident", res.plan
+    res2 = autotune.tune(prob, steps=16, cache_path=cache_path,
+                         timer=ttile_wins)
+    assert res2.cached and res2.plan == res.plan
+    x = prob.init(0)
+    got = np.asarray(prob.run(x, 16, res2.plan))
+    ref = np.asarray(prob.run(x, 16,
+                              dataclasses.replace(res2.plan, ttile=1)))
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_allclose(got, np.asarray(prob.reference(x, 16)),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_native_remainder_gate_is_schedule_aware():
+    """The remainder-legality fix: a plan whose remainder='native' block
+    is deeper than the grid supports is rejected AT ENUMERATION; a plan
+    whose k exceeds steps is judged by the blocks that actually run."""
+    spec = stencils.make("1d3p")
+    # k=16 on a 12-row pipelined extent: steps=12 never runs the k-block,
+    # only the depth-12 native remainder — legal on n_pipe=2048
+    assert autotune.pallas_plan_legal(spec, (2048,), 8, 8, None,
+                                      "resident", k=16, steps=12,
+                                      remainder="native")
+    # the enumerated pool never carries a native variant whose schedule
+    # depth exceeds the extent
+    spec2 = stencils.make("2d5p")
+    for p in autotune.candidate_plans(spec2, (8, 64), backend="pallas",
+                                      steps=7):
+        kmax = autotune._schedule_max_depth(p.k, 7, p.remainder, p.ttile)
+        assert kmax * spec2.r <= 8, p
+    # distributed: nl=8, k=16 illegal outright; steps=12 native still
+    # needs a depth-12 block (> nl) -> illegal; fused (12 single steps)
+    # is fine
+    assert not autotune.distributed_plan_legal(spec, (64,), (8,), 16,
+                                               n_devices=8)
+    assert not autotune.distributed_plan_legal(spec, (64,), (8,), 16,
+                                               n_devices=8, steps=12,
+                                               remainder="native")
+    assert autotune.distributed_plan_legal(spec, (64,), (8,), 16,
+                                           n_devices=8, steps=12,
+                                           remainder="fused")

@@ -213,6 +213,103 @@ def test_resident_jaxpr_nd_single_layout_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# temporal tiling: depth-ttile·k trapezoid launches vs the PR 3 resident path
+# ---------------------------------------------------------------------------
+
+def _ttile_assert(name, got, ref, msg):
+    """1-D/2-D: the ttile regrouping is BIT-identical to the plain
+    resident schedule (same kernel arithmetic, same order per point).
+    3-D: XLA's FMA contraction varies with the kernel unroll depth — a
+    depth-4 launch and two depth-2 launches already differ by ≤1 ulp on
+    the PRE-EXISTING `stencil_nd_sweep_periodic` path (both are correct
+    roundings, equidistant from the f64 oracle) — so 3-D pins to a few
+    ulp instead."""
+    if stencils.make(name).ndim < 3:
+        np.testing.assert_array_equal(got, ref, err_msg=msg)
+    else:
+        np.testing.assert_allclose(got, ref, rtol=3e-7, atol=3e-7,
+                                   err_msg=msg)
+
+
+@pytest.mark.parametrize("remainder", ["fused", "native"])
+@pytest.mark.parametrize("ttile", [2, 4])
+@pytest.mark.parametrize("name", ["1d3p", "2d5p", "3d7p"])
+def test_ttile_parity_vs_resident(name, ttile, remainder):
+    """ttile>1 == the ttile=1 resident path (the PR 3 engine is the
+    oracle) across divisible, ragged and sub-k step counts; both ≈ the
+    f64 oracle."""
+    import dataclasses
+    prob = StencilProblem(name, SHAPES[name])
+    x = _x(SHAPES[name], seed=7)
+    base = StencilPlan(scheme="transpose", k=2, backend="pallas",
+                       sweep="resident", remainder=remainder, **TILES[name])
+    tiled = dataclasses.replace(base, ttile=ttile)
+    for steps in (8, 11, 5):
+        got = np.asarray(prob.run(x, steps, tiled))
+        ref = np.asarray(prob.run(x, steps, base))
+        _ttile_assert(name, got, ref,
+                      f"{name} k=2 ttile={ttile} steps={steps} "
+                      f"{remainder}: != resident ttile=1")
+        want = _f64_oracle(name, x, steps)
+        np.testing.assert_allclose(got, want.astype(np.float32),
+                                   rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("ttile", [2, 3])
+@pytest.mark.parametrize("k", [1, 2])
+def test_stencil1d_sweep_ttile_kernel_equals_deeper_periodic(k, ttile):
+    """Kernel-level contract: ONE depth-k·ttile trapezoid launch is the
+    same program as the depth-k·ttile periodic sweep — the ttile axis
+    only regroups launches, it never changes the kernel math."""
+    spec = stencils.make("1d3p")
+    x = _x((8 * 8 * 4,), seed=8)
+    t = layouts.to_transpose_layout(x, 8, 8)
+    got = sk.stencil1d_sweep_ttile(spec, t, k, ttile, interpret=True)
+    ref = sk.stencil1d_sweep_periodic(spec, t, k * ttile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_stencil_nd_sweep_ttile_kernel_equals_deeper_periodic():
+    spec = stencils.make("2d5p")
+    x = _x((16, 64), seed=9)
+    t = layouts.to_transpose_layout(x, 8, 4)
+    got = sk.stencil_nd_sweep_ttile(spec, t, 2, 2, 4, interpret=True)
+    ref = sk.stencil_nd_sweep_periodic(spec, t, 4, 4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_ttile_jaxpr_roundtrips_flat_in_steps():
+    """The acceptance contract of the tentpole: HBM round-trips per run
+    do NOT grow with steps/ttile — the whole-run ttile program is still
+    exactly 3 pallas_calls (transpose in + ONE loop-carried sweep kernel
+    + transpose out) with zero pad/wrap/crop copies, for any step
+    count."""
+    spec = stencils.make("1d3p")
+    x = jnp.zeros((256,), jnp.float32)
+    counts = []
+    for steps in (8, 32):
+        closed = jax.make_jaxpr(lambda v, s=steps: ops._sweep_periodic_impl(
+            spec, v, s, 2, 8, 8, None, "fused", True, 4))(x)
+        c = _count_prims(closed)
+        for prim in _COPY_PRIMS:
+            assert c[prim] == 0, (steps, prim, dict(c))
+        counts.append(c["pallas_call"])
+    assert counts == [3, 3], counts
+
+
+def test_run_rejects_ttile_on_non_resident_paths():
+    """ttile>1 has no meaning on engines that round-trip every sweep —
+    the dispatcher refuses instead of silently ignoring the field."""
+    prob = StencilProblem("1d3p", (128,))
+    x = _x((128,))
+    for plan in (StencilPlan(scheme="transpose", k=2, vl=8, m=8,
+                             backend="pallas", sweep="roundtrip", ttile=2),
+                 StencilPlan(scheme="fused", k=2, ttile=2)):
+        with pytest.raises(ValueError, match="ttile=2 requires a resident"):
+            prob.run(x, 8, plan)
+
+
+# ---------------------------------------------------------------------------
 # 3. pick_tile regression
 # ---------------------------------------------------------------------------
 
@@ -256,6 +353,17 @@ def test_pick_tile_unchanged_for_legal_shapes():
     assert ops.pick_tile(stencils.make("1d3p"), (256 * 8,)) == (128, 8, None)
     assert ops.pick_tile(stencils.make("2d5p"), (16, 64)) == (8, 8, 8)
     assert ops.pick_tile(stencils.make("1d5p"), (8,)) == (4, 2, None)
+
+
+def test_pick_tile_native_vl_on_128_divisible_shapes():
+    """Regression: the default-vl gate tested divisibility by 2·DEFAULT_VL,
+    so extents divisible by 128 but not 256 — (384,), (128,) — silently
+    dropped to vl=8 (sublane-granule vectors on a lane-native extent).
+    The gate is DEFAULT_VL itself."""
+    spec = stencils.make("1d3p")
+    assert ops.pick_tile(spec, (384,)) == (128, 1, None)
+    assert ops.pick_tile(spec, (768,)) == (128, 3, None)
+    assert ops.pick_tile(spec, (128,)) == (128, 1, None)
 
 
 # ---------------------------------------------------------------------------

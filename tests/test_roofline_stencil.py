@@ -83,6 +83,91 @@ def test_resident_per_run_cost_scales_inverse_with_steps():
                               steps=32))
 
 
+# ---------------------------------------------------------------------------
+# temporal tiling: per-time-tile byte model
+# ---------------------------------------------------------------------------
+
+def _expected_ttile(spec, shape, itemsize, plan, steps):
+    """The ttile>1 resident model, longhand: HBM charged once per
+    depth-d launch with that launch's halo factor ext = 1 + 2·d·r/n0,
+    compute charged d steps × ext per launch (the redundant halo
+    re-compute), plus the once-per-run layout round-trip."""
+    from repro.core.api import sweep_schedule
+    pts = 1.0
+    for n in shape:
+        pts *= n
+    n0 = shape[0] if spec.ndim > 1 else shape[-1]
+    chunks, total = sweep_schedule(plan.k, steps, plan.remainder,
+                                   plan.ttile)
+    reorg = 4.0 * spec.r / plan.m
+    flops = mem = 0.0
+    for depth, n in chunks:
+        ext = 1.0 + 2.0 * depth * spec.r / n0
+        flops += n * depth * pts * (spec.flops_per_point + reorg) * ext
+        mem += n * 2.0 * pts * itemsize * ext
+    flops, mem = flops / total, mem / total
+    mem += 4.0 * pts * itemsize / (steps if steps
+                                   else rs.RESIDENT_AMORT_STEPS)
+    return max(flops / PEAK_FLOPS, mem / HBM_BW)
+
+
+@pytest.mark.parametrize("ttile", [2, 4])
+@pytest.mark.parametrize("steps", [None, 16, 11])
+@pytest.mark.parametrize("name,shape", [("1d3p", (4096,)),
+                                        ("2d5p", (64, 256))])
+def test_ttile_byte_model_pinned(name, shape, steps, ttile):
+    spec = stencils.make(name)
+    plan = dataclasses.replace(_pallas_plan("resident", remainder="native"),
+                               ttile=ttile)
+    got = rs.estimate_plan_time(spec, shape, 4, plan, steps=steps)
+    assert got == pytest.approx(
+        _expected_ttile(spec, shape, 4, plan, steps))
+
+
+def test_ttile_one_model_unchanged():
+    """ttile=1 plans must go down the PR 3 accounting path byte-for-byte
+    — the new per-chunk branch only activates for ttile>1."""
+    spec = stencils.make("1d3p")
+    plan = _pallas_plan("resident", remainder="native")
+    assert plan.ttile == 1
+    for steps in (None, 16, 7):
+        got = rs.estimate_plan_time(spec, (4096,), 4, plan, steps=steps)
+        assert got == pytest.approx(_expected(spec, (4096,), 4, plan,
+                                              steps))
+
+
+def test_ttile_cuts_modeled_hbm_bytes_at_deep_runs():
+    """The acceptance criterion: at steps >= 8·k the ttile resident path
+    models >= 2x fewer HBM bytes per run than the PR 3 resident path."""
+    spec = stencils.make("1d3p")
+    shape = (1 << 20,)
+    base = _pallas_plan("resident")
+    for steps in (16, 32, 64):            # steps >= 8·k (k = 2)
+        _, b_base, _ = rs.plan_terms(spec, shape, 4, base, steps=steps)
+        _, b_tt, _ = rs.plan_terms(
+            spec, shape, 4, dataclasses.replace(base, ttile=4),
+            steps=steps)
+        assert b_base / b_tt >= 2.0, (steps, b_base / b_tt)
+
+
+def test_ttile_distributed_exchange_count_falls():
+    """Distributed: ttile divides the per-step exchange count; the ring
+    bytes stay flat (wider ring, proportionally fewer exchanges)."""
+    base = StencilPlan(scheme="fused", k=2, backend="distributed",
+                       decomp=(8,))
+    tiled = dataclasses.replace(base, ttile=4)
+    assert rs.distributed_exchanges_per_step(tiled, 16) == pytest.approx(
+        rs.distributed_exchanges_per_step(base, 16) / 4)
+    spec = stencils.make("1d3p")
+    _, _, c_base = rs.plan_terms(spec, (4096,), 4, base, steps=16)
+    _, _, c_tt = rs.plan_terms(spec, (4096,), 4, tiled, steps=16)
+    assert c_tt == pytest.approx(c_base)
+    # ...and the per-device HBM bytes fall with the deeper launches
+    _, m_base, _ = rs.plan_terms(spec, (4096,), 4, base, steps=16)
+    _, m_tt, _ = rs.plan_terms(spec, (4096,), 4, tiled, steps=16)
+    assert m_base / m_tt >= 2.0
+
+
 def test_jnp_plans_unaffected_by_sweep_accounting():
     """The jnp backend never pays pallas layout traffic — its estimates
     must be identical to the pre-engine model."""

@@ -231,6 +231,118 @@ def _smoke_ttile(steps_list) -> dict:
     return {"ttile": ttile, "results": rows}
 
 
+SERVING_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "results", "bench_kernels_serving.json")
+
+
+def _smoke_serving(n_req: int = 64, steps: int = 8,
+                   shape=(4096,)) -> dict:
+    """Continuous-batched serving vs the one-at-a-time sweep loop — the
+    ``serving`` section of the smoke artifact.
+
+    Drives ``n_req`` same-signature requests (4 simulated tenants)
+    through (a) the legacy synchronous ``StencilService.sweep`` loop and
+    (b) ``sweep_async``'s StencilSweepBatcher, after warming both paths,
+    and reports sustained sweeps/sec, per-request p50/p99 latency on the
+    batched path, and a bit-identity flag (batched results vs the
+    sequential loop, bitwise).  Each path runs ``rounds`` timed rounds
+    and reports its best (same hygiene as :func:`benchmarks.timing.\
+bench` — one noisy round on a shared CI host shouldn't decide the
+    trajectory).  Throughput is trajectory data (non-gating);
+    bit-identity is the CI gate (``--serving``)."""
+    import tempfile
+    import time
+
+    from repro.serve.batcher import StencilSweepBatcher
+    from repro.serve.engine import StencilService
+
+    name = "1d3p"
+    rounds = 3
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.standard_normal(shape), jnp.float32)
+          for _ in range(n_req)]
+    with tempfile.TemporaryDirectory() as td:
+        with StencilService(cache_path=os.path.join(td, "p.json")) as svc:
+            # --- one-at-a-time loop (the pre-batcher serving path) ----
+            jax.block_until_ready(svc.sweep(name, xs[0], steps))  # warm
+            seq_s = float("inf")
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                seq = [jax.block_until_ready(svc.sweep(name, x, steps))
+                       for x in xs]
+                seq_s = min(seq_s, time.perf_counter() - t0)
+
+            # --- continuous-batched path ------------------------------
+            batcher = StencilSweepBatcher(svc, max_queue=2 * n_req)
+            warm = [batcher.submit(name, x, steps, tenant="warm")
+                    for x in xs[:batcher.max_slots]]      # slot warmup
+            for f in warm:
+                f.result(timeout=120)
+            bat_s, lat = float("inf"), []
+            for _ in range(rounds):
+                r_lat: list[float] = []
+                t0 = time.perf_counter()
+                futs = []
+                for i, x in enumerate(xs):
+                    t_sub = time.perf_counter()
+                    f = batcher.submit(name, x, steps,
+                                       tenant=f"t{i % 4}")
+                    f.add_done_callback(
+                        lambda f, t=t_sub: r_lat.append(
+                            time.perf_counter() - t))
+                    futs.append(f)
+                got = [f.result(timeout=120) for f in futs]
+                r_s = time.perf_counter() - t0
+                if r_s < bat_s:
+                    bat_s, lat = r_s, r_lat
+            stats = batcher.stats
+            batcher.close()
+
+    bit_identical = all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(seq, got))
+    lat = sorted(lat)
+    row = {
+        "name": f"serving/{name}/{'x'.join(map(str, shape))}"
+                f"/steps{steps}/n{n_req}",
+        "n_requests": n_req, "steps": steps,
+        "n_devices": jax.device_count(),
+        "sequential_s": seq_s, "batched_s": bat_s,
+        "sequential_sweeps_per_s": n_req / seq_s,
+        "batched_sweeps_per_s": n_req / bat_s,
+        "speedup": seq_s / bat_s,
+        "p50_ms": 1e3 * lat[len(lat) // 2],
+        "p99_ms": 1e3 * lat[min(len(lat) - 1,
+                                int(len(lat) * 0.99))],
+        "batches": stats["batches"], "programs": stats["programs"],
+        "bit_identical": bit_identical,
+    }
+    print(f"{row['name']}: sequential={row['sequential_sweeps_per_s']:.0f}"
+          f"/s batched={row['batched_sweeps_per_s']:.0f}/s "
+          f"speedup={row['speedup']:.2f}x p50={row['p50_ms']:.1f}ms "
+          f"p99={row['p99_ms']:.1f}ms batches={row['batches']} "
+          f"bit_identical={bit_identical}")
+    from repro.serve.batcher import SLOT_COUNTS
+    return {"results": [row], "bit_identical": bit_identical,
+            "slot_counts": list(SLOT_COUNTS)}
+
+
+def serving(out_path: str | None = None) -> dict:
+    """``--serving``: the serving section alone, written to its own JSON
+    artifact.  Exit status gates on BIT-IDENTITY only (batched results
+    must equal the sequential loop bitwise); throughput numbers are
+    recorded, not gated."""
+    payload = {"bench": "continuous_batched_serving",
+               "backend": jax.default_backend(),
+               "n_devices": jax.device_count(),
+               "serving": _smoke_serving()}
+    out_path = out_path or SERVING_PATH
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path}")
+    return payload
+
+
 def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
     """Micro-benchmark the layout-resident sweep engine against the
     per-sweep pad/transpose/crop path, at CPU-interpret-friendly scale,
@@ -266,7 +378,8 @@ def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
                "mode": "interpret",
                "results": results,
                "ttile_vs_resident": _smoke_ttile(steps_list),
-               "distributed": _smoke_distributed(steps_list)}
+               "distributed": _smoke_distributed(steps_list),
+               "serving": _smoke_serving()}
     out_path = out_path or SMOKE_PATH
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
@@ -280,7 +393,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="resident-vs-roundtrip sweep engine bench → JSON")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--serving", action="store_true",
+                    help="continuous-batched serving bench → JSON; exits "
+                         "nonzero if batched != sequential bitwise")
     args = ap.parse_args()
+    if args.serving:
+        payload = serving()
+        if not payload["serving"]["bit_identical"]:
+            raise SystemExit(
+                "serving bit-identity FAILED: batched results differ "
+                "from the sequential sweep loop")
+        return
     if args.smoke:
         smoke()
         return

@@ -106,6 +106,9 @@ class StencilProblem:
         assert len(shape) == self.spec.ndim, (shape, self.spec.ndim)
         self.shape = tuple(shape)
         self.dtype = dtype
+        # jitted batched runners, one per (batch, steps, plan) — see
+        # run_batched (the serving batcher's compile-once entry point)
+        self._batched_fns: dict[tuple, object] = {}
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0) -> jax.Array:
@@ -216,6 +219,95 @@ class StencilProblem:
                                  remainder=plan.remainder)
         return vectorize.run_scheme(plan.scheme, self.spec, x, steps,
                                     plan.vl, plan.m)
+
+    def run_batched(self, xb: jax.Array, steps: int,
+                    plan: StencilPlan | str = "auto") -> jax.Array:
+        """Advance a BATCH of grids — ``xb``: (B,) + ``self.shape`` — by
+        ``steps`` under ONE shared program per (B, steps, plan).
+
+        This is the continuous-batching serving entry: the whole
+        single-grid run (transpose into the (nb, m, vl) layout, every
+        sweep of the ``sweep_schedule``, untranspose) is ``vmap``-ped
+        over the leading batch axis and jitted ONCE, so N coalesced
+        requests share one transpose-in/untranspose and one compiled
+        executable instead of paying per-request dispatch — and nothing
+        recompiles after the first call at a given batch size (the
+        batcher pads to a fixed slot-count set for exactly this reason).
+        Results are bit-identical to ``B`` independent :meth:`run` calls:
+        ``vmap`` adds the batch as an outer dimension and leaves the
+        per-element arithmetic untouched (the batch-invariance contract,
+        see :func:`repro.core.autotune.plan_batch_invariant`; pinned in
+        tests/test_serve_batcher.py).
+
+        Distributed plans are the exception: their mesh decomposition
+        already consumes the physical devices, so batch elements run
+        sequentially through the same cached shard_map program (the
+        batcher claims the mesh exclusively while this happens).
+        """
+        plan = self._batched_plan(plan, steps)
+        xb = jnp.asarray(xb)
+        if xb.shape[1:] != self.shape:
+            raise ValueError(f"run_batched expects (B,) + {self.shape}, "
+                             f"got {xb.shape}")
+        if plan.backend == "distributed":
+            # the mesh holds the spatial decomposition; elements reuse the
+            # cached shard-resident program one after another.
+            return jnp.stack([self.run(xb[i], steps, plan)
+                              for i in range(xb.shape[0])])
+        key = (xb.shape[0], steps, plan)
+        fn = self._batched_fns.get(key)
+        if fn is None:
+            fn = jax.jit(jax.vmap(lambda v: self.run(v, steps, plan)))
+            self._batched_fns[key] = fn
+        return fn(xb)
+
+    def run_batched_parts(self, xs, steps: int,
+                          plan: StencilPlan | str = "auto") -> list:
+        """Per-slot variant of :meth:`run_batched` for the serving hot
+        path: takes a sequence of B same-shape grids and returns the B
+        advanced grids as a list, with the leading-axis stack AND the
+        per-slot unstack folded INTO the single jitted program.  One
+        dispatch total — ``run_batched`` on a host-stacked batch pays a
+        ``jnp.stack`` dispatch going in and B slice dispatches coming
+        out, which at serving batch sizes costs more than the sweep
+        itself.  Arithmetic is the same vmapped program, so results stay
+        bit-identical to per-element :meth:`run` calls."""
+        xs = [jnp.asarray(x) for x in xs]
+        for x in xs:
+            if x.shape != self.shape:
+                raise ValueError(f"run_batched_parts expects grids of "
+                                 f"shape {self.shape}, got {x.shape}")
+        plan = self._batched_plan(plan, steps)
+        if plan.backend == "distributed":
+            return [self.run(x, steps, plan) for x in xs]
+        key = (len(xs), steps, plan, "parts")
+        fn = self._batched_fns.get(key)
+        if fn is None:
+            run = lambda v: self.run(v, steps, plan)  # noqa: E731
+            fn = jax.jit(
+                lambda parts: tuple(jax.vmap(run)(jnp.stack(parts))))
+            self._batched_fns[key] = fn
+        return list(fn(tuple(xs)))
+
+    def _batched_plan(self, plan: StencilPlan | str,
+                      steps: int) -> StencilPlan:
+        """Resolve a plan argument for the batched entries and enforce
+        the batch-invariance gate."""
+        if isinstance(plan, str):
+            if plan == "auto":
+                from repro.core import autotune
+                plan = autotune.best_plan(self, steps=steps)
+            elif plan == "default":
+                plan = self.default_plan()
+            else:
+                raise ValueError(f"unknown plan {plan!r}; expected 'auto',"
+                                 f" 'default' or a StencilPlan")
+        assert isinstance(plan, StencilPlan)
+        from repro.core import autotune
+        if not autotune.plan_batch_invariant(plan):
+            raise ValueError(f"plan {plan} is not batch-invariant; "
+                             "it cannot serve a batched run unchanged")
+        return plan
 
     def _chunked(self, x: jax.Array, steps: int, k: int, step,
                  remainder: str = "fused") -> jax.Array:

@@ -1060,6 +1060,40 @@ def best_plan(problem, backend: str = "auto", steps: int | None = None,
                 cache_path=cache_path, **kw).plan
 
 
+def plan_batch_invariant(plan: StencilPlan) -> bool:
+    """The batch-invariance gate: may a plan tuned for the *unbatched*
+    (stencil, shape, dtype) signature serve a leading-batch-axis run
+    (``StencilProblem.run_batched``) unchanged?
+
+    Plan keys deliberately carry NO batch-size component — the serving
+    batcher coalesces requests at whatever slot count admission picks,
+    and a per-batch-size key would fragment the cache and force one
+    tuning run per slot count for a plan whose execution is identical at
+    every batch size.  That reuse is sound because:
+
+    * jnp / pallas plans: ``run_batched`` vmaps the WHOLE single-grid
+      program; ``vmap`` adds the batch as an outer loop/grid dimension
+      and leaves the (nb, m, vl) layout axes, the k-blocking, the
+      temporal tiling and the sweep schedule untouched.  Every legality
+      gate (:func:`pallas_plan_legal`, :func:`ttile_plan_legal`) is a
+      predicate of the unbatched shape, which the batch axis never
+      enters — so a legal plan stays legal, and per-element results are
+      bit-identical to ``B`` unbatched runs (pinned in
+      tests/test_serve_batcher.py).
+    * distributed plans: the mesh decomposition consumes the physical
+      devices, so ``run_batched`` runs elements *sequentially* through
+      the same cached shard_map program — trivially the unbatched
+      execution, batch-size-invariant by construction.  (The batcher
+      additionally claims the mesh exclusively for these.)
+
+    The gate exists so a future backend whose layout DOES depend on the
+    batch (e.g. folding the batch into the lane axis, or an MXU
+    matrixization whose matrix shapes absorb B) has a place to say so —
+    ``run_batched`` refuses such plans instead of silently serving a
+    shape the tuner never measured.  Unknown backends fail closed."""
+    return plan.backend in ("jnp", "pallas", "distributed")
+
+
 def cached_plan(problem, backend: str = "auto", steps: int | None = None,
                 cache_path: str | None = None,
                 generic_fallback: bool = True) -> StencilPlan | None:

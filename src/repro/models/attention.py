@@ -104,9 +104,15 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def attention_decode(p, x, cache: KVCache, pos, cfg: ArchConfig, pos3=None):
-    """x: (B, 1, D); pos: scalar int32 absolute position of the new token.
-    Ring-buffer write for SWA; full-length write otherwise."""
+    """x: (B, 1, D); pos: absolute position of the new token — scalar
+    int32 (all sequences at the same position) or a (B,) int32 vector of
+    per-sequence positions (continuous batching with ragged progress:
+    each lane writes its KV at ITS position and masks to its own
+    prefix).  Ring-buffer write for SWA; full-length write otherwise."""
     b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        return _attention_decode_vec(p, x, cache, pos, cfg, pos3)
     positions = jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(p, x, cfg, positions, pos3)
     t = cache.k.shape[1]
@@ -125,6 +131,32 @@ def attention_decode(p, x, cache: KVCache, pos, cfg: ArchConfig, pos3=None):
     else:
         valid = idx <= pos
     mask = valid[None, None, None, :]                 # (1,1,1,T)
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), KVCache(k, v)
+
+
+def _attention_decode_vec(p, x, cache: KVCache, pos, cfg: ArchConfig,
+                          pos3=None):
+    """Per-sequence-position decode: pos (B,).  Each batch lane writes its
+    new K/V at its OWN cache slot and attends to its own valid prefix, so
+    sequences at different depths share one batched step."""
+    b = x.shape[0]
+    positions = pos[:, None]                          # (B, 1)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, pos3)
+    t = cache.k.shape[1]
+    slot = (pos % t) if cfg.window else pos           # (B,)
+    lane = jnp.arange(b)
+    k = cache.k.at[lane, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[lane, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    idx = jnp.arange(t)[None, :]                      # (1, T)
+    if cfg.window:
+        age = (slot[:, None] - idx) % t
+        abs_pos = pos[:, None] - age
+        valid = (abs_pos >= 0) & (age < t)            # (B, T)
+    else:
+        valid = idx <= pos[:, None]                   # (B, T)
+    mask = valid[:, None, None, :]                    # (B,1,1,T)
     out = _sdpa(q, k, v, mask, cfg)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     return out @ p["wo"].astype(x.dtype), KVCache(k, v)

@@ -241,7 +241,9 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
 
 def decode_step(params, cache, batch, pos, cfg: ArchConfig):
     """batch: one-token inputs ({'tokens': (B,1)} or {'embeds': (B,1,D)},
-    optional 'pos3': (B,1,3)); pos: scalar int32 → (logits (B,1,V), cache)."""
+    optional 'pos3': (B,1,3)); pos: scalar int32, or a (B,) int32 vector
+    of per-sequence positions (continuous batching with ragged progress)
+    → (logits (B,1,V), cache)."""
     x = _embed_in(params, batch, cfg)
     pos3 = batch.get("pos3")
 

@@ -1,0 +1,400 @@
+"""Continuous batching for stencil sweep serving — ``StencilSweepBatcher``.
+
+The paper's transpose layout pays for itself by amortizing data
+reorganization over many sweeps; the resident engine (kernels/ops) pushed
+that to one layout round-trip per RUN.  At fleet scale the same overhead
+re-appears one level up: ``StencilService.sweep`` serves one synchronous
+request at a time, so every request pays its own program dispatch, its own
+transpose-in/untranspose, and its own queueing delay.  This module is the
+stencil analogue of the LM ``ContinuousBatcher`` next door in
+``engine.py``:
+
+  * **coalescing** — queued requests with the same ``(signature, steps)``
+    — signature = (stencil, shape, dtype) — are merged into ONE batched
+    program: ``StencilProblem.run_batched`` vmaps the whole resident run
+    over a leading batch axis, so the transpose-in/untranspose and every
+    launch of the ``sweep_schedule`` are shared across the batch (the
+    batch-invariance contract is documented at
+    :func:`repro.core.autotune.plan_batch_invariant`);
+  * **fixed-slot admission** — batches are padded up to a small static
+    set of slot counts (default ``{1, 2, 4, 8}``), so after one warmup
+    per slot count NOTHING ever recompiles: shapes are static, the jitted
+    program per (signature, steps, slots) is built once and reused;
+  * **backpressure** — the queue is bounded; a submit against a full
+    queue raises :class:`BatcherFull` carrying a ``retry_after`` estimate
+    (EMA batch latency × queue depth) instead of growing latency without
+    bound;
+  * **per-tenant fairness** — within a coalescing group, slots are filled
+    round-robin across tenants, so a greedy tenant flooding the queue
+    cannot starve others: every waiting tenant lands a request in the
+    next batch of its group;
+  * **plan-aware scheduling** — the plan is resolved ONCE per batch via
+    ``StencilService.resolve`` (cache-only: the serving path never
+    measures).  Distributed-decomp plans claim the device mesh
+    *exclusively* (their shard_map program owns every device); jnp /
+    single-device-pallas batches take a *shared* claim and pack
+    concurrently on the worker pool.
+
+``StencilService.sweep_async`` is the facade: it lazily owns one batcher
+and returns a ``concurrent.futures.Future`` per request.  For
+deterministic tests and offline draining, a batcher built with
+``start=False`` runs no background thread — callers pump it with
+:meth:`StencilSweepBatcher.run_pending`.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BatcherFull", "StencilSweepBatcher"]
+
+SLOT_COUNTS = (1, 2, 4, 8)
+
+
+class BatcherFull(RuntimeError):
+    """Queue-full rejection.  ``retry_after`` (seconds) estimates when
+    capacity frees up — clients back off instead of piling on."""
+
+    def __init__(self, retry_after: float):
+        super().__init__(f"sweep queue full; retry after "
+                         f"{retry_after:.3f}s")
+        self.retry_after = retry_after
+
+
+@dataclasses.dataclass
+class _SweepRequest:
+    tenant: str
+    name: str
+    x: jax.Array
+    steps: int
+    future: concurrent.futures.Future
+    seq: int
+    t_submit: float
+
+
+class _Group:
+    """Pending requests for one (signature, steps) coalescing key, bucketed
+    per tenant for the fair dequeue."""
+
+    __slots__ = ("tenants", "total", "first_seq", "t_first")
+
+    def __init__(self):
+        self.tenants: collections.OrderedDict[str, collections.deque] = \
+            collections.OrderedDict()
+        self.total = 0
+        self.first_seq = 0
+        self.t_first = 0.0
+
+    def add(self, req: _SweepRequest):
+        if not self.total:
+            self.first_seq, self.t_first = req.seq, req.t_submit
+        dq = self.tenants.get(req.tenant)
+        if dq is None:
+            dq = self.tenants[req.tenant] = collections.deque()
+        dq.append(req)
+        self.total += 1
+
+    def take(self, n: int) -> list[_SweepRequest]:
+        """Dequeue up to ``n`` requests, one per tenant per rotation —
+        the round-robin that keeps a greedy tenant from filling every
+        slot while another tenant waits."""
+        out: list[_SweepRequest] = []
+        while self.total and len(out) < n:
+            tenant, dq = next(iter(self.tenants.items()))
+            out.append(dq.popleft())
+            self.total -= 1
+            del self.tenants[tenant]
+            if dq:                      # re-insert at the END: next
+                self.tenants[tenant] = dq   # rotation starts elsewhere
+        if self.total:
+            head = min((dq[0] for dq in self.tenants.values()),
+                       key=lambda r: r.seq)
+            self.first_seq, self.t_first = head.seq, head.t_submit
+        return out
+
+
+class _MeshClaim:
+    """Shared/exclusive claim on the device mesh.  Single-device batches
+    hold it shared (they pack concurrently onto the worker pool);
+    distributed batches hold it exclusively — their shard_map program
+    spans every visible device and must not interleave with other
+    launches contending for the same chips."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._shared = 0
+        self._exclusive = False
+
+    @contextlib.contextmanager
+    def shared(self):
+        with self._cv:
+            while self._exclusive:
+                self._cv.wait()
+            self._shared += 1
+        try:
+            yield
+        finally:
+            with self._cv:
+                self._shared -= 1
+                if not self._shared:
+                    self._cv.notify_all()
+
+    @contextlib.contextmanager
+    def exclusive(self):
+        with self._cv:
+            while self._exclusive or self._shared:
+                self._cv.wait()
+            self._exclusive = True
+        try:
+            yield
+        finally:
+            with self._cv:
+                self._exclusive = False
+                self._cv.notify_all()
+
+
+class StencilSweepBatcher:
+    """Async continuous batcher over a :class:`~repro.serve.engine.\
+StencilService` — see the module docstring for the scheduling policy.
+
+    Parameters
+    ----------
+    service:     the StencilService plans/problems are resolved through
+                 (cache-only — the batcher never measures).
+    slot_counts: the static admission sizes batches are padded to.  A
+                 batch of n requests runs at the smallest slot count
+                 >= n; the largest value is also the coalescing cap.
+                 Keeping this set small bounds warmup compiles to
+                 ``len(slot_counts)`` programs per (signature, steps).
+    max_queue:   backpressure bound on queued (unstarted) requests;
+                 submits beyond it raise :class:`BatcherFull`.
+    max_wait_s:  admission window — how long the first request of a
+                 group waits for peers to coalesce before the batch
+                 launches anyway (bounds the latency cost of batching).
+    n_workers:   worker threads executing batches; >1 lets single-device
+                 batches of different signatures pack concurrently.
+    start:       spawn the background scheduler thread.  ``False`` gives
+                 a passive batcher for tests/offline use — pump it with
+                 :meth:`run_pending`.
+    """
+
+    def __init__(self, service, slot_counts=SLOT_COUNTS,
+                 max_queue: int = 64, max_wait_s: float = 0.002,
+                 n_workers: int = 2, start: bool = True):
+        if not slot_counts or any(s < 1 for s in slot_counts):
+            raise ValueError(f"bad slot_counts {slot_counts!r}")
+        self.service = service
+        self.slot_counts = tuple(sorted(set(int(s) for s in slot_counts)))
+        self.max_slots = self.slot_counts[-1]
+        self.max_queue = int(max_queue)
+        self.max_wait_s = float(max_wait_s)
+        self._cv = threading.Condition()
+        self._groups: dict[tuple, _Group] = {}
+        self._n_queued = 0
+        self._seq = 0
+        self._closed = False
+        self._ema_batch_s = 0.05        # retry_after estimator seed
+        # (sig, steps) -> (problem, plan): resolved once per program and
+        # pinned for the batcher's lifetime.  Saves the per-batch
+        # service round-trip AND guarantees in-flight programs keep
+        # their plan (no recompile) even if the service's plan cache is
+        # retuned underneath us.
+        self._resolved: dict[tuple, tuple] = {}
+        self._programs: set[tuple] = set()
+        self._stats = collections.Counter()
+        self._batch_log: list[dict] = []
+        self._mesh = _MeshClaim()
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=n_workers,
+                thread_name_prefix="stencil-batch")
+            self._thread = threading.Thread(
+                target=self._loop, name="stencil-batcher", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, name: str, x, steps: int,
+               tenant: str = "default") -> concurrent.futures.Future:
+        """Enqueue one sweep request; returns a Future resolving to the
+        advanced grid.  Raises :class:`BatcherFull` (with
+        ``retry_after``) when the queue is at capacity."""
+        x = jnp.asarray(x)
+        sig = (name, tuple(x.shape), jnp.dtype(x.dtype).name)
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("StencilSweepBatcher is closed")
+            if self._n_queued >= self.max_queue:
+                self._stats["rejected"] += 1
+                raise BatcherFull(self._retry_after_locked())
+            self._seq += 1
+            req = _SweepRequest(tenant, name, x, int(steps), fut,
+                                self._seq, time.monotonic())
+            group = self._groups.get((sig, steps))
+            if group is None:
+                group = self._groups[(sig, steps)] = _Group()
+            group.add(req)
+            self._n_queued += 1
+            self._stats["submitted"] += 1
+            # wake the scheduler only when this submit changes what it
+            # would do: a NEW group starts its admission window, or the
+            # group just filled a whole batch.  Intermediate submits are
+            # covered by the deadline the scheduler already sleeps on —
+            # notifying on every submit costs a context switch per
+            # request on the hot path.
+            if group.total == 1 or group.total == self.max_slots:
+                self._cv.notify_all()
+        return fut
+
+    def _retry_after_locked(self) -> float:
+        n_batches = max(1, -(-self._n_queued // self.max_slots))
+        return self._ema_batch_s * n_batches
+
+    # ---------------------------------------------------------- scheduler
+    def _ready_locked(self, now: float, force: bool) -> Optional[tuple]:
+        """Oldest group whose batch should launch now: it holds a full
+        batch, its admission window expired, or we're force-draining."""
+        best = None
+        for key, g in self._groups.items():
+            if not g.total:
+                continue
+            if force or g.total >= self.max_slots \
+                    or now - g.t_first >= self.max_wait_s:
+                if best is None or g.first_seq < \
+                        self._groups[best].first_seq:
+                    best = key
+        return best
+
+    def _next_deadline_locked(self, now: float) -> Optional[float]:
+        ts = [g.t_first + self.max_wait_s
+              for g in self._groups.values() if g.total]
+        return max(0.0, min(ts) - now) if ts else None
+
+    def _form_batch_locked(self, force: bool = False) -> Optional[tuple]:
+        now = time.monotonic()
+        key = self._ready_locked(now, force)
+        if key is None:
+            return None
+        group = self._groups[key]
+        reqs = group.take(self.max_slots)
+        if not group.total:
+            del self._groups[key]
+        self._n_queued -= len(reqs)
+        return key, reqs
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                batch = self._form_batch_locked(force=self._closed)
+                if batch is None:
+                    if self._closed:
+                        return
+                    self._cv.wait(self._next_deadline_locked(
+                        time.monotonic()))
+                    continue
+            self._pool.submit(self._run_batch, *batch)
+
+    def run_pending(self):
+        """Synchronously form and execute every queued batch in the
+        calling thread (passive / ``start=False`` mode; also usable to
+        drain deterministically in tests)."""
+        while True:
+            with self._cv:
+                batch = self._form_batch_locked(force=True)
+            if batch is None:
+                return
+            self._run_batch(*batch)
+
+    # ---------------------------------------------------------- execution
+    def _slots_for(self, n: int) -> int:
+        for s in self.slot_counts:
+            if s >= n:
+                return s
+        return self.max_slots
+
+    def _run_batch(self, key: tuple, reqs: list[_SweepRequest]):
+        (name, shape, dtype), steps = key
+        try:
+            resolved = self._resolved.get(key)
+            if resolved is None:        # GIL-safe: worst case re-resolve
+                resolved = self.service.resolve(name, shape, dtype,
+                                                steps=steps)
+                self._resolved[key] = resolved
+            prob, plan = resolved
+            n_slots = self._slots_for(len(reqs))
+            # pad to the fixed slot count with replicas of the first
+            # request's grid: static shapes per (signature, steps,
+            # n_slots), pad lanes computed-and-discarded (vmap lanes are
+            # independent, so padding cannot perturb real results)
+            xs = [r.x for r in reqs]
+            xs += [xs[0]] * (n_slots - len(xs))
+            exclusive = plan.backend == "distributed"
+            claim = self._mesh.exclusive if exclusive else \
+                self._mesh.shared
+            t0 = time.monotonic()
+            with claim():
+                ys = jax.block_until_ready(
+                    prob.run_batched_parts(xs, steps, plan))
+            dt = time.monotonic() - t0
+        except Exception as e:          # noqa: BLE001 — fan the failure
+            for r in reqs:              # out to every coalesced caller
+                if not r.future.cancelled():
+                    r.future.set_exception(e)
+            return
+        with self._cv:
+            self._ema_batch_s += 0.25 * (dt - self._ema_batch_s)
+            self._programs.add((key, n_slots, plan))
+            self._stats["batches"] += 1
+            self._stats["served"] += len(reqs)
+            self._stats["padded_slots"] += n_slots - len(reqs)
+            self._batch_log.append({
+                "sig": (name, shape, dtype), "steps": steps,
+                "n": len(reqs), "slots": n_slots,
+                "exclusive_mesh": exclusive,
+                "tenants": [r.tenant for r in reqs],
+                "wall_s": dt})
+        for r, y in zip(reqs, ys):
+            if not r.future.cancelled():
+                r.future.set_result(y)
+
+    # ------------------------------------------------------------- status
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Snapshot: counters + the per-batch log + the distinct-program
+        census (what the no-recompile-after-warmup pin counts)."""
+        with self._cv:
+            out = dict(self._stats)
+            out["n_queued"] = self._n_queued
+            out["programs"] = len(self._programs)
+            out["batch_log"] = list(self._batch_log)
+            return out
+
+    def close(self, wait: bool = True):
+        """Stop admitting, drain everything already queued (every pending
+        future resolves), then stop the scheduler/workers.  Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._pool.shutdown(wait=wait)
+        else:
+            self.run_pending()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -33,7 +33,12 @@ from repro.models import transformer, zoo
 
 
 def make_serve_step(model: transformer.Model, temperature: float = 0.0):
-    """(params, cache, batch1, pos) → (next_token, logits, cache)."""
+    """(params, cache, batch1, pos) → (next_token, logits, cache).
+
+    ``pos`` is the (B,) vector of per-slot absolute positions — slots at
+    different depths decode against their OWN cache position (ragged
+    progress is masked per lane inside ``attention_decode``, not forced
+    onto one shared scalar)."""
     def step(params, cache, batch1, pos, key):
         logits, cache = model.decode_step(params, cache, batch1, pos)
         logits = logits[:, 0].astype(jnp.float32)
@@ -71,6 +76,15 @@ class ContinuousBatcher:
             lambda p, b: model.prefill(p, b, max_seq=max_seq))
         self.key = jax.random.PRNGKey(0)
         self._next_tok = np.zeros(n_slots, np.int32)
+        # non-token frontends embed the fed-back token through a fixed
+        # random table — built ONCE here as a device array (rebuilding it
+        # on the host every decode step cost a (256, d_model) host→device
+        # transfer per token).
+        self._embed_table = None
+        if self.cfg.frontend != "token":
+            self._embed_table = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(7), (256, self.cfg.d_model),
+                jnp.float32)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -99,15 +113,19 @@ class ContinuousBatcher:
                 break
             batch1 = {"tokens": jnp.asarray(self._next_tok[:, None])}
             if self.cfg.frontend != "token":
-                table_key = jax.random.PRNGKey(7)
-                table = 0.02 * jax.random.normal(
-                    table_key, (256, self.cfg.d_model), jnp.float32)
-                batch1 = {"embeds": table[self._next_tok % 256][:, None, :]
-                          .astype(jnp.bfloat16)}
-            pos = int(max(self.pos.max(), 1) - 1)
+                batch1 = {"embeds": self._embed_table[self._next_tok % 256]
+                          [:, None, :].astype(jnp.bfloat16)}
+            # per-slot decode positions: the fed-back token for slot s sits
+            # at absolute position self.pos[s] — each slot writes KV and
+            # applies RoPE at ITS depth.  (The old shared scalar
+            # ``max(pos) - 1`` both forced one position onto ragged slots
+            # and clobbered the last prompt token's KV entry.)  Idle slots
+            # carry pos 0; their lanes are discarded below and their cache
+            # is re-seeded by prefill on admission.
+            pos = jnp.asarray(self.pos, jnp.int32)
             self.key, sub = jax.random.split(self.key)
             tok, _, self.cache = self.step_fn(
-                self.params, self.cache, batch1, jnp.int32(pos), sub)
+                self.params, self.cache, batch1, pos, sub)
             tok = np.asarray(tok)
             for slot, req in enumerate(self.active):
                 if req is None:
@@ -120,6 +138,11 @@ class ContinuousBatcher:
                     req.done = True
                     finished.append(req)
                     self.active[slot] = None
+                    # release the slot's counters with it: a finished
+                    # long sequence must not keep inflating the decode
+                    # position of later occupants / other slots.
+                    self.pos[slot] = 0
+                    self._next_tok[slot] = 0
             self._admit()
         return finished
 
@@ -139,6 +162,13 @@ class StencilService:
     measures and never blocks: requests arriving mid-tune are served with
     whatever plan is already resolvable (cached or default) and pick up
     the tuned plan on the first request after it lands.
+
+    :meth:`sweep_async` is the continuous-batched entry: requests are
+    queued onto a lazily-created
+    :class:`~repro.serve.batcher.StencilSweepBatcher`, coalesced by
+    (signature, steps) into one batched resident program, and resolved as
+    futures — see the batcher module for the admission / fairness /
+    backpressure policy.
     """
 
     MAX_SIGNATURES = 256      # LRU bound on memoized problems/plans
@@ -152,6 +182,7 @@ class StencilService:
         self._lock = threading.Lock()   # guards _problems/_plans/_warming
         self._warming: dict[tuple, Any] = {}    # (sig, steps) -> Future
         self._executor = None                   # lazy single warm worker
+        self._batcher = None                    # lazy StencilSweepBatcher
         self._closed = False
 
     def _problem(self, name: str, shape: tuple, dtype):
@@ -209,21 +240,27 @@ class StencilService:
         return fut
 
     def close(self, wait: bool = True):
-        """Shut the warm worker down: queued warms are cancelled (their
-        futures resolve as cancelled); the in-flight tune — if any — is
-        awaited when ``wait=True`` (it finishes within its measurement
-        window and still publishes).  Serving (``sweep``/``plan_for``)
-        keeps working after close; only ``warm_async`` refuses.
-        Idempotent."""
+        """Shut the warm worker and the sweep batcher down: queued warms
+        are cancelled (their futures resolve as cancelled); the in-flight
+        tune — if any — is awaited when ``wait=True`` (it finishes within
+        its measurement window and still publishes); batched sweep
+        requests already queued are DRAINED (their futures resolve) before
+        the batcher stops.  Synchronous serving (``sweep``/``plan_for``)
+        keeps working after close; ``warm_async`` and ``sweep_async``
+        refuse.  Idempotent."""
         with self._lock:
             self._closed = True
             ex, self._executor = self._executor, None
+            batcher, self._batcher = self._batcher, None
             # drain the in-flight map under the lock: a warm_async racing
             # this close either saw _closed (raises) or already registered
             # its future — clearing here guarantees no stale future is
             # handed to a later caller, whatever the interleaving (the
             # done-callbacks' pop()s become harmless no-ops)
             self._warming.clear()
+        # outside the lock: batcher workers call resolve(), which takes it
+        if batcher is not None:
+            batcher.close(wait=wait)
         if ex is not None:
             ex.shutdown(wait=wait, cancel_futures=True)
 
@@ -275,8 +312,22 @@ class StencilService:
         when this host lacks the devices, instead of crashing the
         request.  (The plan key carries the device count, so this only
         triggers for hand-written / cross-host cache entries.)"""
-        from repro.core import autotune
         key, prob = self._problem(name, shape, dtype)
+        return self._plan_for(key, prob, steps, warm)
+
+    def resolve(self, name: str, shape: tuple, dtype=jnp.float32,
+                steps: int | None = None, warm: bool = False):
+        """One-shot (problem, plan) resolution: the memoized
+        ``StencilProblem`` AND its plan for (signature, steps) with a
+        single signature lookup (one lock acquisition, one LRU bump).
+        ``sweep`` and the batcher build on this instead of calling
+        ``_problem`` and ``plan_for`` back to back — which resolved the
+        same signature twice and dropped the first key on the floor."""
+        key, prob = self._problem(name, shape, dtype)
+        return prob, self._plan_for(key, prob, steps, warm)
+
+    def _plan_for(self, key: tuple, prob, steps: int | None, warm: bool):
+        from repro.core import autotune
         plan = self._plans.get((key, steps))
         if plan is None and steps is not None:
             plan = autotune.cached_plan(prob, steps=steps,
@@ -305,9 +356,34 @@ class StencilService:
         """Advance ``x`` by ``steps`` using the cached plan for its
         (signature, steps)."""
         x = jnp.asarray(x)
-        key, prob = self._problem(name, x.shape, x.dtype)
-        plan = self.plan_for(name, x.shape, x.dtype, steps=steps, warm=warm)
+        prob, plan = self.resolve(name, x.shape, x.dtype, steps=steps,
+                                  warm=warm)
         return prob.run(x, steps, plan)
+
+    def sweep_async(self, name: str, x, steps: int,
+                    tenant: str = "default", **batcher_kw):
+        """Continuous-batched serving entry: enqueue the request onto
+        this service's :class:`~repro.serve.batcher.StencilSweepBatcher`
+        (created lazily on first use; ``batcher_kw`` configures that
+        first construction) and return a ``concurrent.futures.Future``
+        resolving to the advanced grid.
+
+        Requests with the same (stencil, shape, dtype, steps) signature
+        are coalesced into one batched resident program; results are
+        bit-identical to :meth:`sweep` (pinned in
+        tests/test_serve_batcher.py).  A full queue raises
+        :class:`~repro.serve.batcher.BatcherFull` with a ``retry_after``
+        hint.  Like ``sweep``, the async path never measures — plans
+        come from the cache or the static default (use
+        :meth:`warm_async` to tune off the request path)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StencilService is closed")
+            if self._batcher is None:
+                from repro.serve.batcher import StencilSweepBatcher
+                self._batcher = StencilSweepBatcher(self, **batcher_kw)
+            batcher = self._batcher
+        return batcher.submit(name, x, steps, tenant=tenant)
 
 
 def _plan_executable(plan) -> bool:

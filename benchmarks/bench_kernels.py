@@ -27,7 +27,15 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
     per-exchange round-trip engine on the same mesh, plus a
     ``minor_axis_vs_axis0`` 2-D-mesh smoke comparing axis-0, minor-axis
     (lane-carry ghost codec) and 2-D-mesh decompositions of one 2-D
-    problem.
+    problem.  The ``mxu_vs_pallas`` section compares the banded-matmul
+    mxu engine (``core/matrixize.py`` — one dot_general per sweep)
+    against the pallas resident engine: modeled roofline-time ratio
+    (matmul flops charged at ``peak_flops_mxu``), measured
+    interpret-scale ratio, and a PARITY flag — allclose to the f64
+    oracle at dtype tolerance, NOT bit-equal (the matmul reassociates
+    the tap sum).  ``--mxu`` runs that section alone, writes its own
+    artifact, and exits nonzero unless parity holds — the multidevice
+    CI gate.
 """
 from __future__ import annotations
 
@@ -231,8 +239,94 @@ def _smoke_ttile(steps_list) -> dict:
     return {"ttile": ttile, "results": rows}
 
 
+def _smoke_mxu(steps_list) -> dict:
+    """MXU banded-matmul engine vs the pallas resident engine — the
+    ``mxu_vs_pallas`` section of the smoke artifact.
+
+    Three readings per case: (a) the roofline's modeled-time ratio for
+    the same two plans (``estimate_plan_time`` — mxu matmul flops are
+    charged at ``peak_flops_mxu``, so this is the crossover the planner
+    actually reasons about), (b) the measured interpret-scale ratio
+    (trajectory data — a CPU host timing a jnp-level matmul against an
+    interpret-mode pallas loop says nothing about real MXU silicon),
+    and (c) a PARITY flag: both engines allclose to the f64 oracle at
+    dtype tolerance.  Parity is deliberately NOT bit-identity — the
+    banded matmul reassociates the tap sum (see core/matrixize.py) —
+    and is the only reading CI gates on (``--mxu``)."""
+    from repro.core.api import StencilPlan
+    from repro.kernels import ops
+    from repro.roofline import stencil as rs
+
+    cases = [("1d3p", (8 * 8 * 8,), dict(k=2, vl=8, m=8)),
+             ("2d5p", (16, 8 * 8 * 2), dict(k=2, vl=8, m=8))]
+    tol = 1e-4
+    rows = []
+    for name, shape, kw in cases:
+        spec = stencils.make(name)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                        jnp.float32)
+        pal_plan = StencilPlan(scheme="transpose", backend="pallas",
+                               sweep="resident",
+                               t0=None if spec.ndim == 1 else shape[0] // 4,
+                               **kw)
+        mxu_plan = StencilPlan(scheme="transpose", backend="mxu", **kw)
+        for steps in steps_list:
+            pal = bench(lambda: ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True,
+                t0=pal_plan.t0, **kw), warmup=1, iters=3, min_time_s=0.05)
+            mxu = bench(lambda: ops.stencil_sweep_mxu(
+                spec, x, steps, **kw), warmup=1, iters=3, min_time_s=0.05)
+            t_pal = rs.estimate_plan_time(spec, shape, 4, pal_plan,
+                                          steps=steps)
+            t_mxu = rs.estimate_plan_time(spec, shape, 4, mxu_plan,
+                                          steps=steps)
+            want = np.asarray(x, np.float64)
+            for _ in range(steps):
+                want = stencils.numpy_apply_once(spec, want)
+            a = np.asarray(ops.stencil_sweep_periodic(
+                spec, x, steps, interpret=True, t0=pal_plan.t0, **kw))
+            b = np.asarray(ops.stencil_sweep_mxu(spec, x, steps, **kw))
+            parity = bool(
+                np.allclose(b, want.astype(np.float32), rtol=tol, atol=tol)
+                and np.allclose(b, a, rtol=tol, atol=tol))
+            row = {"name": f"mxu/{name}/{'x'.join(map(str, shape))}"
+                           f"/steps{steps}",
+                   "steps": steps, "pallas_us": pal * 1e6,
+                   "mxu_us": mxu * 1e6,
+                   "measured_mxu_vs_pallas": mxu / pal,
+                   "modeled_mxu_vs_pallas": t_mxu / t_pal,
+                   "parity": parity}
+            print(f"{row['name']}: pallas={pal * 1e6:.0f}us "
+                  f"mxu={mxu * 1e6:.0f}us "
+                  f"measured={mxu / pal:.2f}x "
+                  f"modeled={t_mxu / t_pal:.2f}x parity={parity}")
+            rows.append(row)
+    return {"tolerance": tol, "results": rows,
+            "parity": all(r["parity"] for r in rows)}
+
+
 SERVING_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "results", "bench_kernels_serving.json")
+
+MXU_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "results", "bench_kernels_mxu.json")
+
+
+def mxu(out_path: str | None = None) -> dict:
+    """``--mxu``: the mxu_vs_pallas section alone, written to its own
+    JSON artifact.  Exit status gates on PARITY only (both engines must
+    match the f64 oracle — and each other — at dtype tolerance);
+    modeled and measured ratios are recorded, not gated."""
+    payload = {"bench": "mxu_vs_pallas",
+               "backend": jax.default_backend(),
+               "n_devices": jax.device_count(),
+               "mxu_vs_pallas": _smoke_mxu((8, 16, 32))}
+    out_path = out_path or MXU_PATH
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path}")
+    return payload
 
 
 def _smoke_serving(n_req: int = 64, steps: int = 8,
@@ -378,6 +472,7 @@ def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
                "mode": "interpret",
                "results": results,
                "ttile_vs_resident": _smoke_ttile(steps_list),
+               "mxu_vs_pallas": _smoke_mxu(steps_list),
                "distributed": _smoke_distributed(steps_list),
                "serving": _smoke_serving()}
     out_path = out_path or SMOKE_PATH
@@ -396,6 +491,10 @@ def main() -> None:
     ap.add_argument("--serving", action="store_true",
                     help="continuous-batched serving bench → JSON; exits "
                          "nonzero if batched != sequential bitwise")
+    ap.add_argument("--mxu", action="store_true",
+                    help="mxu-vs-pallas bench → JSON; exits nonzero "
+                         "unless both engines match the f64 oracle at "
+                         "dtype tolerance")
     args = ap.parse_args()
     if args.serving:
         payload = serving()
@@ -403,6 +502,14 @@ def main() -> None:
             raise SystemExit(
                 "serving bit-identity FAILED: batched results differ "
                 "from the sequential sweep loop")
+        return
+    if args.mxu:
+        payload = mxu()
+        if not payload["mxu_vs_pallas"]["parity"]:
+            raise SystemExit(
+                "mxu parity FAILED: banded-matmul engine differs from "
+                "the f64 oracle / pallas resident engine beyond dtype "
+                "tolerance")
         return
     if args.smoke:
         smoke()

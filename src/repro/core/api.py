@@ -9,7 +9,8 @@ Plans compose the paper's three pieces:
                 transpose (paper's) | fused
   k           — time unroll-and-jam factor (in-register / in-VMEM multistep)
   tiling      — none | tessellate (H=k·…, tile=W)
-  backend     — jnp | pallas (kernels/) | distributed (shard_map halo)
+  backend     — jnp | pallas (kernels/) | mxu (banded-operator matmul,
+                core/matrixize.py) | distributed (shard_map halo)
   remainder   — how steps % k leftovers run: "fused" (single steps on the
                 same backend) | "native" (one k=remainder block)
   sweep       — sweep engine (pallas + distributed-pallas): "resident"
@@ -91,7 +92,7 @@ class StencilPlan:
     height: int | None = None      # tessellation height (defaults to k)
     vl: int = 8
     m: int | None = None
-    backend: str = "jnp"           # jnp | pallas | distributed
+    backend: str = "jnp"           # jnp | pallas | mxu | distributed
     t0: int | None = None          # pallas n-D pipeline tile (rows/grid step)
     remainder: str = "fused"       # fused | native — steps % k policy
     sweep: str = "resident"        # resident | roundtrip — pallas engine
@@ -155,13 +156,30 @@ class StencilProblem:
                                  f"'default' or a StencilPlan")
         assert isinstance(plan, StencilPlan)
         if plan.ttile > 1 and not (
-                plan.backend == "distributed"
+                plan.backend in ("distributed", "mxu")
                 or (plan.backend == "pallas" and plan.sweep == "resident")):
             raise ValueError(
                 f"ttile={plan.ttile} requires a resident sweep engine "
-                "(backend='pallas' with sweep='resident', or "
-                "backend='distributed'); the legacy paths round-trip "
+                "(backend='pallas' with sweep='resident', backend='mxu', "
+                "or backend='distributed'); the legacy paths round-trip "
                 "every sweep, so there is nothing to temporally tile")
+        if plan.backend == "mxu":
+            # banded-operator engine: every depth-d chunk is ONE
+            # dot_general against A^d (core/matrixize.py).  With a
+            # decomp the same operator runs shard-resident over the
+            # distributed ghost codec.
+            vl = plan.vl if plan.m is not None else None
+            if plan.decomp is not None:
+                from repro.distributed import multistep as dms
+                return dms.distributed_run(
+                    self.spec, x, steps, k=plan.k, engine="mxu",
+                    shards=plan.decomp, sweep=plan.sweep,
+                    remainder=plan.remainder, vl=vl, m=plan.m,
+                    t0=plan.t0, ttile=plan.ttile)
+            from repro.kernels import ops
+            return ops.stencil_sweep_mxu(
+                self.spec, x, steps, k=plan.k, vl=vl, m=plan.m,
+                remainder=plan.remainder, ttile=plan.ttile)
         if plan.backend == "pallas":
             from repro.kernels import ops
             # m=None means "kernel auto-picks the native tile" (vl=128 on
@@ -237,19 +255,25 @@ class StencilProblem:
         ``vmap`` adds the batch as an outer dimension and leaves the
         per-element arithmetic untouched (the batch-invariance contract,
         see :func:`repro.core.autotune.plan_batch_invariant`; pinned in
-        tests/test_serve_batcher.py).
+        tests/test_serve_batcher.py).  The mxu engine is the one
+        rounding-level exception: XLA may re-block the batched matmul
+        (more rows → different gemm tiling), reassociating the f32
+        accumulation by a few ulp — both roundings correct, pinned at
+        tight tolerance rather than bitwise.
 
-        Distributed plans are the exception: their mesh decomposition
-        already consumes the physical devices, so batch elements run
-        sequentially through the same cached shard_map program (the
-        batcher claims the mesh exclusively while this happens).
+        Mesh-decomposed plans are the exception — ``backend=
+        "distributed"`` and any plan with a ``decomp`` axis (e.g. a
+        distributed mxu plan): their mesh decomposition already consumes
+        the physical devices, so batch elements run sequentially through
+        the same cached shard_map program (the batcher claims the mesh
+        exclusively while this happens).
         """
         plan = self._batched_plan(plan, steps)
         xb = jnp.asarray(xb)
         if xb.shape[1:] != self.shape:
             raise ValueError(f"run_batched expects (B,) + {self.shape}, "
                              f"got {xb.shape}")
-        if plan.backend == "distributed":
+        if plan.backend == "distributed" or plan.decomp is not None:
             # the mesh holds the spatial decomposition; elements reuse the
             # cached shard-resident program one after another.
             return jnp.stack([self.run(xb[i], steps, plan)
@@ -278,7 +302,7 @@ class StencilProblem:
                 raise ValueError(f"run_batched_parts expects grids of "
                                  f"shape {self.shape}, got {x.shape}")
         plan = self._batched_plan(plan, steps)
-        if plan.backend == "distributed":
+        if plan.backend == "distributed" or plan.decomp is not None:
             return [self.run(x, steps, plan) for x in xs]
         key = (len(xs), steps, plan, "parts")
         fn = self._batched_fns.get(key)

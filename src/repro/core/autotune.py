@@ -212,13 +212,14 @@ def code_fingerprint() -> str:
     monkeypatched scheme changes the hash), and the module sources of the
     execution layers a plan can dispatch to (``core/vectorize``,
     ``core/unroll_jam``, ``core/tessellate``, ``core/layouts``,
-    ``core/api``, ``kernels/stencil_kernels``, ``kernels/ops``,
-    ``distributed/halo``, ``distributed/multistep``).
+    ``core/matrixize``, ``core/api``, ``kernels/stencil_kernels``,
+    ``kernels/ops``, ``distributed/halo``, ``distributed/multistep``).
 
     Memoized per registry *identity* (object ids), so the common case is a
     dict lookup; replacing a registry entry recomputes.
     """
-    from repro.core import api, layouts, tessellate, unroll_jam, vectorize
+    from repro.core import (api, layouts, matrixize, tessellate, unroll_jam,
+                            vectorize)
     from repro.distributed import halo as dhalo
     from repro.distributed import multistep as dmultistep
     from repro.kernels import ops as kops
@@ -244,7 +245,7 @@ def code_fingerprint() -> str:
     for name in sorted(vectorize.SCHEMES):
         h.update(name.encode())
         h.update(_source_of(vectorize.SCHEMES[name]).encode())
-    for mod in (vectorize, unroll_jam, tessellate, layouts, api,
+    for mod in (vectorize, unroll_jam, tessellate, layouts, matrixize, api,
                 stencil_kernels, kops, dhalo, dmultistep):
         h.update(_source_of(mod).encode())
     fp = h.hexdigest()[:12]
@@ -601,6 +602,100 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
     return True
 
 
+def mxu_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
+                   vl: int, m: int, dtype=jnp.float32, *,
+                   decomp: Sequence[int] | None = None,
+                   k: int | None = None, steps: int | None = None,
+                   remainder: str = "fused", ttile: int = 1,
+                   n_devices: int | None = None) -> bool:
+    """Backend legality gate for the mxu (banded-operator matrixization)
+    engine (``core/matrixize.py``).
+
+    * dtype/accumulation rules: f32 (f32 accumulate), bf16 (f32-accumulate
+      ``dot_general``), f64 (x64 conformance) — other dtypes have no
+      defined accumulation contract and fail closed;
+    * lane divisibility: the (local) minor extent must tile into
+      (vl, m) blocks exactly — same fold the transpose layout needs;
+    * band-fits-tile: the DEEPEST launch of the sweep schedule must keep
+      its band width ``depth·r`` within one operator tile ``vl·m``, so
+      the banded operator reaches at most the ±1 neighbor block (the
+      ghost block the distributed codec exchanges — deeper bands would
+      need multi-block ghost rings and quadratically fatter operators);
+    * operator budget: the construction-free band bound
+      (:func:`repro.core.matrixize.operator_bytes_bound`) must fit
+      :data:`repro.core.matrixize.OPERATOR_BUDGET` — a depth-d power of
+      an n-D stencil has O((2dr+1)^(ndim-1)) offset matrices, and an
+      over-budget operator would blow VMEM/cache before it ever won;
+    * ``decomp`` (distributed mxu): shard divisibility on every axis,
+      the decomposition using every visible device, and the exact
+      ``depth·r`` ghost ring fitting every decomposed local extent —
+      same mesh rules as :func:`distributed_plan_legal`, applied to the
+      LOCAL extents the shard-resident operator actually sees.
+    """
+    from repro.core import matrixize
+    if jnp.dtype(dtype) not in (jnp.dtype(jnp.float32),
+                                jnp.dtype(jnp.bfloat16),
+                                jnp.dtype(jnp.float64)):
+        return False
+    shape = tuple(shape)
+    r = spec.r
+    local = list(shape)
+    if decomp is not None:
+        if n_devices is None:
+            n_devices = jax.device_count()
+        decomp = tuple(int(s) for s in decomp)
+        if len(decomp) != spec.ndim or any(s < 1 for s in decomp):
+            return False
+        ndev = int(np.prod(decomp))
+        if ndev < 2 or ndev != n_devices:
+            return False
+        if any(n % s for n, s in zip(shape, decomp)):
+            return False
+        local = [n // s for n, s in zip(shape, decomp)]
+    if vl < 1 or m < 1 or local[-1] % (vl * m):
+        return False
+    depth = _schedule_max_depth(k if k is not None else 1, steps,
+                                remainder, ttile)
+    if depth * r > vl * m:
+        return False
+    if decomp is not None and any(
+            s > 1 and depth * r > nl for nl, s in zip(local, decomp)):
+        return False
+    return matrixize.operator_bytes_bound(spec, vl, m, depth) \
+        <= matrixize.OPERATOR_BUDGET
+
+
+def _mxu_candidates(spec: stencils.StencilSpec, shape: tuple[int, ...],
+                    dtype, steps: int | None,
+                    n_devices: int | None = None) -> list[StencilPlan]:
+    """The mxu axis of the unified pool: (vl, m) operator tiles ×
+    k × remainder × ttile, single-device AND over every legal mesh
+    decomposition (the engine rides the distributed ghost codec with
+    exact depth·r rings).  No interpret budget gate — the engine is
+    jnp-level and runs native on every backend."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    shape = tuple(shape)
+    cands: list[StencilPlan] = []
+    decomps: list[tuple[int, ...] | None] = [None]
+    decomps += _decomps_for(spec.ndim, n_devices)
+    for decomp in decomps:
+        n_minor = shape[-1] // (decomp[-1] if decomp else 1)
+        for vl, m in _pallas_pairs(n_minor, spec.r)[:2]:
+            for k in _KS:
+                base = StencilPlan(scheme="transpose", k=k, vl=vl, m=m,
+                                   backend="mxu", decomp=decomp)
+                variants = [
+                    p for p in _with_remainder(base, steps, k)
+                    if mxu_plan_legal(
+                        spec, shape, vl, m, dtype, decomp=decomp, k=k,
+                        steps=steps, remainder=p.remainder,
+                        n_devices=n_devices)]
+                cands += _ttile_fanout(spec, shape, variants, steps,
+                                       n_devices=n_devices)
+    return cands
+
+
 def _ttile_window_bytes(spec: stencils.StencilSpec,
                         local: Sequence[int], depth: int, vl: int, m: int,
                         t0: int | None, itemsize: int = 4) -> int:
@@ -650,6 +745,20 @@ def ttile_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
         return False
     if tt == 1:
         return True
+    if plan.backend == "mxu":
+        # the engine is resident by construction; a deeper tile only
+        # fattens the banded operator, so the whole gate is the depth-
+        # aware mxu legality check (band fits the (vl, m) tile, operator
+        # fits the budget, ghost ring fits every decomposed extent) plus
+        # steps-amortizability.
+        if steps is not None and steps // max(plan.k, 1) < tt:
+            return False
+        vl = plan.vl if plan.m is not None else 8
+        m = plan.m if plan.m is not None else 8
+        return mxu_plan_legal(
+            spec, shape, vl, m, decomp=plan.decomp, k=plan.k,
+            steps=steps, remainder=plan.remainder, ttile=tt,
+            n_devices=n_devices)
     if plan.backend == "pallas":
         if plan.sweep != "resident":
             return False
@@ -689,8 +798,8 @@ def ttile_plan_legal(spec: stencils.StencilSpec, shape: Sequence[int],
 
 
 def _ttile_fanout(spec: stencils.StencilSpec, shape: Sequence[int],
-                  plans: list[StencilPlan],
-                  steps: int | None) -> list[StencilPlan]:
+                  plans: list[StencilPlan], steps: int | None,
+                  n_devices: int | None = None) -> list[StencilPlan]:
     """Fan resident-sweep candidates out along the temporal-tile axis:
     each legal base plan also enumerates ``ttile`` ∈ ``_TTILES`` variants
     that pass :func:`ttile_plan_legal`.  Base (ttile=1) plans always
@@ -700,7 +809,8 @@ def _ttile_fanout(spec: stencils.StencilSpec, shape: Sequence[int],
     for plan in plans:
         for tt in _TTILES:
             cand = dataclasses.replace(plan, ttile=tt)
-            if ttile_plan_legal(spec, shape, cand, steps):
+            if ttile_plan_legal(spec, shape, cand, steps,
+                                n_devices=n_devices):
                 out.append(cand)
     return out
 
@@ -818,10 +928,11 @@ def candidate_plans(spec: stencils.StencilSpec, shape: Sequence[int],
                     n_devices: int | None = None) -> list[StencilPlan]:
     """Every legal StencilPlan for (spec, shape, dtype, backend).
 
-    ``backend="auto"`` pools the jnp, Pallas and — on a ≥2-device host —
-    distributed candidates into one list (the unified cross-backend
-    search; ``n_devices`` overrides the visible device count, mostly for
-    tests).  When ``steps`` is given, k>1 candidates whose block size
+    ``backend="auto"`` pools the jnp, Pallas, mxu (banded-operator
+    matrixization, gated by :func:`mxu_plan_legal`) and — on a ≥2-device
+    host — distributed candidates into one list (the unified
+    cross-backend search; ``n_devices`` overrides the visible device
+    count, mostly for tests).  When ``steps`` is given, k>1 candidates whose block size
     does not divide it fan out along the remainder-policy axis (see
     :func:`_with_remainder`); without ``steps`` the canonical variants
     cover any step count via the ``fused`` fallback in
@@ -832,11 +943,16 @@ def candidate_plans(spec: stencils.StencilSpec, shape: Sequence[int],
     if backend == "auto":
         return (candidate_plans(spec, shape, dtype, "jnp", steps)
                 + _pallas_candidates(spec, shape, steps, budget_gate=True)
+                + _mxu_candidates(spec, shape, dtype, steps,
+                                  n_devices=n_devices)
                 + _distributed_candidates(spec, shape, steps,
                                           n_devices=n_devices,
                                           budget_gate=True))
     if backend == "pallas":
         return _pallas_candidates(spec, shape, steps)
+    if backend == "mxu":
+        return _mxu_candidates(spec, shape, dtype, steps,
+                               n_devices=n_devices)
     if backend == "distributed":
         cands = _distributed_candidates(spec, shape, steps,
                                         n_devices=n_devices)
@@ -1031,9 +1147,14 @@ def tune(problem, backend: str = "auto", steps: int | None = None,
             shards = float(np.prod(p.decomp)) if p.decomp else 1.0
             fit_bw = working_set / shards \
                 >= calibrate.MIN_BANDWIDTH_WORKING_SET
-            samples.append({"flops": f, "bytes": b if fit_bw else 0.0,
-                            "coll_bytes": c,
-                            "seconds": row["seconds_per_step"]})
+            sample = {"flops": f, "bytes": b if fit_bw else 0.0,
+                      "coll_bytes": c,
+                      "seconds": row["seconds_per_step"]}
+            if p.backend == "mxu":
+                # mxu terms are MATMUL flops — they fit the separate
+                # peak_flops_mxu ratchet, never the VPU peak
+                sample["mxu_flops"], sample["flops"] = sample["flops"], 0.0
+            samples.append(sample)
         try:
             calibrate.record_samples(samples, device=device_kind(),
                                      cache_path=cache.path)
@@ -1086,12 +1207,23 @@ def plan_batch_invariant(plan: StencilPlan) -> bool:
       execution, batch-size-invariant by construction.  (The batcher
       additionally claims the mesh exclusively for these.)
 
+    * mxu plans: the banded operator is a function of (spec, vl, m,
+      depth) ONLY — its matrix shapes never absorb the batch;
+      ``run_batched`` vmaps the whole program and the batch rides as an
+      outer dot_general dimension.  One rounding-level caveat: XLA may
+      re-block the larger batched matmul, reassociating the f32
+      accumulation by a few ulp versus the unbatched gemm (both
+      roundings correct — pinned at tight tolerance, not bitwise, in
+      tests/test_serve_batcher.py).  Distributed mxu plans carry a
+      ``decomp`` and serve through the same sequential mesh-exclusive
+      path as other distributed plans via the batcher.
+
     The gate exists so a future backend whose layout DOES depend on the
-    batch (e.g. folding the batch into the lane axis, or an MXU
-    matrixization whose matrix shapes absorb B) has a place to say so —
-    ``run_batched`` refuses such plans instead of silently serving a
-    shape the tuner never measured.  Unknown backends fail closed."""
-    return plan.backend in ("jnp", "pallas", "distributed")
+    batch (e.g. folding the batch into the lane axis, or a matrixization
+    whose matrix shapes absorb B) has a place to say so — ``run_batched``
+    refuses such plans instead of silently serving a shape the tuner
+    never measured.  Unknown backends fail closed."""
+    return plan.backend in ("jnp", "pallas", "mxu", "distributed")
 
 
 def cached_plan(problem, backend: str = "auto", steps: int | None = None,

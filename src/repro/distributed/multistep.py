@@ -12,6 +12,12 @@ Local engines (engine= below):
 
   * ``jnp``    — fused jnp steps on the halo-extended block (any ndim,
     any decomposition);
+  * ``mxu``    — the banded-matmul matrixization engine
+    (:mod:`repro.core.matrixize`): shards stay layout-resident like the
+    pallas resident path and ride the SAME ghost codec, but each k-step
+    sweep is one ``dot_general`` against the trace-time operator power
+    A^k; the codec's zero-filled ghost lanes hit structurally exact zero
+    operator columns, so no edge masking is needed;
   * ``pallas`` — the transpose-layout pipelined kernels, in two sweep
     renderings selected by ``sweep=``:
 
@@ -187,6 +193,10 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
         vl = m = t0 = None
         sweep = "resident"
         interpret = False
+    elif engine == "mxu":        # banded-matmul engine: always resident,
+        t0 = None                # jnp-level (no pallas_call) — t0, sweep
+        sweep = "resident"       # and interpret are inert
+        interpret = False
     key = (spec, mesh, decomp, engine, sweep, vl, m, t0, interpret,
            tuple(chunks))
     with _lock:
@@ -237,10 +247,15 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
             try:
                 return kops.pick_tile(spec, local_shape, vl, m, t0)
             except ValueError as e:
+                # the ragged-extent guard: a shard whose local minor
+                # extent admits no (vl, m) lane block — e.g. a
+                # non-power-of-two grid split over the mesh — gets the
+                # pinned "no legal lane block" wording, not a bare
+                # divisibility assert bubbling out of the kernel build
                 raise ValueError(
                     f"decomp {decomp} leaves shard shape "
-                    f"{tuple(local_shape)} unsupported by the pallas "
-                    f"engines: {e}") from e
+                    f"{tuple(local_shape)} with no legal lane block — "
+                    f"unsupported by the pallas engines: {e}") from e
 
         def run(xl):
             vl_, m_, t0_ = _validate(xl.shape)
@@ -331,6 +346,68 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
                                             axis=0)
                 return flat
             return _loop(xl, sweep_fn)
+    elif engine == "mxu":
+        # banded-matmul engine: identical exchange topology to the pallas
+        # resident path (raw rows on decomposed leading axes, the
+        # lane-carry ghost codec on the minor axis), but each depth-kk
+        # sweep is ONE dot_general against the trace-time operator power
+        # A^kk.  Ghost lanes the codec zero-fills multiply structurally
+        # EXACT zero coefficients (matmul sums of zeros), and
+        # apply_banded computes interior blocks only — no redundant
+        # ghost-zone compute, no crop needed after the sweep.
+        from repro.kernels import ops as kops
+        from repro.kernels import stencil_kernels as sk
+        if all(a is None for a in decomp):
+            raise ValueError("the mxu engine needs at least one decomposed "
+                             f"axis, got {decomp}")
+        nd = spec.ndim
+        nshards = [1 if a is None else _axis_shards(mesh, a) for a in decomp]
+        kmax = max(kk for kk, _ in chunks)
+
+        def _validate(local_shape):
+            for ax, (nl, s) in enumerate(zip(local_shape, nshards)):
+                if s > 1 and kmax * r > nl:
+                    raise ValueError(
+                        f"halo k*r = {kmax * r} exceeds the local extent "
+                        f"{nl} of axis {ax} under decomp {decomp} (shard "
+                        "too small for the sweep depth)")
+            try:
+                vl_, m_, _ = kops.pick_tile(spec, local_shape, vl, m)
+            except ValueError as e:
+                raise ValueError(
+                    f"decomp {decomp} leaves shard shape "
+                    f"{tuple(local_shape)} with no legal lane block for "
+                    f"the mxu engine: {e}") from e
+            return vl_, m_
+
+        def run(xl):
+            vl_, m_ = _validate(xl.shape)
+            blk = vl_ * m_
+
+            def sweep_fn(t, kk):
+                w = kk * r
+                gb = 0
+                lead = []
+                for ax in range(nd - 1):
+                    if nshards[ax] > 1:
+                        t = halo.exchange_axis(t, w, ax, decomp[ax],
+                                               nshards[ax])
+                        lead.append(w)
+                    else:
+                        lead.append(0)     # undecomposed: wraps via roll
+                if nshards[-1] > 1:
+                    gb = sk.sweep_halo_blocks(r, kk, blk)
+                    t = halo.exchange_minor(t, w, decomp[-1], nshards[-1])
+                if nd == 1:
+                    if gb:
+                        return sk.stencil1d_sweep_mxu_halo(spec, t, kk, gb)
+                    return sk.stencil1d_sweep_mxu(spec, t, kk)
+                return sk.stencil_nd_sweep_mxu_halo(spec, t, kk,
+                                                    tuple(lead), gb)
+
+            t = layouts.to_transpose_layout(xl, vl_, m_)
+            t = _loop(t, sweep_fn)
+            return layouts.from_transpose_layout(t, vl_, m_)
     else:
         raise ValueError(f"unknown engine {engine!r}")
 

@@ -267,6 +267,65 @@ def stencil_sweep_periodic(spec: StencilSpec, x: jax.Array, steps: int,
     return impl(spec, x, steps, k, vl, m, t0, remainder, interpret, ttile)
 
 
+# ---------------------------------------------------------------------------
+# MXU matrixization engine — `StencilProblem.run(backend="mxu")`.
+#
+# Same resident shape as the engine above (ONE program: transpose in,
+# all sweep_schedule chunks, untranspose), but each depth-d chunk is ONE
+# `dot_general` against the precomputed banded operator A^d
+# (core/matrixize.py; A^d by repeated squaring at trace time).  The
+# engine is jnp-level — XLA lowers the dot_general straight onto the
+# MXU on TPU, and on CPU it runs native (no interpret-mode penalty), so
+# the f64-oracle conformance matrix exercises the real engine.
+# ---------------------------------------------------------------------------
+
+def _sweep_mxu_impl(spec: StencilSpec, x: jax.Array, steps: int,
+                    k: int, vl: int | None, m: int | None,
+                    remainder: str, ttile: int = 1) -> jax.Array:
+    if remainder not in ("fused", "native"):
+        raise ValueError(f"unknown remainder policy {remainder!r}")
+    vl, m, _ = pick_tile(spec, x.shape, vl, m)
+    if steps <= 0:
+        return x
+    from repro.core.api import sweep_schedule
+    chunks, _ = sweep_schedule(k, steps, remainder, ttile)
+    t = layouts.to_transpose_layout(x, vl, m)   # (lead…, nb, m, vl)
+    sweep = sk.stencil1d_sweep_mxu if spec.ndim == 1 \
+        else sk.stencil_nd_sweep_mxu
+    for depth, n in chunks:
+        # one dot_general per launch: the depth-d operator advances d
+        # steps in a single contraction (matrixize.operator is
+        # lru-cached, so each distinct depth builds its A^d band once).
+        if n == 1:
+            t = sweep(spec, t, depth)
+        else:
+            t = jax.lax.fori_loop(
+                0, n, lambda _, u: sweep(spec, u, depth), t)
+    return layouts.from_transpose_layout(t, vl, m)
+
+
+_mxu_jit = jax.jit(_sweep_mxu_impl, static_argnums=(0, 2, 3, 4, 5, 6, 7))
+_mxu_jit_donated = jax.jit(_sweep_mxu_impl,
+                           static_argnums=(0, 2, 3, 4, 5, 6, 7),
+                           donate_argnums=(1,))
+
+
+def stencil_sweep_mxu(spec: StencilSpec, x: jax.Array, steps: int,
+                      k: int = 2, vl: int | None = None,
+                      m: int | None = None, remainder: str = "fused",
+                      donate: bool = False, ttile: int = 1) -> jax.Array:
+    """Advance ``x`` by ``steps`` periodic steps on the MXU engine.
+
+    Same (steps, k, remainder, ttile) decomposition as
+    :func:`stencil_sweep_periodic` — ``sweep_schedule`` is the single
+    source of truth — but every depth-``d`` chunk executes as ONE
+    ``dot_general`` against the banded operator ``A^d``.  Matches the
+    f64 oracle to accumulation-dtype tolerance (NOT bit-identical to
+    the lane-shift engines: the matmul reassociates the tap sum)."""
+    impl = _mxu_jit_donated if donate else _mxu_jit
+    return impl(spec, x, steps, k, vl, m, remainder, ttile)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))
 def stencil_onestep_naive(spec: StencilSpec, x: jax.Array,
                           vl: int = 8, interpret: bool | None = None):

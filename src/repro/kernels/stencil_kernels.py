@@ -452,6 +452,84 @@ def stencil_nd_sweep_periodic(spec: StencilSpec, t: jax.Array, k: int,
 
 
 # ---------------------------------------------------------------------------
+# MXU matrixization engine: the sweep body as ONE banded-operator matmul.
+#
+# A depth-d advance of the resident (nb, m, vl) layout is a fixed linear
+# map, so the whole lane-shift/Assemble arithmetic of the kernels above
+# collapses into one `lax.dot_general` against the precomputed banded
+# operator A^d (core/matrixize.py; A^d built by repeated squaring at
+# TRACE time — the jitted program contains exactly one dot_general per
+# sweep chunk and zero operator-construction matmuls, jaxpr-pinned).
+#
+# These sweeps deliberately run at the XLA level rather than inside a
+# pallas_call: (1) pallas kernels cannot close over array constants
+# ("consts not supported in pallas_call"), so the operator would have to
+# ride as an extra input anyway; (2) a kernel body that is ONE matmul
+# gains nothing over XLA's native MXU lowering of dot_general — on TPU
+# this IS the MXU engine, and on CPU it avoids the interpret-mode
+# penalty so the conformance matrix runs at full speed.  The engine
+# still rides the resident layout end to end: periodic wrap via block-
+# axis rolls on single-device runs, and the DISTRIBUTED ghost codec
+# unchanged — the halo variants consume the same ghost-extended shards
+# `halo.exchange_{blocks,axis,minor}` already build for the pallas
+# engines, computing interior blocks only (corruption never enters: the
+# band is exactly depth·r wide, so zero-filled ghost lanes beyond the
+# exchanged strip multiply zero coefficients).
+#
+# Accumulation-dtype rules: bf16 inputs contract a bf16 operator with
+# preferred_element_type=float32 (MXU-native), f32 in f32, f64 in f64
+# (see matrixize.accum_dtype) — f64-oracle-checked in the conformance
+# matrix.
+# ---------------------------------------------------------------------------
+
+def stencil1d_sweep_mxu(spec: StencilSpec, t: jax.Array, depth: int
+                        ) -> jax.Array:
+    """Advance the fully-periodic resident (nb, m, vl) layout by ``depth``
+    steps with ONE dot_general against the banded operator A^depth."""
+    from repro.core import matrixize
+    nb, m, vl = t.shape
+    op = matrixize.operator(spec, vl, m, depth)
+    return matrixize.apply_banded(op, t)
+
+
+def stencil_nd_sweep_mxu(spec: StencilSpec, t: jax.Array, depth: int
+                         ) -> jax.Array:
+    """n-D analogue: t is (n0, *mid, nb, m, vl); the banded operator
+    carries the leading-axis tap offsets as periodic rolls and the
+    minor-axis coupling (incl. lane carries) in its block matrices."""
+    from repro.core import matrixize
+    m, vl = t.shape[-2], t.shape[-1]
+    op = matrixize.operator(spec, vl, m, depth)
+    return matrixize.apply_banded(op, t)
+
+
+def stencil1d_sweep_mxu_halo(spec: StencilSpec, t: jax.Array, depth: int,
+                             block_halo: int) -> jax.Array:
+    """Depth-``depth`` advance of a ghost-EXTENDED resident shard
+    (nb + 2·block_halo blocks, ghosts exchanged by the distributed
+    codec); returns the nb interior blocks — no redundant ghost-zone
+    compute, no crop needed by the caller."""
+    from repro.core import matrixize
+    nb, m, vl = t.shape
+    op = matrixize.operator(spec, vl, m, depth)
+    assert block_halo >= op.block_reach(), (block_halo, op.block_reach())
+    return matrixize.apply_banded(op, t, block_halo=block_halo)
+
+
+def stencil_nd_sweep_mxu_halo(spec: StencilSpec, t: jax.Array, depth: int,
+                              lead_halo, block_halo: int) -> jax.Array:
+    """n-D halo variant: ``lead_halo[a]`` ghost rows per side on leading
+    axis ``a`` (0 → the axis is undecomposed and wraps periodically),
+    ``block_halo`` ghost blocks per side on the minor block axis."""
+    from repro.core import matrixize
+    m, vl = t.shape[-2], t.shape[-1]
+    op = matrixize.operator(spec, vl, m, depth)
+    assert block_halo == 0 or block_halo >= op.block_reach()
+    return matrixize.apply_banded(op, t, lead_halo=lead_halo,
+                                  block_halo=block_halo)
+
+
+# ---------------------------------------------------------------------------
 # §3.5 — block transpose kernel (the layout transform itself).
 # ---------------------------------------------------------------------------
 

@@ -25,6 +25,13 @@ from typing import Any
 import numpy as np
 
 PEAK_FLOPS = 197e12          # bf16 / chip
+# the MXU (dot_general) peak the mxu matrixization engine is charged at.
+# On TPU the quoted bf16 peak IS the MXU peak, so the static default
+# equals PEAK_FLOPS; on any real device the calibrator fits the two
+# terms separately from measured samples (roofline/calibrate.py:
+# peak_flops vs peak_flops_mxu), because VPU lane arithmetic and MXU
+# matmul throughput genuinely differ off-spec.
+PEAK_FLOPS_MXU = PEAK_FLOPS
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link
 

@@ -62,6 +62,15 @@ CONSTANTS_BASENAME = "roofline_constants.json"
 # not ratchet the fitted HBM term (see module docstring)
 MIN_BANDWIDTH_WORKING_SET = 32 << 20
 
+# until an mxu (dot_general matrixization) candidate has been measured on
+# a device kind, its matmul flops are charged at the fitted VPU peak
+# divided by this penalty — a deliberately conservative guess (matmul
+# throughput on a device without matrix units is typically WORSE than its
+# vector peak, never better), so an uncalibrated mxu term can't crowd
+# measured backends out of the pruned pool.  One measured mxu sample
+# replaces it with the real fitted peak_flops_mxu.
+MXU_FALLBACK_PENALTY = 2.0
+
 
 @dataclasses.dataclass(frozen=True)
 class RooflineConstants:
@@ -71,6 +80,10 @@ class RooflineConstants:
     peak_flops: float = PEAK_FLOPS
     hbm_bw: float = HBM_BW
     ici_bw: float = ICI_BW
+    # fitted MXU (dot_general) throughput for the mxu matrixization
+    # engine; 0.0 = no mxu sample yet → estimate_plan_time falls back to
+    # peak_flops / MXU_FALLBACK_PENALTY (documented above)
+    peak_flops_mxu: float = 0.0
     n_samples: int = 0
     source: str = "static"
 
@@ -129,6 +142,9 @@ def load_constants(device: str | None = None,
     return RooflineConstants(
         peak_flops=pf, hbm_bw=bw,
         ici_bw=float(e.get("ici_bw") or 0.0) or ICI_BW,
+        # absent in files written before the mxu engine existed — served
+        # as 0.0 (fallback penalty applies) without a version bump
+        peak_flops_mxu=float(e.get("peak_flops_mxu") or 0.0),
         n_samples=int(e.get("n_samples", 0)),
         source="measured")
 
@@ -141,10 +157,12 @@ def record_samples(samples: Iterable[dict], device: str | None = None,
     Each sample: ``{"flops": F, "bytes": B, "coll_bytes": C,
     "seconds": t}`` — modeled per-step per-device terms against the
     measured per-step wall time (what ``autotune.tune`` records for every
-    candidate it times).  Returns the post-update constants."""
+    candidate it times).  mxu-engine candidates carry their matmul flops
+    under ``"mxu_flops"`` (with ``"flops": 0.0``), fitting the separate
+    ``peak_flops_mxu`` term.  Returns the post-update constants."""
     path = path or constants_path(cache_path)
     device = device or device_kind()
-    pf = bw = ici = 0.0
+    pf = bw = ici = pf_mxu = 0.0
     n = 0
     for s in samples:
         t = float(s.get("seconds", 0.0))
@@ -153,6 +171,7 @@ def record_samples(samples: Iterable[dict], device: str | None = None,
         pf = max(pf, float(s.get("flops", 0.0)) / t)
         bw = max(bw, float(s.get("bytes", 0.0)) / t)
         ici = max(ici, float(s.get("coll_bytes", 0.0)) / t)
+        pf_mxu = max(pf_mxu, float(s.get("mxu_flops", 0.0)) / t)
         n += 1
     if not n:
         return load_constants(device=device, path=path)
@@ -168,6 +187,8 @@ def record_samples(samples: Iterable[dict], device: str | None = None,
             "peak_flops": max(pf, float(old.get("peak_flops", 0.0))),
             "hbm_bw": max(bw, float(old.get("hbm_bw", 0.0))),
             "ici_bw": max(ici, float(old.get("ici_bw", 0.0))),
+            "peak_flops_mxu": max(
+                pf_mxu, float(old.get("peak_flops_mxu", 0.0) or 0.0)),
             "n_samples": int(old.get("n_samples", 0)) + n}
         return {"version": CONSTANTS_VERSION, "devices": devices}
 

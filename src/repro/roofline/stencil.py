@@ -255,17 +255,76 @@ def _distributed_terms(spec, shape, itemsize, plan,
     return flops, mem, coll
 
 
+def _mxu_terms(spec, shape, itemsize, plan,
+               steps: int | None) -> tuple[float, float, float]:
+    """Per-device (matmul_flops, hbm_bytes, collective_bytes) per step for
+    a ``backend="mxu"`` (banded-operator matrixization) plan.
+
+    Compute is DENSE-matmul flops — every output tile element contracts
+    the full gathered (n_off·B)-long neighborhood row, zeros included:
+    ``2·n_off·B`` flops per point per application, with ``n_off`` from the
+    construction-free band bound (``matrixize.operator_bytes_bound``).
+    These flops run on the matrix units, so :func:`estimate_plan_time`
+    divides them by the separately calibrated ``peak_flops_mxu``, not the
+    VPU peak — that asymmetry is the whole reason the engine can win (or
+    lose) in the ranked pool despite a much larger raw flop count.
+    Memory is the resident model: one read+write of the local grid per
+    depth-d launch plus the layout round-trip once per run.  Distributed
+    plans exchange exact ``depth·r`` ghost rings (jnp-style widths) and
+    compute INTERIOR blocks only — the banded gather slices ghosts, it
+    never re-computes them, so the ext redundancy factor is 1."""
+    from repro.core import matrixize
+    from repro.core.api import sweep_schedule
+    shards = tuple(getattr(plan, "decomp", None) or ())
+    local = [n // s for n, s in zip(shape, shards)] if shards \
+        else list(shape)
+    pts_dev = float(np.prod(local))
+    vl = plan.vl if plan.m is not None else 8
+    m = plan.m if plan.m is not None else 8
+    B = float(vl * m)
+    r = spec.r
+    chunks, total = sweep_schedule(max(plan.k, 1), steps,
+                                   getattr(plan, "remainder", "fused"),
+                                   getattr(plan, "ttile", 1))
+    flops = mem = coll = 0.0
+    for depth, n in chunks:
+        n_off = matrixize.operator_bytes_bound(spec, vl, m, depth) \
+            / (B * B * 4.0)
+        flops += n * 2.0 * n_off * B * pts_dev
+        mem += n * 2.0 * pts_dev * itemsize
+        if shards:
+            b, shp = 0.0, list(local)
+            for ax, s in enumerate(shards):
+                if s <= 1:
+                    continue
+                w = depth * r
+                face = float(np.prod(shp)) / shp[ax]
+                b += 2.0 * w * face * itemsize
+                shp[ax] += 2 * w
+            coll += n * b
+    flops, mem, coll = flops / total, mem / total, coll / total
+    # layout round-trip once per run (the engine is resident by
+    # construction: transpose in, all chunks, untranspose)
+    mem += 4.0 * pts_dev * itemsize \
+        / float(steps if steps else RESIDENT_AMORT_STEPS)
+    return flops, mem, coll
+
+
 def plan_terms(spec, shape: Sequence[int], itemsize: int, plan,
                steps: int | None = None) -> tuple[float, float, float]:
     """(flops, hbm_bytes, collective_bytes) for ONE step of ``plan``, per
     device — the raw roofline terms :func:`estimate_plan_time` divides by
     the device constants, and the quantities the calibrator
-    (:mod:`repro.roofline.calibrate`) fits throughputs from."""
+    (:mod:`repro.roofline.calibrate`) fits throughputs from.  For
+    ``backend="mxu"`` plans the flops slot carries MATMUL flops (charged
+    at ``peak_flops_mxu``, see :func:`_mxu_terms`)."""
     pts = float(np.prod(list(shape)))
     backend = getattr(plan, "backend", "jnp")
     remainder = getattr(plan, "remainder", "fused")
     if backend == "distributed":
         return _distributed_terms(spec, shape, itemsize, plan, steps)
+    if backend == "mxu":
+        return _mxu_terms(spec, shape, itemsize, plan, steps)
     if plan.tiling == "tessellate":
         k_eff = plan.height or plan.k
         scheme = plan.scheme
@@ -332,6 +391,19 @@ def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
     pf = constants.peak_flops if constants is not None else PEAK_FLOPS
     bw = constants.hbm_bw if constants is not None else HBM_BW
     ici = constants.ici_bw if constants is not None else ICI_BW
+    if getattr(plan, "backend", "jnp") == "mxu":
+        # matmul flops are charged at the separately calibrated MXU peak;
+        # until a device kind has an mxu sample the fitted (or static)
+        # VPU peak stands in with a conservative penalty (calibrate.py).
+        # `constants` is duck-typed (tests pass bare objects without the
+        # field), hence the getattr.
+        if constants is None:
+            from repro.roofline.analysis import PEAK_FLOPS_MXU
+            pf = PEAK_FLOPS_MXU
+        else:
+            from repro.roofline.calibrate import MXU_FALLBACK_PENALTY
+            pf = getattr(constants, "peak_flops_mxu", 0.0) \
+                or pf / MXU_FALLBACK_PENALTY
     t = max(flops / pf, mem_bytes / bw)
     if coll_bytes:
         t_coll = coll_bytes / ici \

@@ -20,6 +20,19 @@ stencil analogue of the LM ``ContinuousBatcher`` next door in
     set of slot counts (default ``{1, 2, 4, 8}``), so after one warmup
     per slot count NOTHING ever recompiles: shapes are static, the jitted
     program per (signature, steps, slots) is built once and reused;
+  * **shape-bucketed admission** — a request whose minor extent misses
+    the lane-legal quantum (:data:`BUCKET_QUANTUM` = the kernels'
+    native 128-lane vl) is padded up to the next lane-legal bucket by
+    PERIODIC REPLICATION: the grid is tiled ``c`` times along the minor
+    axis (smallest ``c`` with ``c·n % 128 == 0``, capped at
+    :data:`BUCKET_MAX_REPLICAS`).  A c-periodic grid stays c-periodic
+    under any shift-invariant periodic stencil, so cropping the first
+    copy back out on unstack is BIT-identical to running the original
+    extent — near-miss shapes (e.g. (96,) and (192,), both bucketing
+    to (384,)) join ONE coalescing group and share one compiled
+    program instead of forming singleton batches.  Already-legal
+    extents (``n % 128 == 0``) are never bucketed, so distinct legal
+    signatures keep distinct groups;
   * **backpressure** — the queue is bounded; a submit against a full
     queue raises :class:`BatcherFull` carrying a ``retry_after`` estimate
     (EMA batch latency × queue depth) instead of growing latency without
@@ -58,6 +71,29 @@ __all__ = ["BatcherFull", "StencilSweepBatcher"]
 
 SLOT_COUNTS = (1, 2, 4, 8)
 
+# shape-bucketed admission: minor extents are padded (by periodic
+# replication — see the module docstring) up to a multiple of this
+# quantum, the kernels' native lane count (stencil_kernels.DEFAULT_VL),
+# so near-miss shapes share one lane-legal compiled program.  The
+# replica cap bounds the redundant-compute cost of joining a bucket:
+# a shape needing more than 8 copies keeps its own signature.
+BUCKET_QUANTUM = 128
+BUCKET_MAX_REPLICAS = 8
+
+
+def bucket_shape(shape: tuple) -> tuple[tuple, int]:
+    """(bucketed shape, replicas): the admission bucket ``shape`` joins.
+    Lane-legal minors (``n % BUCKET_QUANTUM == 0``) — and shapes whose
+    bucket would need more than :data:`BUCKET_MAX_REPLICAS` copies —
+    map to themselves with 1 replica."""
+    n = shape[-1]
+    if n % BUCKET_QUANTUM == 0:
+        return shape, 1
+    for c in range(2, BUCKET_MAX_REPLICAS + 1):
+        if (c * n) % BUCKET_QUANTUM == 0:
+            return shape[:-1] + (c * n,), c
+    return shape, 1
+
 
 class BatcherFull(RuntimeError):
     """Queue-full rejection.  ``retry_after`` (seconds) estimates when
@@ -78,6 +114,7 @@ class _SweepRequest:
     future: concurrent.futures.Future
     seq: int
     t_submit: float
+    reps: int = 1          # minor-axis replicas joining a shape bucket
 
 
 class _Group:
@@ -229,7 +266,12 @@ StencilService` — see the module docstring for the scheduling policy.
         advanced grid.  Raises :class:`BatcherFull` (with
         ``retry_after``) when the queue is at capacity."""
         x = jnp.asarray(x)
-        sig = (name, tuple(x.shape), jnp.dtype(x.dtype).name)
+        # shape-bucketed admission: the coalescing signature carries the
+        # BUCKETED shape, so near-miss minor extents land in the same
+        # group (padding by replication happens at batch run, cropping
+        # at fan-out — both bit-transparent, see the module docstring)
+        bshape, reps = bucket_shape(tuple(x.shape))
+        sig = (name, bshape, jnp.dtype(x.dtype).name)
         fut: concurrent.futures.Future = concurrent.futures.Future()
         with self._cv:
             if self._closed:
@@ -239,7 +281,9 @@ StencilService` — see the module docstring for the scheduling policy.
                 raise BatcherFull(self._retry_after_locked())
             self._seq += 1
             req = _SweepRequest(tenant, name, x, int(steps), fut,
-                                self._seq, time.monotonic())
+                                self._seq, time.monotonic(), reps)
+            if reps > 1:
+                self._stats["bucketed"] += 1
             group = self._groups.get((sig, steps))
             if group is None:
                 group = self._groups[(sig, steps)] = _Group()
@@ -336,9 +380,11 @@ StencilService` — see the module docstring for the scheduling policy.
             # request's grid: static shapes per (signature, steps,
             # n_slots), pad lanes computed-and-discarded (vmap lanes are
             # independent, so padding cannot perturb real results)
-            xs = [r.x for r in reqs]
+            xs = [r.x if r.reps == 1 else
+                  jnp.concatenate([r.x] * r.reps, axis=-1) for r in reqs]
             xs += [xs[0]] * (n_slots - len(xs))
-            exclusive = plan.backend == "distributed"
+            exclusive = plan.backend == "distributed" \
+                or plan.decomp is not None
             claim = self._mesh.exclusive if exclusive else \
                 self._mesh.shared
             t0 = time.monotonic()
@@ -365,6 +411,8 @@ StencilService` — see the module docstring for the scheduling policy.
                 "wall_s": dt})
         for r, y in zip(reqs, ys):
             if not r.future.cancelled():
+                if r.reps > 1:          # crop the first periodic copy
+                    y = y[..., :r.x.shape[-1]]
                 r.future.set_result(y)
 
     # ------------------------------------------------------------- status

@@ -245,9 +245,149 @@ def check_illegal_decomp_messages():
                                   shards=(8,), vl=8)
         raise AssertionError("no-legal-lane-block must raise")
     except ValueError as e:
+        assert "no legal lane block" in str(e), e
         assert "unsupported by the pallas engines" in str(e), e
         assert "no legal Pallas tile" in str(e), e
     print("illegal-decomp message pins ok")
+
+
+def check_ragged_extent_guard():
+    """The ragged-extent regression: a NON-power-of-two grid whose local
+    shard extent admits no (vl, m) lane block — (72,) over 8 shards
+    leaves local extent 9 — raises the pinned "no legal lane block"
+    message from both lane-layout engines (not a bare divisibility
+    assert), and the planner's legality gates reject the decomp up
+    front so plan='auto' never dispatches it."""
+    from repro.core import autotune
+    spec5 = stencils.make("1d5p")
+    x = jnp.zeros((72,), jnp.float32)              # 8 shards × extent 9
+    for engine in ("pallas", "mxu"):
+        try:
+            multistep.distributed_run(spec5, x, steps=2, k=2,
+                                      engine=engine, shards=(8,))
+            raise AssertionError(f"{engine}: ragged shard must raise")
+        except ValueError as e:
+            assert "no legal lane block" in str(e), (engine, e)
+            assert "(9,)" in str(e), (engine, e)
+    assert not autotune.distributed_plan_legal(
+        spec5, (72,), (8,), k=2, engine="pallas", n_devices=8)
+    assert not autotune.mxu_plan_legal(spec5, (72,), 8, 8, decomp=(8,),
+                                       n_devices=8)
+    # …and the divisible power-of-two grid next door stays legal
+    assert autotune.mxu_plan_legal(spec5, (8 * 64,), 8, 8, decomp=(8,),
+                                   n_devices=8)
+    print("ragged-extent guard ok")
+
+
+def check_mxu_parity(name, shape, shards, steps, k, remainder, **kw):
+    """The distributed mxu engine (banded-matmul sweeps riding the same
+    ghost codec): matches the f64 oracle across decomposition
+    topologies, remainder policies and temporal tiles."""
+    spec = stencils.make(name)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    got = multistep.distributed_run(spec, x, steps, k, engine="mxu",
+                                    shards=shards, remainder=remainder,
+                                    **kw)
+    want = _f64_oracle(spec, x, steps)
+    np.testing.assert_allclose(np.asarray(got), want.astype(np.float32),
+                               rtol=5e-5, atol=5e-5)
+    print(f"mxu parity ok: {name} {shape} shards={shards} steps={steps} "
+          f"k={k} rem={remainder} {kw}")
+
+
+def _dot_general_count(closed) -> int:
+    n = 0
+
+    def visit(jaxpr):
+        nonlocal n
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "dot_general":
+                n += 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if isinstance(sub, jcore.ClosedJaxpr):
+                        visit(sub.jaxpr)
+                    elif isinstance(sub, jcore.Jaxpr):
+                        visit(sub)
+
+    visit(closed.jaxpr)
+    return n
+
+
+def check_mxu_jaxpr_pins():
+    """Distributed mxu programs: the operator power is a trace-time
+    constant — exactly ONE dot_general per sweep chunk in the whole-run
+    shard_map program, zero operator-construction matmuls — and the
+    layout is held resident (one transpose round-trip per run, like the
+    pallas resident engine)."""
+    from repro.core.api import sweep_schedule
+    spec = stencils.make("1d3p")
+    x = jnp.zeros((8 * 64,), jnp.float32)
+    mesh, decomp = multistep.mesh_for_shards((8,))
+    for steps, k, rem in [(6, 2, "fused"), (7, 2, "fused"),
+                          (7, 2, "native")]:
+        chunks, _ = sweep_schedule(k, steps, rem)
+        prog = multistep.make_run(spec, mesh, decomp, steps=steps, k=k,
+                                  engine="mxu", remainder=rem, vl=4, m=4)
+        closed = jax.make_jaxpr(prog)(x)
+        nd = _dot_general_count(closed)
+        assert nd == len(chunks), (steps, k, rem, nd, chunks)
+        top, inside = _transpose_census(closed)
+        assert inside == 0, f"mxu: {inside} per-sweep transposes"
+        assert top == 2, f"mxu: expected one layout round-trip, got {top}"
+    print("mxu jaxpr pins ok (one dot_general per chunk, resident layout)")
+
+
+def check_auto_plan_enumerates_mxu():
+    """plan='auto' on the 8-device mesh: mxu candidates — single-device
+    AND mesh-decomposed — are in the pool, gated by mxu_plan_legal; a
+    stubbed timer makes a distributed mxu plan win; the winner
+    round-trips through the plan cache with backend and decomp intact
+    and matches the oracle end to end."""
+    import dataclasses as _dc
+
+    from repro.core import autotune
+    from repro.core.api import StencilProblem
+
+    prob = StencilProblem("2d5p", (32, 64))
+    cands = autotune.candidate_plans(prob.spec, prob.shape, steps=8)
+    mxu = [p for p in cands if p.backend == "mxu"]
+    assert mxu, "auto pool must enumerate mxu candidates"
+    decomps = {p.decomp for p in mxu}
+    assert None in decomps, decomps
+    assert any(d is not None for d in decomps), decomps
+    assert all(autotune.mxu_plan_legal(
+        prob.spec, prob.shape, p.vl, p.m, k=p.k, steps=8,
+        remainder=p.remainder, ttile=p.ttile, decomp=p.decomp,
+        n_devices=8) for p in mxu)
+
+    target = next(p for p in mxu if p.decomp == (2, 4))
+    with tempfile.TemporaryDirectory() as td:
+        cache_path = os.path.join(td, "plans.json")
+
+        def mxu_dist_wins(fn, plan):
+            return 0.001 if plan == target else 1.0
+
+        res = autotune.tune(prob, cache_path=cache_path,
+                            timer=mxu_dist_wins, max_measure=500)
+        assert res.plan == target, res.plan
+        res2 = autotune.tune(prob, cache_path=cache_path,
+                             timer=mxu_dist_wins)
+        assert res2.cached and res2.plan == target
+        assert autotune.plan_from_dict(
+            autotune.plan_to_dict(target)) == target
+
+        x = prob.init(0)
+        got = prob.run(x, 5, res2.plan)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(prob.reference(x, 5)),
+            rtol=5e-5, atol=5e-5)
+        # sequential mesh-exclusive batched serving stays bit-identical
+        yb = prob.run_batched(jnp.stack([x, x]), 5, res2.plan)
+        np.testing.assert_array_equal(np.asarray(yb[0]),
+                                      np.asarray(got))
+    print("plan='auto' mxu enumeration + selection ok")
 
 
 def check_program_and_mesh_caches():
@@ -596,12 +736,37 @@ def main():
     check_ttile_fallback_warns()
     check_auto_pool_enumerates_ttile()
 
+    # MXU banded-matmul engine on the same decomposition topologies:
+    # axis-0, minor-axis (lane-carry codec), 2-D and 3-D meshes,
+    # remainder policies, ragged steps, temporal tiles
+    check_mxu_parity("1d3p", (8 * 64,), (8,), steps=5, k=2,
+                     remainder="fused")
+    check_mxu_parity("1d3p", (8 * 64,), (8,), steps=7, k=2,
+                     remainder="native")
+    check_mxu_parity("1d5p", (8 * 64,), (8,), steps=5, k=4,
+                     remainder="fused")
+    check_mxu_parity("1d3p", (8 * 64,), (8,), steps=16, k=2,
+                     remainder="fused", ttile=2)
+    check_mxu_parity("2d5p", (32, 8 * 32), (1, 8), steps=5, k=2,
+                     remainder="fused")
+    check_mxu_parity("2d5p", (32, 64), (8, 1), steps=5, k=2,
+                     remainder="native")
+    check_mxu_parity("2d5p", (32, 64), (4, 2), steps=5, k=2,
+                     remainder="fused")
+    check_mxu_parity("2d9p", (32, 64), (2, 4), steps=3, k=2,
+                     remainder="fused")
+    check_mxu_parity("3d7p", (16, 16, 16), (2, 2, 2), steps=3, k=2,
+                     remainder="fused", vl=4, m=2)
+
     check_jaxpr_no_per_exchange_transpose()
     check_sweep_grid_pin()
+    check_mxu_jaxpr_pins()
     check_illegal_decomp_messages()
+    check_ragged_extent_guard()
     check_program_and_mesh_caches()
     check_auto_plan_selects_distributed()
     check_auto_plan_selects_minor_axis()
+    check_auto_plan_enumerates_mxu()
 
     # halo byte accounting sanity
     b = halo.halo_bytes_per_exchange((64,), 2, ["dx"], 4)

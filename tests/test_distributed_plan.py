@@ -142,11 +142,12 @@ def test_distributed_candidates_remainder_axis():
 
 
 def test_auto_pool_excludes_distributed_on_one_device():
-    """Single-device hosts must see exactly the old jnp+pallas pool
-    (pinned via the n_devices override so the test holds anywhere)."""
+    """Single-device hosts must see exactly the single-device pool —
+    jnp + pallas + mxu, no distributed candidates (pinned via the
+    n_devices override so the test holds anywhere)."""
     spec = stencils.make("1d3p")
     cands = autotune.candidate_plans(spec, (128,), n_devices=1)
-    assert {p.backend for p in cands} == {"jnp", "pallas"}
+    assert {p.backend for p in cands} == {"jnp", "pallas", "mxu"}
     assert autotune._distributed_candidates(spec, (128,), None,
                                             n_devices=1) == []
 
@@ -154,7 +155,8 @@ def test_auto_pool_excludes_distributed_on_one_device():
 def test_auto_pool_includes_distributed_when_devices_exist():
     spec = stencils.make("1d3p")
     cands = autotune.candidate_plans(spec, (512,), n_devices=8)
-    assert {p.backend for p in cands} == {"jnp", "pallas", "distributed"}
+    assert {p.backend for p in cands} \
+        == {"jnp", "pallas", "mxu", "distributed"}
 
 
 def test_distributed_budget_gate_off_tpu():

@@ -88,8 +88,8 @@ def test_file_format_and_corruption_tolerance(tmp_path):
     raw = json.load(open(path))
     assert raw["version"] == calibrate.CONSTANTS_VERSION
     assert "cpu" in raw["devices"]
-    assert set(raw["devices"]["cpu"]) == {"peak_flops", "hbm_bw",
-                                          "ici_bw", "n_samples"}
+    assert set(raw["devices"]["cpu"]) == {"peak_flops", "peak_flops_mxu",
+                                          "hbm_bw", "ici_bw", "n_samples"}
     # corrupt file: ignored on read, overwritten on next record
     with open(path, "w") as f:
         f.write("{not json")

@@ -4,11 +4,13 @@ All five vectorization schemes must agree with an f64 oracle (pure numpy,
 independent of jnp) on every stencil family the planner chooses between,
 across dtypes and (vl, m) layout parameters.  The backend-parity matrix
 extends every (scheme × stencil family × dtype) case with the Pallas
-multistep kernel (interpret mode, periodic wrapper) against the same
-oracle at the same tolerances — jnp and Pallas plans in the autotuner's
-unified pool are therefore interchangeable answers.  This is the contract
-that makes the cross-backend search *safe*: any candidate it measures
-computes the same answer.
+multistep kernel (interpret mode, periodic wrapper) AND the mxu
+banded-matmul engine (one dot_general per sweep, f32 accumulation for
+bf16 — core/matrixize.py) against the same oracle at the same
+tolerances — jnp, Pallas and mxu plans in the autotuner's unified pool
+are therefore interchangeable answers.  This is the contract that makes
+the cross-backend search *safe*: any candidate it measures computes the
+same answer.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -96,18 +98,23 @@ def test_multistep_conformance(scheme, steps):
 @pytest.mark.parametrize("scheme", SCHEMES)
 def test_backend_parity_matrix(scheme, name, dtype):
     """Every (scheme × stencil family × dtype) cell also runs the Pallas
-    multistep kernel (interpret mode, periodic wrapper): jnp, Pallas and
-    the f64 oracle must agree to the same tolerances — so a plan's
-    backend never changes the answer, only the speed."""
+    multistep kernel (interpret mode, periodic wrapper) AND the mxu
+    banded-matmul engine: jnp, Pallas, mxu and the f64 oracle must agree
+    to the same tolerances — so a plan's backend never changes the
+    answer, only the speed."""
     spec, x, x64 = _inputs(name, dtype)
     tol = TOL[dtype]
     want = _f64_oracle(spec, x64).astype(np.float32)
     got_jnp = np.asarray(_run(scheme, spec, x, 8, 4).astype(jnp.float32))
     got_pal = np.asarray(ops.stencil_multistep_periodic(
         spec, x, 1, vl=8, m=4, interpret=True).astype(jnp.float32))
+    got_mxu = np.asarray(ops.stencil_sweep_mxu(
+        spec, x, 1, k=1, vl=8, m=4).astype(jnp.float32))
     np.testing.assert_allclose(got_jnp, want, rtol=tol, atol=tol)
     np.testing.assert_allclose(got_pal, want, rtol=tol, atol=tol)
+    np.testing.assert_allclose(got_mxu, want, rtol=tol, atol=tol)
     np.testing.assert_allclose(got_pal, got_jnp, rtol=tol, atol=tol)
+    np.testing.assert_allclose(got_mxu, got_jnp, rtol=tol, atol=tol)
 
 
 @pytest.mark.parametrize("steps,k", [(4, 2), (5, 2), (3, 4)])
@@ -128,3 +135,8 @@ def test_backend_parity_multistep(name, steps, k):
         got = np.asarray(prob.run(x, steps, plan))
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
                                    err_msg=f"{name} {remainder}")
+        mxu = StencilPlan(scheme="transpose", k=k, vl=8, m=4,
+                          backend="mxu", remainder=remainder)
+        got_mxu = np.asarray(prob.run(x, steps, mxu))
+        np.testing.assert_allclose(got_mxu, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name} {remainder} mxu")

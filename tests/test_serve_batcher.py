@@ -111,6 +111,62 @@ def test_fixed_slot_admission_pads_to_static_sizes(cache_path):
 
 
 # ---------------------------------------------------------------------------
+# shape-bucketed admission
+# ---------------------------------------------------------------------------
+
+def test_bucket_shape_rules():
+    from repro.serve.batcher import bucket_shape
+    assert bucket_shape((128,)) == ((128,), 1)       # lane-legal: as-is
+    assert bucket_shape((256,)) == ((256,), 1)
+    assert bucket_shape((96,)) == ((384,), 4)        # lcm with 128
+    assert bucket_shape((192,)) == ((384,), 2)
+    assert bucket_shape((64,)) == ((128,), 2)
+    assert bucket_shape((16, 96)) == ((16, 384), 4)  # minor axis only
+    assert bucket_shape((100,)) == ((100,), 1)       # >8 copies: opt out
+
+
+def test_near_miss_shapes_share_one_program(cache_path):
+    """The satellite pin: two near-miss minor extents — (96,) and
+    (192,), both bucketing to (384,) by periodic replication — land in
+    ONE coalescing group and ONE compiled program instead of two
+    singleton batches, and the cropped results are BIT-identical to the
+    sequential unbucketed reference."""
+    svc = _service(cache_path)
+    batcher = StencilSweepBatcher(svc, start=False)
+    x1, x2 = _rand((96,), seed=1), _rand((192,), seed=2)
+    f1 = batcher.submit("1d3p", x1, 6)
+    f2 = batcher.submit("1d3p", x2, 6)
+    batcher.run_pending()
+    st = batcher.stats
+    assert st["batches"] == 1 and st["programs"] == 1
+    assert st["bucketed"] == 2
+    (batch,) = st["batch_log"]
+    assert batch["sig"][1] == (384,) and batch["n"] == 2
+    y1, y2 = f1.result(timeout=0), f2.result(timeout=0)
+    assert y1.shape == (96,) and y2.shape == (192,)
+    from repro.core import stencils
+    spec = stencils.make("1d3p")
+    assert jnp.array_equal(y1, stencils.apply_steps(spec, x1, 6,
+                                                    bc="periodic"))
+    assert jnp.array_equal(y2, stencils.apply_steps(spec, x2, 6,
+                                                    bc="periodic"))
+
+
+def test_replication_padding_is_exact():
+    """The mathematical core of bucketing: a c-periodic grid stays
+    c-periodic under a shift-invariant periodic stencil, so every copy
+    of the replicated run is bitwise the original-extent run."""
+    from repro.core import stencils
+    spec = stencils.make("1d5p")
+    x = _rand((64,), seed=3)
+    xr = jnp.concatenate([x, x], axis=-1)            # (64,) → (128,)
+    yr = stencils.apply_steps(spec, xr, 5, bc="periodic")
+    y = stencils.apply_steps(spec, x, 5, bc="periodic")
+    assert jnp.array_equal(yr[:64], y)
+    assert jnp.array_equal(yr[64:], yr[:64])         # still 64-periodic
+
+
+# ---------------------------------------------------------------------------
 # fairness
 # ---------------------------------------------------------------------------
 
@@ -216,6 +272,49 @@ def test_batched_bitwise_equals_sequential_2d():
         assert jnp.array_equal(yb[i], prob.run(xb[i], 5, plan))
 
 
+# mxu rows of the parity matrix: the banded-matmul engine is the one
+# documented rounding-level exception to the bitwise contract — XLA may
+# re-block the batched (more-rows) gemm, reassociating the f32
+# accumulation by a few ulp (see StencilProblem.run_batched) — so these
+# rows pin at one-ulp-scale tolerance per accumulation dtype instead of
+# array_equal.  bf16 rounds the f32 accumulator, so its tolerance is one
+# bf16 ulp.
+_MXU_TOL = {"float32": 2e-6, "bfloat16": 8e-3}
+
+
+@pytest.mark.parametrize("ttile", [1, 2], ids=lambda t: f"tt{t}")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=lambda d: jnp.dtype(d).name)
+def test_batched_mxu_parity(dtype, ttile):
+    plan = StencilPlan(scheme="transpose", k=2, vl=8, m=8,
+                       backend="mxu", ttile=ttile)
+    prob = StencilProblem("1d3p", (128,), dtype)
+    xb = _rand((4, 128), dtype, seed=42)
+    yb = prob.run_batched(xb, 7, plan)
+    assert yb.dtype == jnp.dtype(dtype)
+    tol = _MXU_TOL[jnp.dtype(dtype).name]
+    for i in range(xb.shape[0]):
+        yi = prob.run(xb[i], 7, plan)
+        np.testing.assert_allclose(
+            np.asarray(yb[i], np.float32), np.asarray(yi, np.float32),
+            rtol=tol, atol=tol, err_msg=f"lane {i} diverged")
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs an 8-device mesh")
+def test_batched_mxu_parity_2d_mesh():
+    """Distributed mxu plans carry a decomp: run_batched serves them
+    sequentially through the cached shard_map program — trivially
+    bitwise equal to per-element runs."""
+    plan = StencilPlan(scheme="transpose", k=2, vl=4, m=4,
+                       backend="mxu", decomp=(2, 4))
+    prob = StencilProblem("2d5p", (16, 128))
+    xb = _rand((3, 16, 128), seed=7)
+    yb = prob.run_batched(xb, 5, plan)
+    for i in range(3):
+        assert jnp.array_equal(yb[i], prob.run(xb[i], 5, plan))
+
+
 def test_service_level_bit_identity_with_cached_pallas_plan(cache_path):
     """End-to-end through the service: a Pallas winner in the plan cache
     dispatches both the sync and the batched path; results are bitwise
@@ -271,7 +370,9 @@ def test_plan_batch_invariance_gate():
     spec = stencils.make("1d3p")
     for plan in autotune.candidate_plans(spec, (128,), n_devices=2):
         assert autotune.plan_batch_invariant(plan), plan
-    bogus = dataclasses.replace(StencilPlan(), backend="mxu")
+    assert autotune.plan_batch_invariant(
+        StencilPlan(scheme="transpose", backend="mxu"))
+    bogus = dataclasses.replace(StencilPlan(), backend="quantum")
     assert not autotune.plan_batch_invariant(bogus)
     with pytest.raises(ValueError, match="not batch-invariant"):
         StencilProblem("1d3p", (128,)).run_batched(

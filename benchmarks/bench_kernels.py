@@ -36,6 +36,17 @@ artifacts (CPU host: interpret-mode kernels, compiled XLA around them).
     the tap sum).  ``--mxu`` runs that section alone, writes its own
     artifact, and exits nonzero unless parity holds — the multidevice
     CI gate.
+
+(d) ``--distributed`` — the ``distributed`` section alone, at deeper
+    step counts, timing all THREE schedules (roundtrip / serialized
+    resident / overlapped resident) with the roofline's modeled
+    collective-bytes and end-to-end ratios recorded per row; writes
+    ``benchmarks/results/bench_kernels_distributed.json``, appends the
+    ratio record to the repo-root ``BENCH_distributed.json`` ledger,
+    and exits nonzero unless resident == roundtrip AND overlapped ==
+    serialized BITWISE — the multidevice CI gate.  Every row carries
+    ``mode: "interpret"`` so dashboards never mistake interpret-scale
+    wall-clock for a silicon claim.
 """
 from __future__ import annotations
 
@@ -109,18 +120,33 @@ SMOKE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 
 def _smoke_distributed(steps_list) -> dict:
-    """Shard-resident vs per-exchange-roundtrip distributed engines on the
-    default mesh; skipped (with a reason) on single-device hosts."""
+    """Shard-resident (serialized AND overlapped) vs per-exchange-
+    roundtrip distributed engines on the default mesh; skipped (with a
+    reason) on single-device hosts.
+
+    Per row: measured times for all three schedules, the measured
+    resident-with-overlap vs roundtrip ratio (the acceptance reading),
+    the roofline's modeled collective-bytes and modeled end-to-end time
+    ratios for the same plans (the exact-strip + overlap economics the
+    measured interpret-scale numbers undersell on a CPU host), and two
+    parity flags: resident == roundtrip BITWISE and overlapped ==
+    serialized BITWISE — the flags CI gates on (``--distributed``)."""
     n_dev = jax.device_count()
     if n_dev < 2:
         return {"skipped": f"needs >=2 devices, have {n_dev}",
-                "n_devices": n_dev, "results": []}
+                "n_devices": n_dev, "results": [], "parity": True}
+    from repro.core.api import StencilPlan
     from repro.distributed import multistep as dms
+    from repro.roofline import stencil as rs
     spec = stencils.make("1d3p")
     shape = (n_dev * 4 * 4 * 8,)       # 8 layout blocks per shard
     x = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
                     jnp.float32)
     kw = dict(k=2, engine="pallas", shards=(n_dev,), vl=4, m=4)
+    rt_plan = StencilPlan(scheme="transpose", k=2, vl=4, m=4,
+                          backend="distributed", decomp=(n_dev,),
+                          sweep="roundtrip")
+    ovl_plan = dataclasses.replace(rt_plan, sweep="resident", overlap=True)
     rows = []
     for steps in steps_list:
         rt = bench(lambda: dms.distributed_run(
@@ -129,11 +155,40 @@ def _smoke_distributed(steps_list) -> dict:
         res = bench(lambda: dms.distributed_run(
             spec, x, steps, sweep="resident", **kw),
             warmup=1, iters=3, min_time_s=0.05)
+        ovl = bench(lambda: dms.distributed_run(
+            spec, x, steps, sweep="resident", overlap=True, **kw),
+            warmup=1, iters=3, min_time_s=0.05)
+        a = np.asarray(dms.distributed_run(spec, x, steps,
+                                           sweep="roundtrip", **kw))
+        b = np.asarray(dms.distributed_run(spec, x, steps,
+                                           sweep="resident", **kw))
+        c = np.asarray(dms.distributed_run(spec, x, steps,
+                                           sweep="resident", overlap=True,
+                                           **kw))
+        _, _, coll_rt = rs.plan_terms(spec, shape, 4, rt_plan, steps=steps)
+        _, _, coll_ov = rs.plan_terms(spec, shape, 4, ovl_plan,
+                                      steps=steps)
+        t_rt = rs.estimate_plan_time(spec, shape, 4, rt_plan, steps=steps)
+        t_ov = rs.estimate_plan_time(spec, shape, 4, ovl_plan, steps=steps)
         row = {"name": f"dist/1d3p/{shape[0]}x{n_dev}dev/steps{steps}",
-               "steps": steps, "roundtrip_us": rt * 1e6,
-               "resident_us": res * 1e6, "speedup": rt / res}
+               "steps": steps, "mode": "interpret",
+               "roundtrip_us": rt * 1e6,
+               "resident_us": res * 1e6, "overlap_us": ovl * 1e6,
+               "speedup": rt / res,
+               "overlap_vs_roundtrip": rt / ovl,
+               "overlap_vs_serialized": res / ovl,
+               "modeled_coll_bytes_ratio": coll_rt / coll_ov,
+               "modeled_time_ratio": t_rt / t_ov,
+               "resident_eq_roundtrip": bool(np.array_equal(a, b)),
+               "overlap_eq_serialized": bool(np.array_equal(b, c))}
         print(f"{row['name']}: shard_roundtrip={rt * 1e6:.0f}us "
-              f"shard_resident={res * 1e6:.0f}us speedup={rt / res:.2f}x")
+              f"shard_resident={res * 1e6:.0f}us "
+              f"overlap={ovl * 1e6:.0f}us "
+              f"overlap_vs_roundtrip={rt / ovl:.2f}x "
+              f"modeled_bytes={coll_rt / coll_ov:.1f}x "
+              f"modeled_time={t_rt / t_ov:.2f}x "
+              f"parity={row['resident_eq_roundtrip']}"
+              f"/{row['overlap_eq_serialized']}")
         rows.append(row)
     # the virtual-halo overhead fix, on record: pallas grid steps per
     # resident k-sweep with the halo-aware kernels vs what the wrapped-
@@ -148,6 +203,8 @@ def _smoke_distributed(steps_list) -> dict:
     print(f"dist sweep grid: halo-aware={grid_info['halo_aware_grid']} "
           f"(virtual-halo variant ran {grid_info['virtual_halo_grid']})")
     return {"n_devices": n_dev, "shards": [n_dev], "results": rows,
+            "parity": all(r["resident_eq_roundtrip"]
+                          and r["overlap_eq_serialized"] for r in rows),
             "sweep_grid": grid_info,
             "minor_axis_vs_axis0": _smoke_minor_axis(steps_list, n_dev)}
 
@@ -227,6 +284,11 @@ def _smoke_ttile(steps_list) -> dict:
             row = {"name": f"{name}/{'x'.join(map(str, shape))}"
                            f"/steps{steps}/ttile{ttile}",
                    "steps": steps, "ttile": ttile,
+                   # per-row engine mode: interpret-mode timings must not
+                   # be mistaken for compiled-TPU evidence when rows are
+                   # aggregated across hosts (the measured-search ttile
+                   # preference is mode-dependent)
+                   "mode": "interpret",
                    "resident_us": res * 1e6, "ttile_us": tt * 1e6,
                    "speedup": res / tt,
                    "modeled_bytes_ratio": b_base / b_tt,
@@ -307,6 +369,78 @@ def _smoke_mxu(steps_list) -> dict:
 
 SERVING_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "results", "bench_kernels_serving.json")
+
+DISTRIBUTED_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "results",
+                                "bench_kernels_distributed.json")
+
+# repo-root running ledger of distributed ratios: every --smoke /
+# --distributed run APPENDS one record, so the perf trajectory across
+# commits is greppable without unpacking CI artifacts
+BENCH_DISTRIBUTED_LEDGER = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_distributed.json")
+
+
+def _append_distributed_ledger(dist: dict) -> None:
+    """Append this run's resident-vs-roundtrip and overlap-vs-serialized
+    ratios to the repo-root ``BENCH_distributed.json`` ledger."""
+    rows = dist.get("results") or []
+    if not rows:
+        return
+    record = {
+        "backend": jax.default_backend(),
+        "n_devices": dist.get("n_devices"),
+        "mode": rows[0].get("mode", "interpret"),
+        "parity": dist.get("parity"),
+        "resident_vs_roundtrip": [
+            {"steps": r["steps"], "ratio": r["speedup"]} for r in rows],
+        "overlap_vs_roundtrip": [
+            {"steps": r["steps"], "ratio": r["overlap_vs_roundtrip"],
+             "modeled_coll_bytes_ratio": r["modeled_coll_bytes_ratio"],
+             "modeled_time_ratio": r["modeled_time_ratio"]}
+            for r in rows],
+        "overlap_vs_serialized": [
+            {"steps": r["steps"], "ratio": r["overlap_vs_serialized"]}
+            for r in rows],
+    }
+    ledger = []
+    if os.path.exists(BENCH_DISTRIBUTED_LEDGER):
+        try:
+            with open(BENCH_DISTRIBUTED_LEDGER) as f:
+                ledger = json.load(f)
+        except (OSError, ValueError):
+            ledger = []
+    if not isinstance(ledger, list):
+        ledger = [ledger]
+    ledger.append(record)
+    with open(BENCH_DISTRIBUTED_LEDGER, "w") as f:
+        json.dump(ledger, f, indent=1)
+    print(f"appended distributed ratios to {BENCH_DISTRIBUTED_LEDGER}")
+
+
+def distributed(out_path: str | None = None) -> dict:
+    """``--distributed``: the distributed section alone, written to its
+    own JSON artifact and appended to the repo-root ledger.  Exit status
+    gates on PARITY only (resident == roundtrip bitwise AND overlapped
+    == serialized bitwise); throughput ratios are recorded, not gated —
+    interpret-scale kernel time dominates a CPU host, so the modeled
+    collective-bytes / modeled-time ratios carry the claim."""
+    # deeper runs than --smoke: the roundtrip engine pays its per-
+    # exchange transpose/untranspose round-trips linearly in steps, so
+    # the measured overlap-vs-roundtrip ratio needs depth to show even
+    # at interpret scale (the modeled ratios carry it at any depth)
+    payload = {"bench": "distributed_resident_overlap",
+               "backend": jax.default_backend(),
+               "n_devices": jax.device_count(),
+               "distributed": _smoke_distributed((8, 16, 32, 64))}
+    out_path = out_path or DISTRIBUTED_PATH
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path}")
+    _append_distributed_ledger(payload["distributed"])
+    return payload
 
 MXU_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "results", "bench_kernels_mxu.json")
@@ -473,13 +607,17 @@ def smoke(steps_list=(8, 16, 32), out_path: str | None = None) -> dict:
                "results": results,
                "ttile_vs_resident": _smoke_ttile(steps_list),
                "mxu_vs_pallas": _smoke_mxu(steps_list),
-               "distributed": _smoke_distributed(steps_list),
+               # + a steps=64 row: the overlap-vs-roundtrip acceptance
+               # reading needs depth (the roundtrip engine pays its
+               # per-exchange re-layout linearly in steps)
+               "distributed": _smoke_distributed(tuple(steps_list) + (64,)),
                "serving": _smoke_serving()}
     out_path = out_path or SMOKE_PATH
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {out_path}")
+    _append_distributed_ledger(payload["distributed"])
     return payload
 
 
@@ -495,7 +633,18 @@ def main() -> None:
                     help="mxu-vs-pallas bench → JSON; exits nonzero "
                          "unless both engines match the f64 oracle at "
                          "dtype tolerance")
+    ap.add_argument("--distributed", action="store_true",
+                    help="distributed resident/overlap bench → JSON; "
+                         "exits nonzero unless resident == roundtrip "
+                         "and overlapped == serialized bitwise")
     args = ap.parse_args()
+    if args.distributed:
+        payload = distributed()
+        if not payload["distributed"]["parity"]:
+            raise SystemExit(
+                "distributed parity FAILED: resident != roundtrip or "
+                "overlapped != serialized schedule (bitwise)")
+        return
     if args.serving:
         payload = serving()
         if not payload["serving"]["bit_identical"]:

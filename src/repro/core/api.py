@@ -99,6 +99,10 @@ class StencilPlan:
     decomp: tuple[int, ...] | None = None   # distributed: shards per axis
     ttile: int = 1                 # temporal tile: k-blocks per HBM/ghost
     #                                round-trip (resident engines only)
+    overlap: bool = False          # distributed resident: hide the halo
+    #                                ring behind interior compute
+    #                                (interior/boundary split; bitwise-
+    #                                identical to the serialized exchange)
 
 
 class StencilProblem:
@@ -163,6 +167,14 @@ class StencilProblem:
                 "(backend='pallas' with sweep='resident', backend='mxu', "
                 "or backend='distributed'); the legacy paths round-trip "
                 "every sweep, so there is nothing to temporally tile")
+        if plan.overlap and not (plan.backend == "distributed"
+                                 and plan.scheme == "transpose"
+                                 and plan.sweep == "resident"):
+            raise ValueError(
+                "overlap=True requires the distributed shard-resident "
+                "pallas engine (backend='distributed', scheme='transpose', "
+                "sweep='resident'); other paths have no halo ring to hide "
+                "behind interior compute")
         if plan.backend == "mxu":
             # banded-operator engine: every depth-d chunk is ONE
             # dot_general against A^d (core/matrixize.py).  With a
@@ -213,7 +225,7 @@ class StencilProblem:
                 self.spec, x, steps, k=plan.k, engine=engine,
                 shards=plan.decomp, sweep=plan.sweep,
                 remainder=plan.remainder, vl=vl, m=plan.m, t0=plan.t0,
-                ttile=plan.ttile)
+                ttile=plan.ttile, overlap=plan.overlap)
         if plan.tiling == "tessellate":
             h = plan.height or plan.k
             tile = plan.tile or self._default_tile(h)

@@ -545,7 +545,8 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
                            m: int = 8, t0: int | None = None,
                            n_devices: int | None = None, *,
                            ttile: int = 1, steps: int | None = None,
-                           remainder: str = "fused") -> bool:
+                           remainder: str = "fused",
+                           overlap: bool = False) -> bool:
     """Backend legality gate for distributed (shard_map halo) plans.
 
     * device availability: ``prod(decomp) == n_devices >= 2`` — the
@@ -572,6 +573,11 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
       The ``sweep`` axis (resident | roundtrip) is validated here and
       interchangeable wherever the engine is legal (both exchange the
       same valid ghost cells).
+    * ``overlap=True`` (interior/boundary halo overlap) requires the
+      pallas RESIDENT engine, a decomposed pipelined axis (n-D), and a
+      local shard deep enough to host the boundary sub-sweeps — the
+      feasibility bound is :func:`repro.distributed.multistep._overlap_bounds`
+      evaluated at the schedule's deepest chunk.
     """
     if n_devices is None:
         n_devices = jax.device_count()
@@ -590,6 +596,8 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
         return False
     if ttile > 1 and sweep != "resident":
         return False
+    if overlap and (engine != "pallas" or sweep != "resident"):
+        return False
     if engine == "jnp":
         return True
     if engine != "pallas" or sweep not in ("resident", "roundtrip"):
@@ -599,6 +607,18 @@ def distributed_plan_legal(spec: stencils.StencilSpec,
         return False
     if spec.ndim > 1 and (t0 is None or t0 < r or local[0] % t0):
         return False
+    if overlap:
+        # interior/boundary overlap rides the axis-0 ring (n-D) or the
+        # minor lane-carry ring (1-D) of the RESIDENT engine only, and
+        # its boundary sub-sweeps span two whole-tile ghost extents of
+        # own data (multistep._overlap_bounds)
+        if spec.ndim > 1 and decomp[0] < 2:
+            return False
+        from repro.distributed.multistep import _overlap_bounds
+        need, have = _overlap_bounds(spec, local, kmax, vl * m,
+                                     t0 if t0 else 1)
+        if need > have:
+            return False
     return True
 
 
@@ -887,8 +907,20 @@ def _distributed_candidates(spec: stencils.StencilSpec,
                                 spec, shape, decomp, k, "pallas", swp,
                                 vl, m, t0, n_devices, steps=steps,
                                 remainder=p.remainder)]
-                        cands += _ttile_fanout(spec, shape, variants,
-                                               steps)
+                        pool = _ttile_fanout(spec, shape, variants,
+                                             steps)
+                        if swp == "resident":
+                            # overlapped twin of every resident variant
+                            # whose shard can host the boundary region
+                            pool += [
+                                dataclasses.replace(p, overlap=True)
+                                for p in pool
+                                if distributed_plan_legal(
+                                    spec, shape, decomp, k, "pallas",
+                                    swp, vl, m, t0, n_devices,
+                                    steps=steps, remainder=p.remainder,
+                                    ttile=p.ttile, overlap=True)]
+                        cands += pool
     return cands
 
 

@@ -3,18 +3,31 @@
 The global grid is decomposed along its leading spatial axes over named mesh
 axes; each device holds a contiguous subdomain.  One halo exchange ships a
 ring of width w to both neighbors along every decomposed axis via
-``lax.ppermute`` (two permutes per axis; the second exchange operates on the
-already-extended array so corner/edge ghosts are captured without extra
-diagonal messages — the standard two-phase trick).
+:func:`ppermute_pair` — the tail strip rides the forward permutation and the
+head strip the backward one, issued as ONE paired bidirectional exchange per
+axis (the two sends touch independent data and independent link directions,
+so they fly concurrently; per-exchange ICI latency is paid once per axis,
+and the roofline charges one paired message per decomposed axis to match).
+A later axis's exchange operates on the already-extended array so
+corner/edge ghosts are captured without extra diagonal messages — the
+standard multi-phase trick.
 
 The same primitives serve the shard-RESIDENT layout path, one per layout
 regime of the decomposed axis:
 
-  * **block/tile axes** (1-D block axis, n-D pipelined axis 0, n-D mid
-    axes): the layout transform leaves these axes whole, so
-    :func:`exchange_blocks` / :func:`exchange_axis` ship ghost rings as
-    contiguous slices — whole (vl·m)-element blocks, whole pipeline
-    tiles, or raw rows — without ever leaving the layout;
+  * **the n-D pipelined axis 0**: rows are contiguous leading-axis
+    slices of the layout, but the halo-aware pipeline kernels consume
+    ghost extents in whole ``t0``-row tiles — so :func:`exchange_rows`
+    ships exactly the ``width = k·r`` boundary rows per side and
+    :func:`scatter_rows` lands them in zero-filled whole-tile ghost
+    extents flush against the shard (the axis-0 rendering of the minor
+    codec's shipped-exact / computed-whole split: zeros sit >= width
+    rows from the shard, so a k-step sweep's edge corruption dies in the
+    cropped ghost tiles);
+  * **mid axes / natural-layout axes**: the layout transform leaves
+    these axes whole, so :func:`exchange_blocks` / :func:`exchange_axis`
+    ship ghost rings as contiguous slices — raw rows or whole blocks —
+    without ever leaving the layout;
   * **the minor axis** (the axis folded INTO the (m, vl) lane layout):
     ghost cells straddle vector-lane boundaries — the ``width`` boundary
     elements occupy the trailing rows of the trailing lanes of the edge
@@ -43,23 +56,36 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+def ppermute_pair(tail: jax.Array, head: jax.Array, axis_name: str,
+                  n_shards: int) -> tuple[jax.Array, jax.Array]:
+    """ONE paired bidirectional ring exchange: ship the ``tail`` strip
+    forward (it becomes the right neighbor's left ghost) and the ``head``
+    strip backward (the left neighbor's right ghost), gathered up front
+    and issued back-to-back so the two sends — independent data on
+    independent link directions — lower into one concurrent bidirectional
+    exchange rather than two serialized ones.  Every exchange path below
+    funnels through here, so per-exchange ICI latency is paid once per
+    axis (``roofline.stencil.distributed_exchanges_per_step`` charges one
+    paired message per decomposed axis to match).  ``n_shards == 1`` is
+    the local periodic wrap: each strip comes back to its own shard."""
+    if n_shards == 1:
+        return tail, head
+    fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+    left_ghost = lax.ppermute(tail, axis_name, fwd)    # from left neighbor
+    right_ghost = lax.ppermute(head, axis_name, bwd)   # from right neighbor
+    return left_ghost, right_ghost
+
+
 def exchange_axis(xl: jax.Array, width: int, axis: int, axis_name: str,
                   n_shards: int) -> jax.Array:
     """Extend the local block with ``width`` ghost cells on both sides of
-    ``axis``, fetched from the ring neighbors along ``axis_name``."""
-    if n_shards == 1:
-        # single shard: periodic wrap is local
-        left = lax.slice_in_dim(xl, xl.shape[axis] - width, xl.shape[axis],
-                                axis=axis)
-        right = lax.slice_in_dim(xl, 0, width, axis=axis)
-        return jnp.concatenate([left, xl, right], axis=axis)
-    fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
-    bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+    ``axis``, fetched from the ring neighbors along ``axis_name`` in one
+    paired bidirectional exchange."""
     tail = lax.slice_in_dim(xl, xl.shape[axis] - width, xl.shape[axis],
                             axis=axis)
     head = lax.slice_in_dim(xl, 0, width, axis=axis)
-    left_ghost = lax.ppermute(tail, axis_name, fwd)    # from left neighbor
-    right_ghost = lax.ppermute(head, axis_name, bwd)   # from right neighbor
+    left_ghost, right_ghost = ppermute_pair(tail, head, axis_name, n_shards)
     return jnp.concatenate([left_ghost, xl, right_ghost], axis=axis)
 
 
@@ -75,6 +101,55 @@ def exchange_blocks(t: jax.Array, nblocks: int, axis_name: str,
     bit-identical to exchanging the natural-layout ghost ring and
     re-laying it out — with zero transposes."""
     return exchange_axis(t, nblocks, 0, axis_name, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# pipelined-axis (axis 0) exact-strip ghost codec
+# ---------------------------------------------------------------------------
+
+def scatter_rows(strip: jax.Array, pad: int, side: str) -> jax.Array:
+    """Land a ppermuted axis-0 ghost strip of ``width`` rows in a
+    zero-filled ``pad``-row ghost extent flush against the shard —
+    ``side="left"`` ghosts (a left neighbor's tail) occupy the LAST
+    ``width`` rows of the extent, ``"right"`` (a right neighbor's head)
+    the first.  The axis-0 rendering of :func:`scatter_minor_strip`: the
+    halo-aware pipeline kernels consume whole ``t0``-row ghost tiles
+    (``pad`` is a tile multiple), but only ``width = k·r`` rows per side
+    are real — the zero rows sit >= ``width`` rows from the shard, so a
+    k-step sweep's edge corruption never crosses the valid strip into
+    retained rows; it dies inside the cropped ghost tiles."""
+    width = strip.shape[0]
+    if pad < width:
+        raise ValueError(f"ghost pad {pad} rows cannot hold the "
+                         f"{width}-row strip")
+    if pad == width:
+        return strip
+    fill = jnp.zeros((pad - width,) + strip.shape[1:], strip.dtype)
+    if side == "left":
+        return jnp.concatenate([fill, strip], axis=0)
+    if side == "right":
+        return jnp.concatenate([strip, fill], axis=0)
+    raise ValueError(f"unknown side {side!r}")
+
+
+def exchange_rows(t: jax.Array, width: int, pad: int, axis_name: str,
+                  n_shards: int) -> jax.Array:
+    """Halo-extend a layout-RESIDENT shard along the pipelined axis 0 by
+    ``pad`` rows per side, shipping exactly the ``width`` boundary rows
+    each way (one paired bidirectional ``ppermute``) and landing them in
+    zero-filled whole-tile ghost extents via :func:`scatter_rows`.  Rows
+    are contiguous leading-axis slices of the (n0, *mid, nb, m, vl)
+    layout, so gather and scatter are static slices/concats — no
+    de-transpose.  Versus shipping whole ``pad``-row tiles
+    (:func:`exchange_blocks`) this cuts axis-0 ring traffic
+    ``pad/width`` = t0·⌈k·r/t0⌉/(k·r) ×."""
+    n0 = t.shape[0]
+    tail = lax.slice_in_dim(t, n0 - width, n0, axis=0)
+    head = lax.slice_in_dim(t, 0, width, axis=0)
+    left_strip, right_strip = ppermute_pair(tail, head, axis_name, n_shards)
+    left = scatter_rows(left_strip, pad, "left")
+    right = scatter_rows(right_strip, pad, "right")
+    return jnp.concatenate([left, t, right], axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -155,16 +230,22 @@ def exchange_minor(t: jax.Array, width: int, axis_name: str,
     nb, m, vl = t.shape[-3:]
     tail = gather_minor_strip(t, width, "tail")
     head = gather_minor_strip(t, width, "head")
-    if n_shards == 1:
-        left_strip, right_strip = tail, head     # periodic wrap is local
-    else:
-        fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
-        bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
-        left_strip = lax.ppermute(tail, axis_name, fwd)
-        right_strip = lax.ppermute(head, axis_name, bwd)
+    left_strip, right_strip = ppermute_pair(tail, head, axis_name, n_shards)
     left = scatter_minor_strip(left_strip, m, vl, "left")
     right = scatter_minor_strip(right_strip, m, vl, "right")
     return jnp.concatenate([left, t, right], axis=-3)
+
+
+def set_minor_strip(t: jax.Array, strip: jax.Array, side: str) -> jax.Array:
+    """Overwrite the ``width`` boundary elements of the resident minor
+    axis with ``strip`` — the stitch half of the overlapped sweep: the
+    interior result's edge cells (computed under a wrapped — wrong —
+    neighborhood) are replaced by the boundary sub-sweep's values, at
+    exactly the coordinates :func:`gather_minor_strip` reads."""
+    nb, m, vl = t.shape[-3:]
+    width = strip.shape[-1]
+    b, s, j = _minor_strip_coords(nb * vl * m, width, m, vl, side)
+    return t.at[..., b, s, j].set(strip)
 
 
 def crop_minor_blocks(t: jax.Array, gblocks: int) -> jax.Array:

@@ -24,23 +24,42 @@ Local engines (engine= below):
       - ``resident`` (the fast path): each shard transposes into the
         (nb, m, vl) layout ONCE per run.  Halos are exchanged *in
         layout*, per layout regime of the decomposed axis: the n-D
-        pipelined axis ships whole t0-row tiles and mid axes raw rows
-        (``halo.exchange_blocks`` / ``exchange_axis`` — contiguous
-        slices of the layout), while the minor axis — the axis folded
-        into the (m, vl) lane layout, where ghost cells straddle
-        vector-lane boundaries (1-D decompositions land here too) —
-        runs the lane-carry ghost codec ``halo.exchange_minor``:
-        gather the k·r boundary elements into a contiguous strip,
-        ppermute exactly that strip, scatter it into ghost blocks flush
-        against the shard.  Each k-step sweep then runs the halo-aware
-        kernels ``stencil{1d,_nd}_sweep_halo`` straight on the
-        ghost-extended resident array — no virtual 2p wrap halo (the
-        ghost blocks ARE the periodicity), no pad copy — falling back
-        to the wrapped-grid ``stencil_nd_sweep_periodic`` only when
-        axis 0 itself is un-decomposed and must wrap globally.  Ghost
+        pipelined axis ships exactly the k·r boundary rows per side and
+        lands them in zero-filled whole-t0-tile ghost extents
+        (``halo.exchange_rows`` — the axis-0 exact-strip codec; a
+        t0·⌈k·r/t0⌉/(k·r)× traffic cut over shipping whole tiles), mid
+        axes ship raw rows (``halo.exchange_axis`` — contiguous slices
+        of the layout), while the minor axis — the axis folded into the
+        (m, vl) lane layout, where ghost cells straddle vector-lane
+        boundaries (1-D decompositions land here too) — runs the
+        lane-carry ghost codec ``halo.exchange_minor``: gather the k·r
+        boundary elements into a contiguous strip, ppermute exactly
+        that strip, scatter it into ghost blocks flush against the
+        shard.  Each k-step sweep then runs the halo-aware kernels
+        ``stencil{1d,_nd}_sweep_halo`` straight on the ghost-extended
+        resident array — no virtual 2p wrap halo (the ghost blocks ARE
+        the periodicity), no pad copy — falling back to the
+        wrapped-grid ``stencil_nd_sweep_periodic`` only when axis 0
+        itself is un-decomposed and must wrap globally.  Ghost
         blocks/rows are cropped after the sweep.  One transpose in +
         one transpose out per RUN — zero per-exchange transpose/pad
         round-trips (jaxpr-pinned in tests/_distributed_check.py).
+
+        With ``overlap=True`` the resident sweep splits each chunk into
+        interior and boundary work to hide the ring latency: the ghost
+        strips are gathered and the paired ``ppermute`` issued FIRST,
+        the wrapped-grid periodic kernel then advances the whole shard
+        (its edge cells see wrapped — wrong — neighbors and are
+        replaced), and two small boundary sub-sweeps consume the
+        arrived strips while the interior result is already done — the
+        collective and the interior kernel have no data dependence, so
+        the scheduler runs them concurrently.  Outputs are bitwise
+        identical to the serialized path: every retained cell's
+        dependency cone sees the same values through the same kernel
+        arithmetic.  Overlap rides the axis-0 ring for n-D shards
+        (mid/minor ghosts are exchanged up front — the interior reads
+        them too) and the minor lane-carry ring for 1-D shards; other
+        topologies normalize ``overlap`` away.
       - ``roundtrip`` (legacy): every sweep exchanges the halo in the
         natural layout (whole blocks/tiles on block axes, whole-block
         widths on the minor axis so the extended extent stays layout-
@@ -71,6 +90,7 @@ import warnings
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding
@@ -161,12 +181,40 @@ _programs: dict[tuple, object] = {}
 _PROGRAMS_MAX = 64
 
 
+def overlap_supported(ndim: int, decomp: Sequence[str | None],
+                      engine: str = "pallas",
+                      sweep: str = "resident") -> bool:
+    """Whether interior/boundary overlap is a live axis for this
+    configuration: pallas resident only, riding the minor lane-carry
+    ring for 1-D shards or the pipelined axis-0 ring for n-D shards
+    (axis 0 must be decomposed).  Everywhere else ``overlap`` is inert
+    and normalized away so equivalent programs share a cache entry."""
+    if engine != "pallas" or sweep != "resident":
+        return False
+    if ndim == 1:
+        return decomp[0] is not None
+    return decomp[0] is not None
+
+
+def _overlap_bounds(spec: StencilSpec, local_shape: Sequence[int],
+                    dmax: int, blk: int, t0: int) -> tuple[int, int]:
+    """(need, have) along the overlapped ring: each boundary sub-sweep
+    spans two whole-tile ghost extents of own data, so the shard must
+    hold ``2·⌈d·r/t0⌉·t0`` rows (n-D) / ``⌈2·d·r/blk⌉`` blocks of
+    elements (1-D) at the deepest chunk depth ``dmax``."""
+    if spec.ndim == 1:
+        need = -(-2 * dmax * spec.r // blk) * blk
+        return need, int(local_shape[-1])
+    w0 = -(-dmax * spec.r // t0) * t0
+    return 2 * w0, int(local_shape[0])
+
+
 def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
              steps: int, k: int = 2, engine: str = "jnp",
              sweep: str = "resident", remainder: str = "fused",
              vl: int | None = None, m: int | None = None,
              t0: int | None = None, interpret: bool | None = None,
-             ttile: int = 1):
+             ttile: int = 1, overlap: bool = False):
     """ONE jitted shard_map program advancing the global array ``steps``
     periodic steps in k-step halo-exchange sweeps (plus the ``steps % k``
     remainder under ``remainder``).  ``ttile`` regroups the main k-blocks
@@ -197,8 +245,10 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
         t0 = None                # jnp-level (no pallas_call) — t0, sweep
         sweep = "resident"       # and interpret are inert
         interpret = False
+    overlap = bool(overlap) and overlap_supported(spec.ndim, decomp,
+                                                  engine, sweep)
     key = (spec, mesh, decomp, engine, sweep, vl, m, t0, interpret,
-           tuple(chunks))
+           tuple(chunks), overlap)
     with _lock:
         prog = _programs.get(key)
     if prog is not None:
@@ -260,15 +310,116 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
         def run(xl):
             vl_, m_, t0_ = _validate(xl.shape)
             blk = vl_ * m_
+            if overlap:
+                need, have = _overlap_bounds(spec, xl.shape, kmax, blk,
+                                             t0_)
+                if need > have:
+                    raise ValueError(
+                        f"overlapped schedule needs a {need}-deep "
+                        "boundary region but the local extent is only "
+                        f"{have} under decomp {decomp} (shard too small "
+                        "for interior/boundary overlap)")
+
+            if sweep == "resident" and overlap:
+                def sweep_fn(t, kk):
+                    w = kk * r
+                    if nd == 1:
+                        # ring FIRST: exact w-element lane-carry strips
+                        # are in flight while the interior computes
+                        tail = halo.gather_minor_strip(t, w, "tail")
+                        head = halo.gather_minor_strip(t, w, "head")
+                        left_s, right_s = halo.ppermute_pair(
+                            tail, head, decomp[-1], nshards[-1])
+                        # interior: wrapped-grid periodic sweep on the
+                        # UN-extended shard — no dependence on the ring;
+                        # the w edge elements see wrapped (wrong)
+                        # neighbors and are overwritten below
+                        interior = sk.stencil1d_sweep_periodic(
+                            spec, t, kk, interpret=interpret)
+                        # boundary: two small halo sub-sweeps over
+                        # [ghost blocks | ⌈2w/blk⌉ own edge blocks]
+                        gb = sk.sweep_halo_blocks(r, kk, blk)
+                        ob = sk.sweep_halo_blocks(r, 2 * kk, blk)
+                        nb_l = t.shape[-3]
+                        left = halo.scatter_minor_strip(left_s, m_, vl_,
+                                                        "left")
+                        right = halo.scatter_minor_strip(right_s, m_, vl_,
+                                                         "right")
+                        head_b = lax.slice_in_dim(t, 0, ob, axis=-3)
+                        tail_b = lax.slice_in_dim(t, nb_l - ob, nb_l,
+                                                  axis=-3)
+                        top = sk.stencil1d_sweep_halo(
+                            spec, jnp.concatenate([left, head_b], axis=-3),
+                            kk, w, interpret=interpret)
+                        bot = sk.stencil1d_sweep_halo(
+                            spec, jnp.concatenate([tail_b, right],
+                                                  axis=-3),
+                            kk, w, interpret=interpret)
+                        top_vals = halo.gather_minor_strip(
+                            lax.slice_in_dim(top, gb, gb + ob, axis=-3),
+                            w, "head")
+                        bot_vals = halo.gather_minor_strip(
+                            lax.slice_in_dim(bot, 0, ob, axis=-3),
+                            w, "tail")
+                        out = halo.set_minor_strip(interior, top_vals,
+                                                   "head")
+                        return halo.set_minor_strip(out, bot_vals, "tail")
+                    # n-D: mid + minor ghosts up front (the interior
+                    # reads them too), then the axis-0 ring overlapped
+                    w0 = sk.sweep_halo_blocks(r, kk, t0_) * t0_
+                    gb = 0
+                    for ax in range(1, nd - 1):
+                        if nshards[ax] > 1:
+                            t = halo.exchange_axis(t, w, ax, decomp[ax],
+                                                   nshards[ax])
+                    if nshards[-1] > 1:
+                        gb = sk.sweep_halo_blocks(r, kk, blk)
+                        t = halo.exchange_minor(t, w, decomp[-1],
+                                                nshards[-1])
+                    n0l = t.shape[0]
+                    tail = lax.slice_in_dim(t, n0l - w, n0l, axis=0)
+                    head = lax.slice_in_dim(t, 0, w, axis=0)
+                    left_s, right_s = halo.ppermute_pair(
+                        tail, head, decomp[0], nshards[0])
+                    interior = sk.stencil_nd_sweep_periodic(
+                        spec, t, kk, t0_, interpret=interpret)
+                    left = halo.scatter_rows(left_s, w0, "left")
+                    right = halo.scatter_rows(right_s, w0, "right")
+                    head_r = lax.slice_in_dim(t, 0, 2 * w0, axis=0)
+                    tail_r = lax.slice_in_dim(t, n0l - 2 * w0, n0l,
+                                              axis=0)
+                    top = sk.stencil_nd_sweep_halo(
+                        spec, jnp.concatenate([left, head_r], axis=0),
+                        kk, t0_, w0, interpret=interpret)
+                    bot = sk.stencil_nd_sweep_halo(
+                        spec, jnp.concatenate([tail_r, right], axis=0),
+                        kk, t0_, w0, interpret=interpret)
+                    out = jnp.concatenate(
+                        [lax.slice_in_dim(top, w0, 2 * w0, axis=0),
+                         lax.slice_in_dim(interior, w0, n0l - w0,
+                                          axis=0),
+                         lax.slice_in_dim(bot, w0, 2 * w0, axis=0)],
+                        axis=0)
+                    if gb:
+                        out = halo.crop_minor_blocks(out, gb)
+                    for ax in range(nd - 2, 0, -1):
+                        if nshards[ax] > 1:
+                            out = lax.slice_in_dim(
+                                out, w, out.shape[ax] - w, axis=ax)
+                    return out
+                t = layouts.to_transpose_layout(xl, vl_, m_)
+                t = _loop(t, sweep_fn)
+                return layouts.from_transpose_layout(t, vl_, m_)
 
             if sweep == "resident":
                 def sweep_fn(t, kk):
                     w = kk * r
                     w0 = gb = 0
-                    if nd > 1 and nshards[0] > 1:      # whole t0-row tiles
+                    if nd > 1 and nshards[0] > 1:
+                        # exact w-row strips into whole-tile ghost pads
                         w0 = sk.sweep_halo_blocks(r, kk, t0_) * t0_
-                        t = halo.exchange_blocks(t, w0, decomp[0],
-                                                 nshards[0])
+                        t = halo.exchange_rows(t, w, w0, decomp[0],
+                                               nshards[0])
                     for ax in range(1, nd - 1):        # mid axes: raw rows
                         if nshards[ax] > 1:
                             t = halo.exchange_axis(t, w, ax, decomp[ax],
@@ -278,8 +429,14 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
                         t = halo.exchange_minor(t, w, decomp[-1],
                                                 nshards[-1])
                     if nd == 1:
-                        out = sk.stencil1d_sweep_halo(
-                            spec, t, kk, w, interpret=interpret)
+                        if nshards[-1] > 1:
+                            out = sk.stencil1d_sweep_halo(
+                                spec, t, kk, w, interpret=interpret)
+                        else:
+                            # minor axis un-decomposed (single shard):
+                            # it must wrap globally, not mask edges
+                            out = sk.stencil1d_sweep_periodic(
+                                spec, t, kk, interpret=interpret)
                     elif nshards[0] > 1:
                         out = sk.stencil_nd_sweep_halo(
                             spec, t, kk, t0_, w0, interpret=interpret)
@@ -322,9 +479,14 @@ def make_run(spec: StencilSpec, mesh: Mesh, decomp: Sequence[str | None],
                                              nshards[-1])
                 t = layouts.to_transpose_layout(ext, vl_, m_)
                 if nd == 1:
-                    out = sk.stencil1d_multistep(spec, t, kk,
-                                                 interpret=interpret,
-                                                 edge_mask=False)
+                    if nshards[-1] > 1:
+                        out = sk.stencil1d_multistep(spec, t, kk,
+                                                     interpret=interpret,
+                                                     edge_mask=False)
+                    else:
+                        # single shard: the minor axis wraps globally
+                        out = sk.stencil1d_sweep_periodic(
+                            spec, t, kk, interpret=interpret)
                 elif nshards[0] > 1:
                     out = sk.stencil_nd_multistep(spec, t, kk, t0_,
                                                   interpret=interpret,
@@ -441,7 +603,7 @@ def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
                     vl: int | None = None, m: int | None = None,
                     t0: int | None = None,
                     interpret: bool | None = None,
-                    ttile: int = 1) -> jax.Array:
+                    ttile: int = 1, overlap: bool = False) -> jax.Array:
     """Advance ``x`` by ``steps`` periodic steps on a device mesh.
 
     ``shards`` (the plan's ``decomp`` axis) names the per-spatial-axis
@@ -500,8 +662,30 @@ def distributed_run(spec: StencilSpec, x: jax.Array, steps: int, k: int = 2,
             # drop the temporal tile so make_run's pinned error names the
             # irreducible k·r halo, not the (already-abandoned) ttile·k
             ttile = 1
+    if overlap and overlap_supported(spec.ndim, tuple(decomp), engine,
+                                     sweep):
+        # the boundary sub-sweeps span 2 whole-tile ghost extents — a
+        # shard too shallow for that degrades to the serialized exchange
+        # with a warning instead of raising inside the program build
+        local = [n // s for n, s in zip(x.shape, nshards)]
+        try:
+            from repro.kernels.ops import pick_tile
+            vl_, m_, t0_ = pick_tile(spec, local, vl, m, t0)
+            chunks, _ = sweep_schedule(k, steps, remainder, ttile)
+            dmax = max(d for d, _ in chunks)
+            need, have = _overlap_bounds(spec, local, dmax, vl_ * m_, t0_)
+        except ValueError:
+            need = have = 0                 # make_run raises its own error
+        if need > have:
+            warnings.warn(
+                f"overlapped schedule (k={k}, ttile={ttile}, "
+                f"steps={steps}) needs a {need}-deep boundary region but "
+                f"the local extent is only {have} under decomp "
+                f"{tuple(decomp)}; running overlap=False instead",
+                stacklevel=2)
+            overlap = False
     pspec = halo.partition_spec(decomp, spec.ndim)
     x = jax.device_put(x, NamedSharding(mesh, pspec))
     prog = make_run(spec, mesh, decomp, steps, k, engine, sweep, remainder,
-                    vl, m, t0, interpret, ttile)
+                    vl, m, t0, interpret, ttile, overlap)
     return prog(x)

@@ -33,18 +33,25 @@ step a plan costs:
                 BYTES per step are flat in k — a k-wide ring ships k× the
                 bytes k× less often — so what trapezoid blocking actually
                 buys is the per-message LATENCY: the exchange count per
-                step falls as 1/k, and each message is charged
-                :data:`ICI_LATENCY` on top of its bandwidth time (the
+                step falls as 1/k, and each PAIRED bidirectional
+                exchange (both directions issued back-to-back —
+                ``halo.ppermute_pair``) is charged :data:`ICI_LATENCY`
+                once on top of its bandwidth time (the
                 communication-avoiding claim, made visible to the
                 ranking).  Ghost widths are engine-aware: jnp ships and
-                computes exact k·r rings; the pallas engines ship whole
-                t0-row tiles on the pipelined axis, and on the minor
-                axis ship the lane-carry STRIP of exactly k·r elements
-                (the ghost codec) while computing on whole (vl·m) ghost
-                blocks — the strip is padded to lane-block granularity
-                on arrival.  Distributed compute/memory terms are
+                computes exact k·r rings; the pallas RESIDENT engine
+                ships exact k·r strips on EVERY axis (the axis-0
+                exact-strip codec ``halo.exchange_rows`` and the minor
+                lane-carry codec) while computing on whole tile/block
+                ghost extents — strips are zero-padded to granule width
+                on arrival; the ROUNDTRIP engine ships whole-granule
+                rings on both.  Distributed compute/memory terms are
                 per-device (points / #shards) with the redundant-halo
                 factor ``(n_local + 2·w)/n_local`` per decomposed axis.
+                A serialized schedule adds the wire time to compute
+                (sum); an ``overlap=True`` plan hides it behind the
+                interior sub-sweep — ``max(interior, wire)`` plus the
+                boundary fraction (:func:`_overlap_boundary_fraction`).
 
 :func:`plan_terms` exposes the raw (flops, hbm_bytes, collective_bytes)
 per step per device; :func:`estimate_plan_time` divides them by device
@@ -127,10 +134,13 @@ def pallas_extra_bytes_per_step(pts: float, itemsize: int, sweep: str,
 
 
 def distributed_exchanges_per_step(plan, steps: int | None = None) -> float:
-    """ppermute messages per grid step: 2 (one per direction) per
-    decomposed axis, once per k-block sweep.  This COUNT — not the bytes,
-    which are flat in k — is what trapezoid blocking cuts; the estimate
-    charges each message :data:`ICI_LATENCY`.  Derived from the same
+    """ppermute messages per grid step: ONE paired bidirectional
+    exchange per decomposed axis, once per k-block sweep (both
+    directions are issued back-to-back on independent link directions —
+    ``halo.ppermute_pair`` — so the per-exchange ICI latency is charged
+    once, not per direction).  This COUNT — not the bytes, which are
+    flat in k — is what trapezoid blocking cuts; the estimate charges
+    each paired message :data:`ICI_LATENCY`.  Derived from the same
     :func:`repro.core.api.sweep_schedule` chunks as every other
     distributed term."""
     shards = tuple(getattr(plan, "decomp", None) or ())
@@ -141,7 +151,7 @@ def distributed_exchanges_per_step(plan, steps: int | None = None) -> float:
     chunks, total = sweep_schedule(max(plan.k, 1), steps,
                                    getattr(plan, "remainder", "fused"),
                                    getattr(plan, "ttile", 1))
-    return 2.0 * ndec * sum(n for _, n in chunks) / total
+    return 1.0 * ndec * sum(n for _, n in chunks) / total
 
 
 def _distributed_terms(spec, shape, itemsize, plan,
@@ -180,21 +190,21 @@ def _distributed_terms(spec, shape, itemsize, plan,
     def _ghost_widths(kk: int, ax: int) -> tuple[float, float]:
         """(shipped, computed) ghost width along decomposed axis ``ax``.
 
-        jnp ships and computes exact kk·r rings.  The pallas engines ship
-        exact widths everywhere EXCEPT the pipelined axis (whole t0-row
-        tiles — BlockSpec granularity): on the minor axis the RESIDENT
-        engine's lane-carry codec ships the STRIP of exactly kk·r
-        elements while *computing* on whole (vl·m)-element ghost blocks
-        (the scatter pads the strip to lane-block granularity); the
-        ROUNDTRIP engine exchanges the minor axis in natural layout at
-        whole-block widths (the per-sweep re-layout needs a divisible
-        extent), so it ships the full vl·m-granular ring too."""
+        jnp ships and computes exact kk·r rings.  The pallas RESIDENT
+        engine ships exact kk·r widths on EVERY axis while *computing*
+        on whole-granule ghost extents: the pipelined axis ships exact
+        row strips (``halo.exchange_rows``) scattered into zero-filled
+        whole-t0-tile extents, and the minor axis ships the lane-carry
+        STRIP scattered into whole (vl·m)-element ghost blocks.  The
+        ROUNDTRIP engine exchanges in natural layout at whole-granule
+        widths on both (the per-sweep re-layout needs a divisible
+        extent), so it ships the full tile/block-granular ring."""
         w = float(kk * r)
         if not engine_pallas:
             return w, w
         if ndim > 1 and ax == 0:
             wt = float(-(-(kk * r) // t0) * t0)
-            return wt, wt
+            return (w if resident_sweep else wt), wt
         if ax == ndim - 1:
             wb = float(-(-(kk * r) // blk) * blk)
             return (w if resident_sweep else wb), wb
@@ -375,6 +385,32 @@ def plan_terms(spec, shape: Sequence[int], itemsize: int, plan,
     return flops, mem_bytes, 0.0
 
 
+def _overlap_boundary_fraction(spec, shape: Sequence[int], plan) -> float:
+    """Fraction of an overlapped shard's compute that CANNOT hide behind
+    the in-flight ring exchange: the boundary sub-sweeps that consume
+    the arrived ghost strips.  1-D: two sub-sweeps over (gb ghost + ob
+    own) lane blocks each; n-D: two 3·w0-row sub-arrays along the
+    pipelined axis.  Evaluated at the schedule's MAIN chunk depth
+    (k·ttile) — the remainder chunks are shallower, so this slightly
+    overcharges the tail, keeping the overlap ranking conservative."""
+    shards = tuple(getattr(plan, "decomp", None) or ())
+    if not shards:
+        return 1.0
+    local = [n // s for n, s in zip(shape, shards)]
+    r = spec.r
+    kk = max(plan.k, 1) * max(getattr(plan, "ttile", 1) or 1, 1)
+    if spec.ndim == 1:
+        blk = (plan.vl or 1) * (plan.m or plan.vl or 1)
+        gb = -(-(kk * r) // blk)
+        ob = -(-(2 * kk * r) // blk)
+        frac = 2.0 * (gb + ob) * blk / max(local[-1], 1)
+    else:
+        t0 = getattr(plan, "t0", None) or 1
+        w0 = -(-(kk * r) // t0) * t0
+        frac = 6.0 * w0 / max(local[0], 1)
+    return min(1.0, frac)
+
+
 def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
                        plan, steps: int | None = None,
                        constants=None) -> float:
@@ -406,7 +442,18 @@ def estimate_plan_time(spec, shape: Sequence[int], itemsize: int,
                 or pf / MXU_FALLBACK_PENALTY
     t = max(flops / pf, mem_bytes / bw)
     if coll_bytes:
-        t_coll = coll_bytes / ici \
-            + distributed_exchanges_per_step(plan, steps) * ICI_LATENCY
-        t = max(t, t_coll)
+        # distributed: the serialized schedule pays exchange THEN compute
+        # back-to-back (sum, not max — nothing hides the wire time); the
+        # overlapped schedule hides the wire time behind the interior
+        # compute (max) and only the boundary sub-sweeps — the fraction
+        # of the shard that consumes the arrived strips — serialize
+        # after it.  Per-paired-message latency is never hidden: the
+        # ring must be ISSUED before the interior launch.
+        wire = coll_bytes / ici
+        lat = distributed_exchanges_per_step(plan, steps) * ICI_LATENCY
+        if getattr(plan, "overlap", False):
+            bf = _overlap_boundary_fraction(spec, shape, plan)
+            t = max(t * (1.0 - bf), wire) + t * bf + lat
+        else:
+            t = t + wire + lat
     return t

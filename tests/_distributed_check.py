@@ -22,6 +22,17 @@ Invoked by test_distributed.py; exits non-zero on any mismatch.  Covers:
     steps; the shared
     sweep_schedule pins; the runtime warn-and-degrade fallback for
     schedules too deep for the shard; the ttile fan-out in plan="auto";
+  * the axis-0 EXACT-STRIP codec: resident programs ship exactly k·r
+    rows per side on the pipelined axis (a jaxpr ppermute-operand pin:
+    no whole-t0-tile strips), while the round-trip engine still ships
+    whole tiles — the modeled traffic cut the roofline charges;
+  * interior/boundary OVERLAP (overlap=True): the overlapped schedule —
+    ring issued first, interior computed on the un-extended shard while
+    the strips are in flight, boundary sub-sweeps stitched after — is
+    BIT-identical to the serialized resident schedule across axis-0 /
+    2-D-mesh / 3-D-mesh decomps × k × remainder × ragged steps ×
+    temporal tiles; infeasible shards degrade with a warning; the
+    overlap fan-out in plan='auto' dispatches end to end;
   * pinned ValueError messages for the remaining genuinely-illegal
     decompositions (halo thicker than the shard; no legal lane block);
   * plan="auto" on the 8-device mesh: distributed candidates —
@@ -522,6 +533,160 @@ def check_auto_plan_selects_minor_axis():
     print("plan='auto' minor-axis/2-D-mesh selection ok")
 
 
+def check_overlap_parity(name, shape, shards, steps, k, remainder, **kw):
+    """Interior/boundary overlap vs the serialized resident schedule:
+    BIT-identical (and ≈ the f64 oracle).  The overlapped program
+    computes the same values — interior on the un-extended shard while
+    the ring is in flight, boundary sub-sweeps stitched after — so any
+    drift is a stitching bug, not rounding."""
+    spec = stencils.make(name)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+    ser = multistep.distributed_run(spec, x, steps, k, engine="pallas",
+                                    shards=shards, sweep="resident",
+                                    remainder=remainder, **kw)
+    ovl = multistep.distributed_run(spec, x, steps, k, engine="pallas",
+                                    shards=shards, sweep="resident",
+                                    remainder=remainder, overlap=True,
+                                    **kw)
+    np.testing.assert_array_equal(
+        np.asarray(ovl), np.asarray(ser),
+        err_msg=f"{name} {shards} k={k} steps={steps} {remainder} {kw}: "
+        "overlapped != serialized (must be bit-identical)")
+    want = _f64_oracle(spec, x, steps)
+    np.testing.assert_allclose(np.asarray(ovl), want.astype(np.float32),
+                               rtol=5e-5, atol=5e-5)
+    print(f"overlap parity ok: {name} {shape} shards={shards} "
+          f"steps={steps} k={k} rem={remainder} {kw}")
+
+
+def _ppermute_operand_shapes(closed) -> list[tuple[int, ...]]:
+    """Operand shapes of every ppermute in the program (descending
+    through pjit/shard_map/control-flow jaxprs)."""
+    shapes: list[tuple[int, ...]] = []
+
+    def visit(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "ppermute":
+                shapes.append(tuple(eqn.invars[0].aval.shape))
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if isinstance(sub, jcore.ClosedJaxpr):
+                        visit(sub.jaxpr)
+                    elif isinstance(sub, jcore.Jaxpr):
+                        visit(sub)
+
+    visit(closed.jaxpr)
+    return shapes
+
+
+def check_axis0_exact_strip_jaxpr_pin():
+    """The acceptance pin for the exact-strip codec: in the axis-0
+    resident program every ppermute ships strips of exactly k·r rows —
+    NO whole-t0-tile operand — while the round-trip engine still ships
+    whole tiles; the per-operand byte ratio is the t0/(k·r) traffic cut
+    the roofline now charges."""
+    spec = stencils.make("2d5p")                   # r = 1
+    kk, t0 = 2, 4
+    w, w0 = kk * spec.r, -(-(kk * spec.r) // 4) * 4    # 2 vs 4
+    x = jnp.zeros((32, 64), jnp.float32)
+    mesh, decomp = multistep.mesh_for_shards((8, 1))
+    res = multistep.make_run(spec, mesh, decomp, steps=6, k=kk,
+                             engine="pallas", sweep="resident",
+                             vl=4, m=4, t0=t0)
+    shapes = _ppermute_operand_shapes(jax.make_jaxpr(res)(x))
+    assert shapes, "no ppermute found in the resident program"
+    assert all(s[0] == w for s in shapes), \
+        f"resident axis-0 must ship exactly {w} rows, got {shapes}"
+    rt = multistep.make_run(spec, mesh, decomp, steps=6, k=kk,
+                            engine="pallas", sweep="roundtrip",
+                            vl=4, m=4, t0=t0)
+    rt_shapes = _ppermute_operand_shapes(jax.make_jaxpr(rt)(x))
+    assert rt_shapes and all(s[0] == w0 for s in rt_shapes), rt_shapes
+    strip = int(np.prod(shapes[0])) * 4
+    tile = int(np.prod(rt_shapes[0])) * 4
+    assert tile == strip * (w0 // w), (strip, tile)
+    # the OVERLAPPED program on a 2-D mesh ships exact strips too: no
+    # operand at whole-tile width anywhere in the ring
+    mesh2, decomp2 = multistep.mesh_for_shards((4, 2))
+    ovl = multistep.make_run(spec, mesh2, decomp2, steps=6, k=kk,
+                             engine="pallas", sweep="resident",
+                             vl=4, m=4, t0=t0, overlap=True)
+    ovl_shapes = _ppermute_operand_shapes(jax.make_jaxpr(ovl)(x))
+    assert ovl_shapes and any(s[0] == w for s in ovl_shapes), ovl_shapes
+    assert not any(s[0] == w0 for s in ovl_shapes), ovl_shapes
+    print(f"axis-0 exact-strip jaxpr pin ok: resident ships {w} rows "
+          f"({strip} B), roundtrip {w0} rows ({tile} B)")
+
+
+def check_overlap_degrade_warns():
+    """An overlap request on a shard too shallow for the boundary
+    sub-sweeps degrades to the serialized schedule with a warning —
+    same result, no deep kernel error."""
+    import warnings as _w
+    spec = stencils.make("2d5p")
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((32, 64)), dtype=jnp.float32)
+    # shards (8,1), t0=4: local n0 = 4, boundary needs 2·4 = 8 rows
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        got = multistep.distributed_run(spec, x, 6, k=2, engine="pallas",
+                                        shards=(8, 1), sweep="resident",
+                                        vl=4, m=4, t0=4, overlap=True)
+    msgs = [str(r.message) for r in rec
+            if "running overlap=False instead" in str(r.message)]
+    assert msgs and "boundary region" in msgs[0], \
+        [str(r.message) for r in rec]
+    ser = multistep.distributed_run(spec, x, 6, k=2, engine="pallas",
+                                    shards=(8, 1), sweep="resident",
+                                    vl=4, m=4, t0=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ser))
+    print("overlap degrade warning ok")
+
+
+def check_auto_pool_enumerates_overlap():
+    """The unified pool fans resident pallas candidates out along the
+    overlap axis (gated by distributed_plan_legal); a stubbed timer
+    makes an overlapped plan win; the winner survives the plan cache
+    and dispatches the overlapped program end to end, bit-identical to
+    the round-trip oracle."""
+    import dataclasses
+
+    from repro.core import autotune
+    from repro.core.api import StencilProblem
+
+    prob = StencilProblem("2d5p", (32, 64))
+    cands = autotune.candidate_plans(prob.spec, prob.shape, steps=8)
+    ovl = [p for p in cands if p.overlap]
+    assert ovl, "auto pool must enumerate overlap candidates"
+    assert all(p.scheme == "transpose" and p.sweep == "resident"
+               for p in ovl)
+    target = next(p for p in ovl if p.decomp == (2, 4) and p.ttile == 1)
+
+    with tempfile.TemporaryDirectory() as td:
+        cache_path = os.path.join(td, "plans.json")
+
+        def overlap_wins(fn, plan):
+            return 0.001 if plan == target else 1.0
+
+        res = autotune.tune(prob, cache_path=cache_path,
+                            timer=overlap_wins, max_measure=500)
+        assert res.plan == target, res.plan
+        res2 = autotune.tune(prob, cache_path=cache_path,
+                             timer=overlap_wins)
+        assert res2.cached and res2.plan == target
+
+        x = prob.init(0)
+        got = prob.run(x, 5, res2.plan)
+        rt = prob.run(x, 5, dataclasses.replace(
+            res2.plan, sweep="roundtrip", overlap=False, ttile=1))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(rt))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(prob.reference(x, 5)),
+            rtol=5e-5, atol=5e-5)
+    print("plan='auto' overlap fan-out + selection ok")
+
+
 def check_ttile_parity(name, shape, shards, steps, k, ttile, remainder,
                        **kw):
     """Temporal tiling on the distributed engines: ttile>1 (one ghost
@@ -735,6 +900,36 @@ def main():
     check_ttile_schedule_pin()
     check_ttile_fallback_warns()
     check_auto_pool_enumerates_ttile()
+
+    # INTERIOR/BOUNDARY OVERLAP: 9-topology parity matrix — the
+    # overlapped schedule is bit-identical to the serialized resident
+    # one across 1-D / axis-0 / 2-D-mesh / 3-D-mesh decomps, k,
+    # remainder policies, ragged steps and temporal tiles (plus a
+    # normalized-inert row: axis-0 undecomposed in 3-D)
+    check_overlap_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=6, k=2,
+                         remainder="fused", vl=4, m=4)
+    check_overlap_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=5, k=2,
+                         remainder="native", vl=4, m=4)
+    check_overlap_parity("1d5p", (8 * 4 * 4 * 8,), (8,), steps=5, k=4,
+                         remainder="fused", vl=4, m=4)
+    check_overlap_parity("2d5p", (32, 64), (8, 1), steps=6, k=2,
+                         remainder="fused", vl=4, m=4, t0=2)
+    check_overlap_parity("2d5p", (32, 64), (8, 1), steps=5, k=2,
+                         remainder="native", vl=4, m=4, t0=2)
+    check_overlap_parity("2d5p", (32, 64), (4, 2), steps=5, k=2,
+                         remainder="fused", vl=4, m=4, t0=2)
+    check_overlap_parity("2d9p", (32, 64), (2, 4), steps=5, k=2,
+                         remainder="native", vl=4, m=4, t0=2)
+    check_overlap_parity("3d7p", (16, 16, 16), (2, 2, 2), steps=3, k=2,
+                         remainder="fused", vl=4, m=2, t0=4)
+    check_overlap_parity("1d3p", (8 * 4 * 4 * 4,), (8,), steps=16, k=2,
+                         remainder="fused", vl=4, m=4, ttile=2)
+    # overlap normalized inert when axis 0 is undecomposed (n-D)
+    check_overlap_parity("3d7p", (16, 16, 16), (1, 2, 4), steps=2, k=2,
+                         remainder="fused", vl=2, m=2, t0=4)
+    check_axis0_exact_strip_jaxpr_pin()
+    check_overlap_degrade_warns()
+    check_auto_pool_enumerates_overlap()
 
     # MXU banded-matmul engine on the same decomposition topologies:
     # axis-0, minor-axis (lane-carry codec), 2-D and 3-D meshes,

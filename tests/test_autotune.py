@@ -757,6 +757,31 @@ def test_ttile_winner_round_trips_and_dispatches(cache_path):
                                rtol=5e-5, atol=5e-5)
 
 
+def test_measured_search_prefers_ttile1_when_tiling_times_slower(
+        cache_path):
+    """The interpret-mode regression from the smoke bench: on hosts
+    where temporal tiling measures SLOWER (the bench rows carry
+    mode='interpret' for exactly this reason), the measured search must
+    return a ttile=1 winner — the roofline's deep-run preference for
+    ttile>1 is advisory ranking, never an override of the timer."""
+    prob = StencilProblem("1d3p", (128,))
+
+    def tiling_slower(fn, plan):
+        # interpret-mode cost profile: every extra ttile level retraces
+        return 1.0 + 10.0 * (plan.ttile - 1)
+
+    res = autotune.tune(prob, steps=16, cache_path=cache_path,
+                        timer=tiling_slower, max_measure=500)
+    assert res.plan.ttile == 1, res.plan
+    # the pool did offer tiled candidates — the timer rejected them,
+    # they weren't gated away
+    assert any(p.ttile > 1 for p in autotune.candidate_plans(
+        stencils.make("1d3p"), (128,), backend="pallas", steps=16))
+    res2 = autotune.tune(prob, steps=16, cache_path=cache_path,
+                         timer=tiling_slower)
+    assert res2.cached and res2.plan.ttile == 1
+
+
 def test_native_remainder_gate_is_schedule_aware():
     """The remainder-legality fix: a plan whose remainder='native' block
     is deeper than the grid supports is rejected AT ENUMERATION; a plan

@@ -313,8 +313,9 @@ def test_distributed_collective_charged_per_k_block():
     _, _, c4 = rs.plan_terms(spec, (4096,), 4, _dist_plan(k=4), steps=16)
     assert c1 > 0
     assert c2 == pytest.approx(c1) and c4 == pytest.approx(c1)
-    # exchanges per step: one per k-block, two messages per decomposed
-    # axis — halves when k doubles
+    # exchanges per step: one PAIRED bidirectional message per decomposed
+    # axis per k-block (ppermute_pair issues both directions back-to-back
+    # and latency is charged once) — halves when k doubles
     e1 = rs.distributed_exchanges_per_step(_dist_plan(k=1), steps=16)
     e4 = rs.distributed_exchanges_per_step(_dist_plan(k=4), steps=16)
     assert e1 == pytest.approx(4 * e4) and e4 > 0
@@ -361,25 +362,34 @@ def test_distributed_mesh_shape_moves_collective_bytes():
 
 
 def test_ghost_traffic_term_is_engine_aware():
-    """The lane-carry ghost-traffic accounting: on the n-D pipelined axis
-    the pallas engines ship whole t0-row tiles (more than jnp's exact k·r
-    ring when t0 > k·r); on the minor axis they ship the lane-carry STRIP
-    of exactly k·r elements — same collective bytes as jnp — while the
-    redundant-compute factor sees the whole (vl·m) ghost blocks the
-    scatter pads to."""
+    """The exact-strip ghost-traffic accounting: the RESIDENT engine
+    ships exactly k·r on EVERY axis — axis-0 row strips
+    (``halo.exchange_rows``) and the minor lane-carry STRIP — matching
+    jnp's collective bytes, while the redundant-compute factor still
+    sees the whole-tile / whole-(vl·m)-block ghost extents the strips
+    are zero-padded into.  The ROUNDTRIP engine has no codec and ships
+    whole-granule rings on both axes."""
     spec = stencils.make("2d5p")                 # r = 1
     shape, item = (64, 512), 4
 
     def plan(scheme, decomp, **kw):
         return _dist_plan(scheme=scheme, decomp=decomp, k=2, **kw)
 
-    # axis-0 decomp: pallas rounds the 2-cell ghost up to one t0=8 tile
+    # axis-0 decomp: the resident exact-strip codec ships k·r = 2 rows —
+    # same bytes as jnp — even though the ghost EXTENT is one t0=8 tile
     f_j, _, c_j = rs.plan_terms(spec, shape, item,
                                 plan("fused", (8, 1)), steps=16)
     f_p, _, c_p = rs.plan_terms(spec, shape, item,
                                 plan("transpose", (8, 1), vl=8, m=8, t0=8),
                                 steps=16)
-    assert c_p == pytest.approx(4 * c_j)         # 8-row tile vs 2-row ring
+    assert c_p == pytest.approx(c_j)             # exact 2-row strip
+    assert f_p > f_j                             # ...but whole-tile compute
+    # the roundtrip engine still exchanges whole t0-row tiles on axis 0
+    _, _, c_p_rt = rs.plan_terms(
+        spec, shape, item,
+        plan("transpose", (8, 1), vl=8, m=8, t0=8, sweep="roundtrip"),
+        steps=16)
+    assert c_p_rt == pytest.approx(4 * c_j)      # 8-row tile vs 2-row ring
     # minor-axis decomp: the strip ships exactly k·r — bytes match jnp —
     # but the ghost blocks (vl·m = 64 >> k·r = 2) inflate the redundant
     # compute factor
@@ -411,6 +421,73 @@ def test_distributed_resident_ranked_ahead_of_roundtrip():
     shape = (1 << 22,)
     assert rs.estimate_plan_time(spec, shape, 4, res, steps=16) < \
         rs.estimate_plan_time(spec, shape, 4, rt, steps=16)
+
+
+# ---------------------------------------------------------------------------
+# interior/boundary overlap plan axis
+# ---------------------------------------------------------------------------
+
+def test_overlap_gate_requires_resident_pallas():
+    """overlap=True is a resident-pallas-only axis: jnp and roundtrip
+    plans have no interior sub-sweep to hide the exchange behind."""
+    spec = stencils.make("1d3p")
+    legal = autotune.distributed_plan_legal
+    ok = dict(k=2, engine="pallas", vl=4, m=4, n_devices=8)
+    assert legal(spec, (1024,), (8,), overlap=True, **ok)
+    assert not legal(spec, (1024,), (8,), k=2, engine="jnp", n_devices=8,
+                     overlap=True)
+    assert not legal(spec, (1024,), (8,), k=2, engine="pallas",
+                     sweep="roundtrip", vl=4, m=4, n_devices=8,
+                     overlap=True)
+    # n-D: the overlap ring runs on the pipelined axis — it must be
+    # decomposed
+    spec2 = stencils.make("2d5p")
+    assert legal(spec2, (32, 64), (8, 1), k=2, engine="pallas", vl=4,
+                 m=4, t0=2, n_devices=8, overlap=True)
+    assert not legal(spec2, (32, 8 * 32), (1, 8), k=2, engine="pallas",
+                     vl=4, m=4, t0=2, n_devices=8, overlap=True)
+    # feasibility: the boundary region (2·w0 rows / 2·(gb+ob) lane
+    # blocks) must fit the local shard — deep schedules on small shards
+    # are rejected rather than fanned out
+    assert not legal(spec2, (32, 64), (8, 1), k=4, engine="pallas", vl=4,
+                     m=4, t0=4, n_devices=8, overlap=True,
+                     ttile=4, steps=16)
+
+
+def test_overlap_enumerated_and_serialized():
+    """Every legal resident pallas variant gets an overlap=True twin in
+    the distributed candidate pool, and the axis survives the plan-dict
+    round-trip (cache serialization)."""
+    spec = stencils.make("2d5p")
+    cands = autotune.candidate_plans(spec, (32, 64), backend="distributed",
+                                     steps=6, n_devices=8)
+    ovl = [p for p in cands if p.overlap]
+    assert ovl, "no overlap twins enumerated"
+    for p in ovl:
+        assert p.scheme == "transpose" and p.sweep == "resident"
+        assert dataclasses.replace(p, overlap=False) in cands
+        assert autotune.plan_from_dict(autotune.plan_to_dict(p)) == p
+    assert not any(p.overlap for p in cands if p.sweep == "roundtrip")
+
+
+def test_overlap_estimate_hides_wire_time():
+    """The roofline combination: a serialized distributed plan pays
+    compute + wire (sum); its overlapped twin hides the wire behind the
+    interior compute (max) plus the boundary fraction — so overlap must
+    rank no worse everywhere, and strictly better where the wire time
+    is comparable to compute."""
+    spec = stencils.make("2d5p")
+    ser = _dist_plan(scheme="transpose", decomp=(8, 1), k=2, vl=8, m=8,
+                     t0=8, sweep="resident")
+    ovl = dataclasses.replace(ser, overlap=True)
+    for shape in [(64, 512), (256, 2048), (1024, 8192)]:
+        t_s = rs.estimate_plan_time(spec, shape, 4, ser, steps=16)
+        t_o = rs.estimate_plan_time(spec, shape, 4, ovl, steps=16)
+        assert t_o <= t_s * (1 + 1e-9), shape
+    # large shard: wire is a real fraction of compute — strict win
+    t_s = rs.estimate_plan_time(spec, (1024, 8192), 4, ser, steps=16)
+    t_o = rs.estimate_plan_time(spec, (1024, 8192), 4, ovl, steps=16)
+    assert t_o < t_s
 
 
 def test_estimate_plan_time_uses_constants_override():

@@ -1,0 +1,134 @@
+"""Overlapped interior/boundary schedules are BITWISE identical to the
+serialized resident schedule.
+
+Runs on ONE device: a single-shard *named* mesh keeps shard_map and the
+ring codecs live — ``halo.ppermute_pair`` degenerates to the local
+periodic wrap — so the entire overlap machinery (ring issued first,
+interior periodic sweep with wrong edge cells, boundary sub-sweeps over
+the strip scatters, stitch) is exercised exactly as on a real ring.
+The 8-forced-device parity matrix (real ppermutes) lives in
+tests/_distributed_check.py.
+
+A deterministic (decomp-free) parametrized matrix always runs; when
+hypothesis is installed a fuzzing layer widens the (shape × steps × k ×
+remainder × seed) coverage.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import stencils
+from repro.distributed import multistep as dms
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _mesh1(ndim):
+    """Single-device mesh whose axis-0 name keeps overlap a live axis."""
+    mesh = jax.make_mesh((1,), ("dx",))
+    return mesh, ("dx",) + (None,) * (ndim - 1)
+
+
+def _pair(spec, steps, k, remainder, **tile):
+    mesh, decomp = _mesh1(spec.ndim)
+    ser = dms.make_run(spec, mesh, decomp, steps, k=k, engine="pallas",
+                       sweep="resident", remainder=remainder,
+                       interpret=True, overlap=False, **tile)
+    ovl = dms.make_run(spec, mesh, decomp, steps, k=k, engine="pallas",
+                       sweep="resident", remainder=remainder,
+                       interpret=True, overlap=True, **tile)
+    return ser, ovl
+
+
+def _check_1d(name, nb, steps, k, remainder, seed):
+    spec = stencils.make(name)
+    ser, ovl = _pair(spec, steps, k, remainder, vl=4, m=4)
+    rng = np.random.default_rng(seed)
+    x = jax.numpy.asarray(rng.standard_normal(16 * nb).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(ser(x)), np.asarray(ovl(x)))
+
+
+def _check_2d(name, n0, steps, k, remainder, seed):
+    spec = stencils.make(name)
+    ser, ovl = _pair(spec, steps, k, remainder, vl=4, m=4, t0=2)
+    rng = np.random.default_rng(seed)
+    x = jax.numpy.asarray(
+        rng.standard_normal((n0, 32)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(ser(x)), np.asarray(ovl(x)))
+
+
+@pytest.mark.parametrize("name,nb", [("1d3p", 2), ("1d5p", 3)])
+@pytest.mark.parametrize("steps,k,remainder",
+                         [(6, 2, "fused"), (5, 2, "native"),
+                          (5, 2, "fused"), (1, 1, "fused"),
+                          (3, 2, "native")])
+def test_overlap_bitwise_1d(name, nb, steps, k, remainder):
+    _check_1d(name, nb, steps, k, remainder, seed=0)
+
+
+@pytest.mark.parametrize("name,n0", [("2d5p", 8), ("2d9p", 12)])
+@pytest.mark.parametrize("steps,k,remainder",
+                         [(6, 2, "fused"), (5, 2, "native"),
+                          (5, 2, "fused"), (1, 1, "fused")])
+def test_overlap_bitwise_2d(name, n0, steps, k, remainder):
+    _check_2d(name, n0, steps, k, remainder, seed=1)
+
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=20, deadline=None)
+
+    @given(name=st.sampled_from(["1d3p", "1d5p"]), nb=st.integers(2, 4),
+           steps=st.integers(1, 6), k=st.sampled_from([1, 2]),
+           remainder=st.sampled_from(["fused", "native"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_overlap_bitwise_1d_fuzz(name, nb, steps, k, remainder, seed):
+        _check_1d(name, nb, steps, k, remainder, seed)
+
+    @given(name=st.sampled_from(["2d5p", "2d9p"]),
+           n0=st.sampled_from([8, 12, 16]),
+           steps=st.integers(1, 5), k=st.sampled_from([1, 2]),
+           remainder=st.sampled_from(["fused", "native"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_overlap_bitwise_2d_fuzz(name, n0, steps, k, remainder, seed):
+        _check_2d(name, n0, steps, k, remainder, seed)
+
+
+def test_overlap_inert_outside_resident_pallas_shares_program():
+    """overlap is normalized away where it has no meaning — the jnp
+    engine and a minor-only n-D mesh return the SAME cached program for
+    overlap=True and False (no cache split on an inert field)."""
+    spec = stencils.make("1d3p")
+    mesh, decomp = _mesh1(1)
+    a = dms.make_run(spec, mesh, decomp, 4, k=2, engine="jnp",
+                     overlap=False)
+    b = dms.make_run(spec, mesh, decomp, 4, k=2, engine="jnp",
+                     overlap=True)
+    assert a is b
+    spec2 = stencils.make("2d5p")
+    mesh2 = jax.make_mesh((1,), ("dy",))
+    dec2 = (None, "dy")                       # axis 0 undecomposed
+    c = dms.make_run(spec2, mesh2, dec2, 4, k=2, engine="pallas", vl=4,
+                     m=4, t0=2, interpret=True, overlap=False)
+    d = dms.make_run(spec2, mesh2, dec2, 4, k=2, engine="pallas", vl=4,
+                     m=4, t0=2, interpret=True, overlap=True)
+    assert c is d
+
+
+def test_overlap_infeasible_shard_raises_pinned_error():
+    """A shard too shallow for the boundary sub-sweeps fails with the
+    pinned wording, not a kernel-internal assert."""
+    spec = stencils.make("2d5p")              # r = 1
+    mesh, decomp = _mesh1(2)
+    run = dms.make_run(spec, mesh, decomp, 8, k=8, engine="pallas",
+                       sweep="resident", vl=4, m=4, t0=4, interpret=True,
+                       overlap=True)
+    # boundary needs 2·⌈8·1/4⌉·4 = 16 rows, the shard has 8
+    x = jax.numpy.zeros((8, 32), jax.numpy.float32)
+    with pytest.raises(ValueError, match="boundary region"):
+        run(x)

@@ -9,8 +9,13 @@ tuned plan, and report the speedup.  A second ``tune`` call per problem
 demonstrates the cache hit (no re-measurement).
 
 Output rows: ``name,us_per_step,derived`` (derived = plan / speedup).
+``--json PATH`` additionally records per-problem rows including the
+static-audit overhead (``audit_seconds``) and how many candidates the
+auditor pruned before measurement (``n_pruned_static``) — observability
+only, never gating.
 """
 import argparse
+import json
 import logging
 import os
 import sys
@@ -34,12 +39,16 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--cache", default=None,
                     help="plan cache path (default: fresh temp file)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-problem rows (incl. audit_seconds, "
+                         "n_pruned_static) as JSON")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO,
                         format="%(name)s: %(message)s")
     cache = args.cache or os.path.join(tempfile.mkdtemp(), "plans.json")
     print(f"# plan cache: {cache}", file=sys.stderr)
 
+    rows = []
     for name, shape in PROBLEMS:
         prob = StencilProblem(name, shape)
         tag = f"{name}@{'x'.join(map(str, shape))}"
@@ -67,10 +76,31 @@ def main():
         print(f"# {tag}: tuned {t_def / t_tuned:.2f}x vs default "
               f"(winner backend={res.plan.backend}), "
               f"{res.n_measured}/{res.n_candidates} candidates measured, "
+              f"{res.n_pruned_static} pruned statically "
+              f"({res.audit_seconds * 1e3:.0f} ms audit), "
               f"second run cache-hit={res2.cached}", file=sys.stderr)
         if t_tuned > t_def * 1.05:
             print(f"# WARNING {tag}: tuned slower than default "
                   f"({t_tuned:.3e} vs {t_def:.3e})", file=sys.stderr)
+        rows.append({
+            "problem": tag, "steps": args.steps,
+            "seconds_per_step_default": t_def,
+            "seconds_per_step_tuned": t_tuned,
+            "speedup": t_def / t_tuned,
+            "plan": autotune.plan_to_dict(res.plan),
+            "n_candidates": res.n_candidates,
+            "n_measured": res.n_measured,
+            "n_pruned_static": res.n_pruned_static,
+            "audit_seconds": res.audit_seconds,
+            "pruned": [{"plan": autotune.plan_to_dict(p),
+                        "violations": sorted(set(v))}
+                       for p, v in res.pruned],
+            "cache_hit_second_run": bool(res2.cached),
+        })
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

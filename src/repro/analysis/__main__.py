@@ -1,0 +1,106 @@
+"""``python -m repro.analysis`` — audit the conformance matrix statically.
+
+For every (stencil, shape) cell of the matrix, enumerate the legal
+candidate plans exactly as the autotuner would (including distributed
+candidates when this host shows multiple devices), trace each one
+abstractly and evaluate the invariant registry.  Exit status 1 if any
+plan is statically invalid — the CI lint gate.
+
+Usage::
+
+    python -m repro.analysis             # stratified subset per cell
+    python -m repro.analysis --all       # every legal candidate plan
+    python -m repro.analysis --json out.json
+    python -m repro.analysis --steps 7   # remainder paths (default)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+MATRIX = [
+    ("1d3p", (128,)),
+    ("1d5p", (256,)),
+    ("2d5p", (32, 64)),
+    ("3d7p", (8, 8, 64)),
+]
+
+
+def _stratified(cands):
+    """One candidate per (backend, sweep, overlap) stratum — the cheap
+    default; ``--all`` audits the full pool."""
+    seen, out = set(), []
+    for p in cands:
+        key = (p.backend, p.sweep, p.overlap)
+        if key not in seen:
+            seen.add(key)
+            out.append(p)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static audit of the conformance matrix")
+    ap.add_argument("--all", action="store_true",
+                    help="audit every legal candidate plan per cell "
+                         "(default: one per backend/sweep stratum)")
+    ap.add_argument("--steps", type=int, default=7,
+                    help="step count to audit at (7 exercises the "
+                         "remainder paths; default %(default)s)")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="audit at most N plans per cell")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the per-plan audit rows as JSON")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro import analysis
+    from repro.core import autotune
+    from repro.core.api import StencilProblem
+
+    t_start = time.perf_counter()
+    rows, n_bad, n_plans = [], 0, 0
+    for name, shape in MATRIX:
+        prob = StencilProblem(name, shape)
+        cands = autotune.candidate_plans(prob.spec, shape, prob.dtype,
+                                         "auto", steps=args.steps)
+        plans = cands if args.all else _stratified(cands)
+        if args.limit:
+            plans = plans[:args.limit]
+        cell_bad = 0
+        for plan in plans:
+            report = analysis.audit_plan(prob, plan, steps=args.steps)
+            n_plans += 1
+            if not report.ok:
+                cell_bad += 1
+                n_bad += 1
+                for v in report.violations:
+                    print(f"  VIOLATION {name}{shape} {plan}: {v}",
+                          file=sys.stderr)
+            rows.append({
+                "stencil": name, "shape": list(shape),
+                "steps": args.steps,
+                "plan": autotune.plan_to_dict(plan),
+                "ok": report.ok,
+                "violations": list(report.violation_names()),
+                "audit_seconds": report.seconds,
+            })
+        print(f"{name} {shape}: {len(plans)} plan(s) audited, "
+              f"{cell_bad} invalid")
+    total_s = time.perf_counter() - t_start
+    print(f"audited {n_plans} plans on {len(jax.devices())} device(s) "
+          f"in {total_s:.1f}s: "
+          + ("all invariants hold" if n_bad == 0
+             else f"{n_bad} statically INVALID"))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "n_plans": n_plans, "n_bad": n_bad,
+                       "seconds": total_s}, f, indent=1)
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,327 @@
+"""Declarative layout-invariant registry, keyed on plan axes.
+
+Every performance claim of the reproduction is a *structural* property
+of the traced program — properties the paper's scheme lives or dies by,
+previously enforced only by scattered test pins.  Each
+:class:`Invariant` here names one, says which plan axes it keys on
+(``applies``), and checks it against the :class:`ProgramFacts` the
+shared walker extracted (``check``).  The registry is evaluated by
+:func:`evaluate`; :func:`repro.analysis.audit_plan` wires it behind
+tracing.
+
+The registry **fails closed**: a plan whose engine axes are not
+recognized gets an ``unknown-engine`` violation instead of a silent
+pass — an unaudited engine is an invalid plan until someone teaches the
+registry its invariants.
+
+Violation names (stable — tests and the autotune prune log key on them):
+
+========================    =================================================
+``unknown-engine``          plan axes outside the audited engine set
+``trace-error``             the (problem, plan) program failed to trace
+``resident-in-loop-transpose``  resident layout left the device layout
+``resident-in-loop-reshape``    between sweeps (transpose/reshape inside
+                            the sweep loop)
+``resident-copy-prims``     pad/concat/slice/gather copies between kernels
+``resident-roundtrip-count``    kernel launch sites not flat in steps
+``axis0-whole-tile-ppermute``   lead-axis ring ships tile pads, not strips
+``axis0-strips-missing``    no exact ``d·r``-row strip for some chunk depth
+``overlap-no-ring``         overlap plan traced no ppermute
+``overlap-serialized``      no ring-independent interior kernel after the
+                            ring ppermute
+``mxu-dot-count``           ≠ one dot_general per sweep chunk
+``mxu-accum-dtype``         accumulation dtype not pinned f32/f64
+``blockspec-*``             see :mod:`repro.analysis.blockspec_audit`
+========================    =================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.api import StencilPlan, sweep_schedule
+
+KNOWN_BACKENDS = ("jnp", "pallas", "mxu", "distributed")
+KNOWN_SWEEPS = ("resident", "roundtrip")
+KNOWN_REMAINDERS = ("fused", "native")
+KNOWN_TILINGS = ("none", "tessellate")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    name: str
+    message: str
+
+    def __str__(self):
+        return f"{self.name}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditContext:
+    """What the checks know besides the program: the (spec, shape,
+    dtype, steps) cell and the plan under audit."""
+    spec: object
+    shape: tuple
+    dtype: object
+    steps: int
+    plan: StencilPlan
+
+    @property
+    def chunks(self) -> list[tuple[int, int]]:
+        return sweep_schedule(self.plan.k, self.steps,
+                              self.plan.remainder or "fused",
+                              self.plan.ttile or 1)[0]
+
+
+def resolved_engine(plan: StencilPlan) -> str | None:
+    """The local compute engine a plan dispatches to (mirrors
+    ``StencilProblem.run``: a distributed transpose-scheme plan runs the
+    pallas kernels shard-side, any other scheme the jnp reference)."""
+    if plan.backend in ("jnp", "pallas", "mxu"):
+        return plan.backend
+    if plan.backend == "distributed":
+        return "pallas" if plan.scheme == "transpose" else "jnp"
+    return None
+
+
+def _is_resident(plan: StencilPlan) -> bool:
+    eng = resolved_engine(plan)
+    if eng == "mxu":
+        return True                  # the mxu engine is always resident
+    return eng == "pallas" and plan.sweep == "resident"
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+def _check_known_engine(facts, ctx) -> list[Violation]:
+    p = ctx.plan
+    bad = []
+    if p.backend not in KNOWN_BACKENDS:
+        bad.append(f"backend={p.backend!r}")
+    if p.sweep not in KNOWN_SWEEPS:
+        bad.append(f"sweep={p.sweep!r}")
+    if p.remainder not in KNOWN_REMAINDERS:
+        bad.append(f"remainder={p.remainder!r}")
+    if p.tiling not in KNOWN_TILINGS:
+        bad.append(f"tiling={p.tiling!r}")
+    if bad:
+        return [Violation(
+            "unknown-engine",
+            "fail-closed: unrecognized plan axes " + ", ".join(bad)
+            + " — no invariant set is registered for this engine")]
+    return []
+
+
+def _check_no_loop_transpose(facts, ctx) -> list[Violation]:
+    if facts.transposes_in_loop:
+        return [Violation(
+            "resident-in-loop-transpose",
+            f"{facts.transposes_in_loop} transpose(s) inside the sweep "
+            "loop — the resident layout must stay put between sweeps "
+            "(one transpose-in / transpose-out round-trip per run)")]
+    return []
+
+
+def _check_no_loop_reshape(facts, ctx) -> list[Violation]:
+    if facts.reshapes_in_loop:
+        return [Violation(
+            "resident-in-loop-reshape",
+            f"{facts.reshapes_in_loop} reshape(s) inside the sweep loop "
+            "of a resident pallas program — layout churn between sweeps")]
+    return []
+
+
+def _check_resident_roundtrips(facts, ctx) -> list[Violation]:
+    out = []
+    if facts.copies:
+        out.append(Violation(
+            "resident-copy-prims",
+            f"{facts.copies} pad/concatenate/slice/gather op(s) between "
+            "kernels — the resident program makes zero inter-sweep "
+            "copies"))
+    # 1-D lays out via two pallas block-transpose kernels; n-D via two
+    # jnp transposes.  Either way: one launch site per sweep chunk,
+    # independent of steps (the HBM-flatness pin).
+    expected = len(ctx.chunks) + (2 if ctx.spec.ndim == 1 else 0)
+    if len(facts.pallas_calls) != expected:
+        out.append(Violation(
+            "resident-roundtrip-count",
+            f"{len(facts.pallas_calls)} kernel launch sites, expected "
+            f"{expected} (len(chunks)={len(ctx.chunks)}"
+            + (" + 2 layout kernels" if ctx.spec.ndim == 1 else "")
+            + ") — HBM round-trips must be flat in steps"))
+    return out
+
+
+def _check_axis0_strips(facts, ctx) -> list[Violation]:
+    spec, plan = ctx.spec, ctx.plan
+    widths = {d * spec.r for d, _ in ctx.chunks}
+    full_rank = spec.ndim + 2            # (n0, *mid, nb, m, vl) strips
+    lead = [p for p in facts.ppermutes if len(p.shape) == full_rank]
+    if not lead:
+        return [Violation(
+            "axis0-strips-missing",
+            "no lead-axis ppermute in an axis-0-decomposed resident "
+            "program — the ghost ring is missing entirely")]
+    out = []
+    t0 = plan.t0
+    if t0 is None:
+        try:
+            from repro.kernels import ops as kops
+            shard = (ctx.shape[0] // plan.decomp[0],) + tuple(ctx.shape[1:])
+            _, _, t0 = kops.pick_tile(
+                spec, shard, plan.vl if plan.m is not None else None,
+                plan.m, plan.t0)
+        except Exception:
+            t0 = None
+    if t0:
+        pads = {-(-w // t0) * t0 for w in widths} - widths
+        whole = sorted({p.shape[0] for p in lead if p.shape[0] in pads})
+        if whole:
+            out.append(Violation(
+                "axis0-whole-tile-ppermute",
+                f"lead-axis ppermute ships whole-tile pads of {whole} "
+                f"rows — the exact-strip codec must ship d·r rows "
+                f"{sorted(widths)} (t0/(k·r)× the traffic otherwise)"))
+    missing = sorted(w for w in widths
+                     if not any(p.shape[0] == w for p in lead))
+    if missing:
+        out.append(Violation(
+            "axis0-strips-missing",
+            f"no lead-axis ppermute operand of exactly {missing} rows — "
+            "every chunk depth d must exchange a d·r-row strip"))
+    return out
+
+
+def _overlap_live(ctx) -> bool:
+    """Whether the runtime would actually run the overlapped schedule —
+    mirrors ``distributed_run``'s graceful degrade: overlap is inert off
+    the pallas-resident engine, and a shard too shallow for the boundary
+    sub-sweeps degrades to the serialized exchange with a warning.  The
+    invariant only applies where the overlap is live; a degraded plan is
+    not a violation (same results, documented contract)."""
+    plan = ctx.plan
+    if not plan.overlap or not plan.decomp:
+        return False
+    if resolved_engine(plan) != "pallas" or plan.sweep != "resident":
+        return False
+    if plan.decomp[0] <= 1:              # the ring rides the lead axis
+        return False
+    try:
+        from repro.distributed.multistep import _overlap_bounds
+        from repro.kernels.ops import pick_tile
+        nshards = tuple(plan.decomp) + (1,) * (ctx.spec.ndim
+                                               - len(plan.decomp))
+        local = [n // s for n, s in zip(ctx.shape, nshards)]
+        vl, m, t0 = pick_tile(ctx.spec, local,
+                              plan.vl if plan.m is not None else None,
+                              plan.m, plan.t0)
+        dmax = max(d for d, _ in ctx.chunks)
+        need, have = _overlap_bounds(ctx.spec, local, dmax, vl * m, t0)
+        return need <= have
+    except Exception:
+        return True                      # can't prove degrade: audit it
+
+
+def _check_overlap(facts, ctx) -> list[Violation]:
+    if not ctx.plan.decomp or int(np.prod(ctx.plan.decomp)) <= 1:
+        return []                        # single shard: no ring to hide
+    rings = [p for p in facts.ppermutes if p.is_ring]
+    if not rings:
+        return [Violation(
+            "overlap-no-ring",
+            "overlap plan traced no ring-axis ppermute — nothing is in "
+            "flight to hide behind the interior sweep")]
+    first_ring = min(p.ordinal for p in rings)
+    # ring_tainted, not tainted: the interior kernel legitimately
+    # consumes the minor-axis lane-ghost exchange — only independence
+    # from the RING exchange makes the schedule overlapped
+    interior = [k for k in facts.pallas_calls
+                if k.ordinal > first_ring and not k.ring_tainted]
+    if not interior:
+        return [Violation(
+            "overlap-serialized",
+            "every kernel after the ring ppermute consumes ring data — "
+            "the ring must be issued before a ring-independent interior "
+            "pallas_call for the exchange to overlap compute")]
+    return []
+
+
+def _check_mxu(facts, ctx) -> list[Violation]:
+    from repro.core.matrixize import accum_dtype
+    out = []
+    expected = len(ctx.chunks)
+    if len(facts.dot_generals) != expected:
+        out.append(Violation(
+            "mxu-dot-count",
+            f"{len(facts.dot_generals)} dot_general(s), expected exactly "
+            f"{expected} — one per sweep chunk; operator powers are "
+            "trace-time constants, never in-program matmuls"))
+    want = np.dtype(accum_dtype(ctx.dtype)).name
+    for d in facts.dot_generals:
+        if d.accum_dtype != want:
+            out.append(Violation(
+                "mxu-accum-dtype",
+                f"dot_general over {d.operand_dtype} accumulates in "
+                f"{d.accum_dtype} — must pin {want} via "
+                "preferred_element_type"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Invariant:
+    name: str
+    axes: str          # the plan-axis key, for the README table / CLI
+    applies: Callable[[AuditContext], bool]
+    check: Callable[[object, AuditContext], list]
+
+
+REGISTRY: tuple[Invariant, ...] = (
+    Invariant("known-engine", "always",
+              lambda ctx: True, _check_known_engine),
+    Invariant("resident-layout", "resident engine (pallas resident, "
+              "mxu, distributed transpose-scheme resident)",
+              lambda ctx: _is_resident(ctx.plan), _check_no_loop_transpose),
+    Invariant("resident-reshape", "backend=pallas sweep=resident",
+              lambda ctx: ctx.plan.backend == "pallas"
+              and ctx.plan.sweep == "resident", _check_no_loop_reshape),
+    Invariant("resident-hbm-flat", "backend=pallas sweep=resident",
+              lambda ctx: ctx.plan.backend == "pallas"
+              and ctx.plan.sweep == "resident", _check_resident_roundtrips),
+    Invariant("axis0-exact-strips", "backend=distributed sweep=resident "
+              "scheme=transpose decomp[0]>1 (n-D)",
+              lambda ctx: ctx.plan.backend == "distributed"
+              and resolved_engine(ctx.plan) == "pallas"
+              and ctx.plan.sweep == "resident"
+              and ctx.spec.ndim > 1
+              and bool(ctx.plan.decomp) and ctx.plan.decomp[0] > 1,
+              _check_axis0_strips),
+    Invariant("overlap-ring-first", "overlap=True (and live: pallas "
+              "resident ring with a shard deep enough that the runtime "
+              "does not degrade to the serialized exchange)",
+              _overlap_live, _check_overlap),
+    Invariant("mxu-one-dot-per-chunk", "backend=mxu (incl. decomp)",
+              lambda ctx: resolved_engine(ctx.plan) == "mxu", _check_mxu),
+)
+
+
+def evaluate(facts, ctx: AuditContext) -> list[Violation]:
+    """Run every applicable invariant.  Unknown engine axes short-circuit
+    to the single fail-closed violation — no other invariant is trusted
+    to mean anything for an engine the registry doesn't know."""
+    head = _check_known_engine(facts, ctx)
+    if head:
+        return head
+    out: list[Violation] = []
+    for inv in REGISTRY[1:]:
+        if inv.applies(ctx):
+            out.extend(inv.check(facts, ctx))
+    return out

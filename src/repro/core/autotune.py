@@ -44,7 +44,12 @@ over **every execution backend at once**:
      *backend-stratified*: at least one candidate of every backend
      present in the pool is always measured, so no backend is ever
      silently skipped.
-  3. survivors are timed with ``problem.run`` via
+  3. every survivor is **statically audited** first
+     (:mod:`repro.analysis`): its whole-run program is traced abstractly
+     and the layout-invariant registry evaluated; a candidate with any
+     violation is pruned with the violation named and is never timed
+     (``REPRO_PLAN_AUDIT=0`` disables the gate).  Then the remaining
+     survivors are timed with ``problem.run`` via
      :func:`repro.core.timing.bench` and the fastest wins; every timed
      sample also feeds the roofline calibrator.
   4. the winner is written to a persistent JSON plan cache keyed by
@@ -116,6 +121,7 @@ import logging
 import math
 import os
 import threading
+import time
 from typing import Callable, Sequence
 
 import jax
@@ -1039,6 +1045,9 @@ class TuneResult:
     n_measured: int
     cached: bool                       # True: served from the plan cache
     measurements: list[dict] = dataclasses.field(default_factory=list)
+    n_pruned_static: int = 0           # survivors the static audit rejected
+    audit_seconds: float = 0.0         # wall time spent auditing survivors
+    pruned: list = dataclasses.field(default_factory=list)  # [(plan, names)]
 
 
 def _default_timer(fn: Callable[[], jax.Array], plan: StencilPlan) -> float:
@@ -1078,6 +1087,34 @@ def _stratify(survivors: list[StencilPlan], ranked: list[StencilPlan]):
             survivors.append(p)
             have.add(p.backend)
     return survivors
+
+
+def _audit_survivors(problem, survivors, steps):
+    """Static plan audit — the fail-closed gate in front of the
+    measurement loop.  Each survivor's program is traced abstractly (no
+    execution) and checked against the invariant registry
+    (:mod:`repro.analysis`); a plan with any violation is pruned with
+    the violation named and is NEVER timed.  ``REPRO_PLAN_AUDIT=0``
+    disables the gate (debug escape hatch).
+
+    Returns ``(kept, pruned, seconds)`` where ``pruned`` is a list of
+    ``(plan, violation-name tuple)`` pairs.
+    """
+    if os.environ.get("REPRO_PLAN_AUDIT", "1") == "0":
+        return survivors, [], 0.0
+    from repro import analysis     # lazy: analysis imports core.api
+    t0 = time.perf_counter()
+    kept, pruned = [], []
+    for plan in survivors:
+        report = analysis.audit_plan(problem, plan, steps=steps)
+        if report.ok:
+            kept.append(plan)
+        else:
+            names = report.violation_names()
+            pruned.append((plan, names))
+            logger.warning("candidate %s statically invalid, never "
+                           "measured: %s", plan, ", ".join(sorted(set(names))))
+    return kept, pruned, time.perf_counter() - t0
 
 
 def tune(problem, backend: str = "auto", steps: int | None = None,
@@ -1143,6 +1180,16 @@ def tune(problem, backend: str = "auto", steps: int | None = None,
         survivors.append(default)
 
     measure_steps = measure_steps or _auto_measure_steps(steps)
+    # static audit gate: prove the layout invariants on each survivor's
+    # traced program (the very program the timer would run) BEFORE any
+    # measurement — a statically-invalid candidate is never timed.
+    survivors, pruned, audit_seconds = _audit_survivors(
+        problem, survivors, measure_steps)
+    if not survivors:
+        raise RuntimeError(
+            f"every candidate for {key} is statically invalid: "
+            + "; ".join(f"{p}: {', '.join(sorted(set(n)))}"
+                        for p, n in pruned))
     x = problem.init(seed=0)
     measurements = []
     best_plan, best_t = None, float("inf")
@@ -1196,15 +1243,24 @@ def tune(problem, backend: str = "auto", steps: int | None = None,
     record = {"plan": plan_to_dict(best_plan), "seconds_per_step": best_t,
               "fingerprint": code_fingerprint(),
               "n_candidates": len(cands), "n_measured": len(measurements),
+              "n_pruned_static": len(pruned),
+              "audit_seconds": audit_seconds,
+              "pruned": [{"plan": plan_to_dict(p),
+                          "violations": sorted(set(n))} for p, n in pruned],
               "measurements": measurements}
     cache.put(key, record)
     cache.save()
-    logger.info("tuned %s → %s (%.3es/step, %d measured of %d)", key,
-                best_plan, best_t, len(measurements), len(cands))
+    logger.info("tuned %s → %s (%.3es/step, %d measured of %d, "
+                "%d pruned statically in %.0f ms)", key,
+                best_plan, best_t, len(measurements), len(cands),
+                len(pruned), audit_seconds * 1e3)
     return TuneResult(key=key, plan=best_plan, seconds_per_step=best_t,
                       n_candidates=len(cands),
                       n_measured=len(measurements), cached=False,
-                      measurements=measurements)
+                      measurements=measurements,
+                      n_pruned_static=len(pruned),
+                      audit_seconds=audit_seconds,
+                      pruned=list(pruned))
 
 
 def best_plan(problem, backend: str = "auto", steps: int | None = None,

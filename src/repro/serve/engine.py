@@ -271,10 +271,28 @@ class StencilService:
         self.close()
 
     def _warm_one(self, name, shape, dtype, steps, tune_kw):
+        import os
+
         from repro.core import autotune
         sig, prob = self._problem(name, shape, dtype)
         result = autotune.tune(prob, steps=steps,
                                cache_path=self.cache_path, **tune_kw)
+        # fail-closed static audit on warm: tune() audits every candidate
+        # it measures, but a CACHED winner (possibly written by an older
+        # code version, or hand-edited) skips that gate — re-prove the
+        # layout invariants on the plan this service is about to serve.
+        # REPRO_PLAN_AUDIT=0 disables (same switch as the tuner's gate).
+        if os.environ.get("REPRO_PLAN_AUDIT", "1") != "0":
+            from repro import analysis
+            report = analysis.audit_plan(
+                prob, result.plan,
+                steps=steps if steps is not None
+                else autotune._auto_measure_steps(None))
+            if not report.ok:
+                raise RuntimeError(
+                    f"warmed plan for {sig} steps={steps} is statically "
+                    f"invalid: "
+                    + ", ".join(sorted(set(report.violation_names()))))
         # publish for exact-hit lookups; plan_for's cache read would find
         # it anyway (tune() saved it), this skips the file re-read.  Under
         # the lock (plan_for/_problem mutate _plans concurrently), and only

@@ -55,8 +55,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax import core as jcore  # noqa: E402
 
+from repro.analysis import jaxpr_audit  # noqa: E402
 from repro.core import stencils  # noqa: E402
 from repro.distributed import halo, multistep  # noqa: E402
 
@@ -110,56 +110,13 @@ def check_resident_parity(name, shape, shards, steps, k, remainder, **kw):
 # jaxpr census: transposes inside vs outside the sweep loop
 # ---------------------------------------------------------------------------
 
-_LOOP_PRIMS = ("while", "scan")
-
-
-def _transpose_census(closed) -> tuple[int, int]:
-    """(transposes outside any loop body, transposes inside loop bodies),
-    descending through pjit/shard_map/control-flow jaxprs but NOT into
-    pallas kernel bodies (in-kernel ops never touch HBM layout)."""
-    top = inside = 0
-
-    def visit(jaxpr, in_loop):
-        nonlocal top, inside
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "transpose":
-                if in_loop:
-                    inside += 1
-                else:
-                    top += 1
-            if eqn.primitive.name == "pallas_call":
-                continue
-            deeper = in_loop or eqn.primitive.name in _LOOP_PRIMS
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        visit(sub.jaxpr, deeper)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        visit(sub, deeper)
-
-    visit(closed.jaxpr, False)
-    return top, inside
-
-
-def _pallas_grids(closed) -> list[tuple[int, ...]]:
-    """Grids of every pallas_call in the program (descending through
-    pjit/shard_map/control-flow, not into kernel bodies)."""
-    grids: list[tuple[int, ...]] = []
-
-    def visit(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                grids.append(tuple(eqn.params["grid_mapping"].grid))
-                continue
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        visit(sub.jaxpr)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        visit(sub)
-
-    visit(closed.jaxpr)
-    return grids
+# the shared recursive walker (repro.analysis.jaxpr_audit) replaced the
+# historical local copies; semantics pinned there (descend through
+# pjit/shard_map/control-flow jaxprs at any depth, count but never enter
+# pallas kernel bodies).
+_LOOP_PRIMS = jaxpr_audit.LOOP_PRIMS
+_transpose_census = jaxpr_audit.transpose_census
+_pallas_grids = jaxpr_audit.pallas_grids
 
 
 def check_jaxpr_no_per_exchange_transpose():
@@ -307,23 +264,7 @@ def check_mxu_parity(name, shape, shards, steps, k, remainder, **kw):
           f"k={k} rem={remainder} {kw}")
 
 
-def _dot_general_count(closed) -> int:
-    n = 0
-
-    def visit(jaxpr):
-        nonlocal n
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "dot_general":
-                n += 1
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        visit(sub.jaxpr)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        visit(sub)
-
-    visit(closed.jaxpr)
-    return n
+_dot_general_count = jaxpr_audit.dot_general_count
 
 
 def check_mxu_jaxpr_pins():
@@ -560,24 +501,7 @@ def check_overlap_parity(name, shape, shards, steps, k, remainder, **kw):
           f"steps={steps} k={k} rem={remainder} {kw}")
 
 
-def _ppermute_operand_shapes(closed) -> list[tuple[int, ...]]:
-    """Operand shapes of every ppermute in the program (descending
-    through pjit/shard_map/control-flow jaxprs)."""
-    shapes: list[tuple[int, ...]] = []
-
-    def visit(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "ppermute":
-                shapes.append(tuple(eqn.invars[0].aval.shape))
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        visit(sub.jaxpr)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        visit(sub)
-
-    visit(closed.jaxpr)
-    return shapes
+_ppermute_operand_shapes = jaxpr_audit.ppermute_operand_shapes
 
 
 def check_axis0_exact_strip_jaxpr_pin():

@@ -28,6 +28,7 @@ import numpy as np
 import pytest
 from jax import core as jcore
 
+from repro.analysis import jaxpr_audit
 from repro.core import autotune, layouts, matrixize, stencils
 from repro.kernels import ops
 from repro.kernels import stencil_kernels as sk
@@ -205,21 +206,10 @@ def test_driver_matches_f64_oracle(steps, k, ttile, remainder):
 # jaxpr pin: one dot_general per sweep chunk, zero operator matmuls
 # ---------------------------------------------------------------------------
 
+# shared recursive walker; enter_pallas=True matches the historical
+# local copy (the mxu census descends kernel bodies too)
 def _count_prims(closed: jcore.ClosedJaxpr) -> collections.Counter:
-    c = collections.Counter()
-
-    def visit(jaxpr):
-        for eqn in jaxpr.eqns:
-            c[eqn.primitive.name] += 1
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        visit(sub.jaxpr)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        visit(sub)
-
-    visit(closed.jaxpr)
-    return c
+    return jaxpr_audit.count_prims(closed, enter_pallas=True)
 
 
 @pytest.mark.parametrize("steps,k,remainder,ttile", [

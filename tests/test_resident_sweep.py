@@ -22,6 +22,7 @@ import numpy as np
 import pytest
 from jax import core as jcore
 
+from repro.analysis import jaxpr_audit
 from repro.core import layouts, stencils
 from repro.core.api import StencilPlan, StencilProblem
 from repro.kernels import ops
@@ -149,30 +150,14 @@ def test_stencil_nd_sweep_periodic_kernel(name, shape, vl, m, t0, k):
 # 2. data-movement: jaxpr inspection
 # ---------------------------------------------------------------------------
 
-_COPY_PRIMS = ("pad", "concatenate", "slice", "dynamic_slice",
-               "dynamic_update_slice", "gather")
+# the shared recursive walker (repro.analysis.jaxpr_audit) replaced the
+# historical test-local copy; the census semantics — descend control-flow
+# bodies, count but do not enter pallas kernel bodies — are pinned there.
+_COPY_PRIMS = jaxpr_audit.COPY_PRIMS
 
 
 def _count_prims(closed: jcore.ClosedJaxpr) -> collections.Counter:
-    """Primitive census of a jaxpr, descending into control-flow bodies
-    but NOT into pallas kernel bodies (in-VMEM kernel ops are free of HBM
-    traffic; the census measures what XLA moves between kernels)."""
-    c = collections.Counter()
-
-    def visit(jaxpr):
-        for eqn in jaxpr.eqns:
-            c[eqn.primitive.name] += 1
-            if eqn.primitive.name == "pallas_call":
-                continue
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if isinstance(sub, jcore.ClosedJaxpr):
-                        visit(sub.jaxpr)
-                    elif isinstance(sub, jcore.Jaxpr):
-                        visit(sub)
-
-    visit(closed.jaxpr)
-    return c
+    return jaxpr_audit.count_prims(closed)
 
 
 def test_resident_jaxpr_has_no_per_sweep_copies():
